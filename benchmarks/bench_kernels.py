@@ -1,0 +1,40 @@
+"""Microbenchmarks of the Pallas kernel ref paths + packing arithmetic:
+bitserial HBM-byte reduction (the serving payoff) and kernel-vs-ref
+timing on CPU (interpret mode timing is NOT a TPU number — the derived
+column carries the byte ratios that ARE hardware-invariant)."""
+import jax
+import jax.numpy as jnp
+
+from repro.core.packing import pack_from_float
+from repro.kernels import ops
+
+from .common import emit, time_call
+
+
+def main():
+    K, N, M = 2048, 2048, 64
+    w = jax.random.normal(jax.random.PRNGKey(0), (K, N)) * 0.1
+    x = jax.random.normal(jax.random.PRNGKey(1), (M, K), jnp.float32)
+    bf16_bytes = K * N * 2
+    for n_bits in (2, 4, 8):
+        pw = pack_from_float(w, n_bits)
+        us, _ = time_call(lambda: ops.bitserial_matmul(x, pw, use_pallas=False))
+        emit(
+            f"kernels/bitserial_{n_bits}b", us,
+            f"hbm_bytes={pw.hbm_bytes()};bf16_bytes={bf16_bytes};"
+            f"byte_ratio={pw.hbm_bytes()/bf16_bytes:.3f}",
+        )
+    us, _ = time_call(lambda: x @ w)
+    emit("kernels/dense_matmul_f32", us, f"hbm_bytes={K*N*4}")
+
+    q = jax.random.normal(jax.random.PRNGKey(2), (8, 1024, 64), jnp.float32)
+    us, _ = time_call(lambda: ops.flash_attention(q, q, q, causal=True, use_pallas=False))
+    emit("kernels/flash_attention_ref", us, "oracle_path")
+
+    planes = jax.random.normal(jax.random.PRNGKey(3), (16, 65536))
+    us, _ = time_call(lambda: ops.bgl_sumsq(planes, use_pallas=False))
+    emit("kernels/bgl_sumsq_ref", us, "oracle_path")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,91 @@
+"""Shared benchmark harness utilities.
+
+Every benchmark prints ``name,us_per_call,derived`` CSV rows (harness
+contract) — `derived` carries the experiment's scientific result
+(compression rate, accuracy, scheme, ...) as a compact string.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import reduced_config
+from repro.core import BSQConfig, extract_scheme
+from repro.data import MarkovLM
+from repro.optim import SGDM, step_decay
+from repro.train.step import (
+    init_bsq_state,
+    make_bsq_train_step,
+    make_requant_step,
+    state_reps,
+)
+
+ROWS = []
+
+
+def emit(name: str, us_per_call: float, derived: str):
+    row = f"{name},{us_per_call:.1f},{derived}"
+    ROWS.append(row)
+    print(row, flush=True)
+
+
+def time_call(fn, *args, iters: int = 3, warmup: int = 1):
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6, out
+
+
+def run_bsq_experiment(
+    alpha: float,
+    *,
+    arch: str = "granite-3-2b",
+    steps: int = 120,
+    requant_interval: int = 30,
+    reweigh: bool = True,
+    lr: float = 0.5,
+    seed: int = 0,
+    batch: int = 8,
+    seq: int = 32,
+):
+    """One BSQ run on the learnable Markov task; returns (scheme, ce, eval_ce, us/step)."""
+    import dataclasses
+
+    # vocab small enough that ~30k training tokens cover the bigram table:
+    # CE deltas between alphas are then meaningful (floor ~0.95 nats).
+    cfg = dataclasses.replace(reduced_config(arch), vocab_size=64)
+    bsq_cfg = BSQConfig(n_init=8, alpha=alpha, reweigh=reweigh, mode="static",
+                        compute_dtype=jnp.float32)
+    opt = SGDM()
+    state, ctx = init_bsq_state(jax.random.PRNGKey(seed), cfg, bsq_cfg, opt)
+    step = jax.jit(make_bsq_train_step(ctx, opt, step_decay(lr, [int(steps * 0.7)]),
+                                       decouple_reg_clip=True))
+    requant = jax.jit(make_requant_step(ctx))
+    task = MarkovLM(vocab=cfg.vocab_size, seed=7)
+    rng = np.random.default_rng(seed)
+    t0 = time.perf_counter()
+    for i in range(steps):
+        b = task.batch(rng, batch, seq)
+        state, m = step(state, {k: jnp.asarray(v) for k, v in b.items()})
+        if (i + 1) % requant_interval == 0:
+            state = requant(state)
+    jax.block_until_ready(m["total"])
+    us = (time.perf_counter() - t0) / steps * 1e6
+    state = requant(state)
+    scheme = extract_scheme(state_reps(state, ctx))
+    # held-out eval
+    from repro.core.bsq import merge_params, reconstruct
+    from repro.models import loss_fn
+
+    reps = state_reps(state, ctx)
+    params = merge_params(ctx.template, reconstruct(reps, bsq_cfg),
+                          state["trainable"]["float"])
+    eval_b = task.batch(np.random.default_rng(999), 16, seq)
+    eval_ce = float(loss_fn(params, {k: jnp.asarray(v) for k, v in eval_b.items()}, cfg)[1]["ce"])
+    return scheme, float(m["ce"]), eval_ce, us, (state, ctx)

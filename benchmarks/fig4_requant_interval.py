@@ -1,0 +1,19 @@
+"""Paper Fig. 4 / App. B.1 (C5): re-quantisation interval choice — too
+frequent destabilises, none forfeits precision adjustment."""
+from .common import emit, run_bsq_experiment
+
+
+def main():
+    for interval in (5, 15, 30, 10_000):  # 10_000 => never during training
+        scheme, ce, eval_ce, us, _ = run_bsq_experiment(
+            0.1, requant_interval=interval, steps=120)
+        name = "never" if interval == 10_000 else str(interval)
+        emit(
+            f"fig4/interval_{name}", us,
+            f"bits_per_para={scheme.bits_per_param:.2f};comp={scheme.compression:.2f}x;"
+            f"eval_ce={eval_ce:.3f}",
+        )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,36 @@
+"""Benchmark harness: one module per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV (plus a header)."""
+import argparse
+import importlib
+import sys
+import traceback
+
+SUITES = [
+    "table1_tradeoff",   # paper Table 1/4/5: alpha sweep + scratch baseline
+    "fig2_reweighing",   # paper Fig. 2/5/6: reweighing ablation
+    "fig4_requant_interval",  # paper Fig. 4: requant interval
+    "table3_lm_bsq",     # paper Tables 2/3 analogue at LM scale
+    "bench_kernels",     # kernel/packing microbenchmarks
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None, help="comma-separated suite names")
+    args = ap.parse_args()
+    suites = args.only.split(",") if args.only else SUITES
+    print("name,us_per_call,derived")
+    failed = []
+    for s in suites:
+        try:
+            importlib.import_module(f"benchmarks.{s}").main()
+        except Exception:
+            failed.append(s)
+            traceback.print_exc()
+    if failed:
+        print(f"FAILED suites: {failed}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

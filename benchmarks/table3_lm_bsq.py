@@ -1,0 +1,27 @@
+"""Tables 2/3 analogue at LM scale: BSQ schemes across architecture
+families (dense GQA / MoE / SSM) on the reduced configs — per-family
+compression and the layer-wise precision profile."""
+from .common import emit, run_bsq_experiment
+
+
+# alpha must be tuned per architecture family (the paper tunes per model
+# too): mamba2's recurrence-adjacent projections collapse to 0 bits under
+# the alpha that suits attention archs.
+ALPHAS = {"mamba2-130m": 0.02}
+
+
+def main():
+    for arch in ("granite-3-2b", "qwen2-moe-a2.7b", "mamba2-130m", "gemma3-12b"):
+        scheme, ce, eval_ce, us, _ = run_bsq_experiment(
+            ALPHAS.get(arch, 0.1), arch=arch, steps=80, requant_interval=20)
+        top = sorted(scheme.layer_bits().items(), key=lambda kv: kv[1])
+        lo = ";".join(f"{k.split('/')[-1]}={v:.1f}" for k, v in top[:3])
+        emit(
+            f"table3/{arch}", us,
+            f"bits_per_para={scheme.bits_per_param:.2f};comp={scheme.compression:.2f}x;"
+            f"eval_ce={eval_ce:.3f};lowest_bits=[{lo}]",
+        )
+
+
+if __name__ == "__main__":
+    main()

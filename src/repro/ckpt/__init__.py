@@ -1,0 +1,1 @@
+from .checkpoint import available_steps, prune_old, restore, restore_latest, save  # noqa: F401

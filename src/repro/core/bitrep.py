@@ -1,0 +1,181 @@
+"""Bit-plane representation of weight tensors (paper Eq. 2).
+
+A float tensor ``W`` is factored as::
+
+    W = s * Round[ sum_b (Wp^(b) - Wn^(b)) 2^b ] / (2^n - 1)
+
+where ``Wp^(b)``/``Wn^(b)`` are the b-th bit-planes of the positive /
+negative magnitudes and ``s`` is a per-group scale.  Plane tensors carry
+the bit axis FIRST: ``planes.shape == (n_bits, *w.shape)``.
+
+Groups: the paper uses layer-wise groups; we generalise to "group axes"
+of the weight tensor (e.g. the leading layer axis of a scan-stacked
+``(L, d_in, d_out)`` kernel, or ``(L, E)`` for per-expert groups).  The
+scale has shape ``group_shape`` and broadcasts over the remaining axes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _group_broadcast_shape(w_shape: Tuple[int, ...], group_axes: Tuple[int, ...]) -> Tuple[int, ...]:
+    """Shape that broadcasts a per-group quantity against ``w_shape``."""
+    return tuple(w_shape[i] if i in group_axes else 1 for i in range(len(w_shape)))
+
+
+def _reduce_axes(w_ndim: int, group_axes: Tuple[int, ...]) -> Tuple[int, ...]:
+    return tuple(i for i in range(w_ndim) if i not in group_axes)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class BitRep:
+    """Trainable bit representation of one (possibly stacked) weight tensor.
+
+    Attributes:
+      wp / wn: ``(n_bits, *w_shape)`` float planes, constrained to [0, 2].
+      scale:   per-group scale, shape broadcastable to ``w_shape``.
+      mask:    ``(n_bits, *group_bcast_shape)`` {0,1} active-plane mask
+               (static-mode precision bookkeeping; all-ones initially).
+      n_denom: static int — the ``n`` in the ``1/(2^n - 1)`` denominator.
+               Fixed in static mode; updated on dynamic requantisation.
+      group_axes: static — axes of ``w_shape`` that index groups.
+    """
+
+    wp: jax.Array
+    wn: jax.Array
+    scale: jax.Array
+    mask: jax.Array
+    n_denom: int = dataclasses.field(metadata=dict(static=True))
+    group_axes: Tuple[int, ...] = dataclasses.field(metadata=dict(static=True))
+
+    @property
+    def n_bits(self) -> int:
+        return self.wp.shape[0]
+
+    @property
+    def w_shape(self) -> Tuple[int, ...]:
+        return self.wp.shape[1:]
+
+    def trainable(self):
+        """The leaves the optimiser should update."""
+        return {"wp": self.wp, "wn": self.wn, "scale": self.scale}
+
+
+def extract_scale(w: jax.Array, group_axes: Sequence[int]) -> jax.Array:
+    """Per-group dynamic range ``s = max |w|`` (paper §3.1), broadcastable."""
+    group_axes = tuple(group_axes)
+    red = _reduce_axes(w.ndim, group_axes)
+    s = jnp.max(jnp.abs(w), axis=red, keepdims=True)
+    # Guard all-zero groups: scale 1 keeps the representation well-defined.
+    return jnp.where(s == 0, jnp.ones_like(s), s)
+
+
+def int_to_planes(q: jax.Array, n_bits: int, dtype=jnp.float32) -> jax.Array:
+    """Decompose a non-negative integer tensor into ``(n_bits, *shape)`` {0,1} planes."""
+    q = q.astype(jnp.int32)
+    shifts = jnp.arange(n_bits, dtype=jnp.int32).reshape((n_bits,) + (1,) * q.ndim)
+    return ((q[None] >> shifts) & 1).astype(dtype)
+
+
+def planes_to_int(planes: jax.Array) -> jax.Array:
+    """Exact inverse of :func:`int_to_planes` for binary planes."""
+    n_bits = planes.shape[0]
+    pow2 = (2 ** jnp.arange(n_bits, dtype=jnp.int32)).reshape((n_bits,) + (1,) * (planes.ndim - 1))
+    return jnp.sum(jnp.round(planes).astype(jnp.int32) * pow2, axis=0)
+
+
+def accumulate_planes(planes: jax.Array, mask: jax.Array | None = None) -> jax.Array:
+    """``sum_b planes[b] * 2^b`` for continuous planes (no rounding)."""
+    n_bits = planes.shape[0]
+    pow2 = (2.0 ** jnp.arange(n_bits, dtype=planes.dtype)).reshape(
+        (n_bits,) + (1,) * (planes.ndim - 1)
+    )
+    if mask is not None:
+        planes = planes * mask
+    return jnp.sum(planes * pow2, axis=0)
+
+
+def decompose(
+    w: jax.Array,
+    n_bits: int,
+    group_axes: Sequence[int] = (),
+    n_max: int | None = None,
+    dtype=jnp.float32,
+) -> BitRep:
+    """Convert a float tensor to its bit representation (paper Fig. 1a).
+
+    Pipeline: scale extraction -> |.| quantisation to ``n_bits`` levels ->
+    binary decomposition, with the sign split into Wp/Wn.  ``n_max``
+    (default ``n_bits + 1``) planes are allocated so the precision-
+    adjustment step has one bit of MSB headroom (paper §3.3).
+    """
+    group_axes = tuple(group_axes)
+    if n_max is None:
+        n_max = n_bits + 1
+    w = w.astype(dtype)
+    s = extract_scale(w, group_axes)
+    ws = w / s
+    levels = 2**n_bits - 1
+    q = jnp.round(jnp.abs(ws) * levels).astype(jnp.int32)  # in [0, levels]
+    planes = int_to_planes(q, n_max, dtype=dtype)
+    pos = (w >= 0).astype(dtype)
+    wp = planes * pos[None]
+    wn = planes * (1.0 - pos)[None]
+    gshape = _group_broadcast_shape(w.shape, group_axes)
+    mask = jnp.ones((n_max,) + gshape, dtype=dtype)
+    # Headroom planes above n_bits start inactive.
+    if n_max > n_bits:
+        mask = mask.at[n_bits:].set(0.0)
+    return BitRep(wp=wp, wn=wn, scale=s, mask=mask, n_denom=n_bits, group_axes=group_axes)
+
+
+def reconstruct_exact(rep: BitRep) -> jax.Array:
+    """Exact float weights from *binary* planes (no STE): ``s * q / (2^n - 1)``."""
+    qp = planes_to_int(rep.wp * rep.mask.astype(rep.wp.dtype))
+    qn = planes_to_int(rep.wn * rep.mask.astype(rep.wn.dtype))
+    q = (qp - qn).astype(rep.scale.dtype)
+    return rep.scale * q / (2.0**rep.n_denom - 1.0)
+
+
+def effective_bits(rep: BitRep) -> jax.Array:
+    """Active-precision per group from the mask: ``msb_idx - lsb_idx + 1``.
+
+    Returns an integer array of shape ``group_shape`` (0 for all-masked
+    groups).  Interior all-zero planes still count (the paper only strips
+    outer planes).
+    """
+    m = rep.mask  # (nb, *gbcast)
+    nb = m.shape[0]
+    idx = jnp.arange(nb).reshape((nb,) + (1,) * (m.ndim - 1))
+    active = m > 0
+    any_active = jnp.any(active, axis=0)
+    msb = jnp.max(jnp.where(active, idx, -1), axis=0)
+    lsb = jnp.min(jnp.where(active, idx, nb), axis=0)
+    bits = jnp.where(any_active, msb - lsb + 1, 0)
+    return bits
+
+
+def numel_per_group(rep: BitRep) -> int:
+    """Weight elements represented by each group (python int; static)."""
+    n = 1
+    for i, d in enumerate(rep.w_shape):
+        if i not in rep.group_axes:
+            n *= d
+    return n
+
+
+def num_groups(rep: BitRep) -> int:
+    n = 1
+    for i in rep.group_axes:
+        n *= rep.w_shape[i]
+    return n
+
+
+def total_numel(rep: BitRep) -> int:
+    return int(np.prod(rep.w_shape)) if rep.w_shape else 1

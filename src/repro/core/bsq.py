@@ -1,0 +1,204 @@
+"""End-to-end BSQ API: attach bit representations to a model's params.
+
+Usage pattern (what `train/step.py` and the examples do)::
+
+    qp, fp = partition_params(params, predicate)          # split pytree
+    reps   = init_bitreps(qp, BSQConfig(n_init=8), group_axes_fn)
+    ...
+    w      = reconstruct(reps)                            # STE forward, trainable
+    loss   = task_loss(merge_params(w, fp), batch) \
+             + cfg.alpha * memory_reweighed_bgl(reps, total)
+    ...
+    reps   = requantize_tree(reps, mode="static")         # every K steps
+    scheme = scheme_from_reps(reps)                       # final scheme
+    packed = export_packed(reps)                          # serving artefact
+
+`reps` is a flat dict name -> BitRep; names are "/"-joined pytree paths so
+the scheme tables read like the paper's per-layer charts.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import packing
+from .bitrep import BitRep, decompose, total_numel
+from .regularizer import memory_reweighed_bgl
+from .requant import requantize_dynamic, requantize_static
+from .scheme import QuantScheme, scheme_from_reps
+from .ste import bitrep_forward
+
+
+@dataclasses.dataclass(frozen=True)
+class BSQConfig:
+    n_init: int = 8  # initial precision (paper: 8 for CIFAR, 6/8 for ImageNet)
+    n_max: Optional[int] = None  # allocated planes; default n_init + 1 (MSB headroom)
+    alpha: float = 5e-3  # regularisation strength — THE hyperparameter
+    reweigh: bool = True  # memory-aware reweighing (Eq. 5); False = Fig. 2 ablation
+    mode: str = "static"  # "static" (mask, SPMD) | "dynamic" (paper resize)
+    trainable_scale: bool = True
+    compute_dtype: jnp.dtype = jnp.bfloat16  # dtype of reconstructed weights
+
+    @property
+    def planes(self) -> int:
+        return self.n_max if self.n_max is not None else self.n_init + 1
+
+
+# --------------------------------------------------------------------------
+# Param-tree partitioning
+# --------------------------------------------------------------------------
+
+
+def default_quant_predicate(path: str, x) -> bool:
+    """Quantise matmul-like weights; keep norms/biases/scalars float.
+
+    Matches the paper keeping BatchNorm float and our DESIGN §5 table
+    (norm scales, RoPE, PACT alphas, SSM recurrence scalars stay float).
+    """
+    if x.ndim < 2:
+        return False
+    name = path.lower()
+    banned = ("norm", "rope", "pact", "a_log", "dt_bias", "lambda", "pos_emb",
+              # SSM/LRU recurrence-adjacent params stay float (DESIGN §5) —
+              # note scan-stacking makes these 1-D params 2-D, so the ndim
+              # check alone doesn't exclude them:
+              "conv_w", "conv_b", "d_skip", "bias", "router")
+    return not any(b in name for b in banned)
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def partition_params(
+    params, predicate: Callable[[str, jax.Array], bool] = default_quant_predicate
+) -> Tuple[Dict[str, jax.Array], Dict[str, jax.Array]]:
+    """Split a pytree into (to-quantise, keep-float) flat dicts keyed by path."""
+    flat = jax.tree_util.tree_flatten_with_path(params)[0]
+    qp, fp = {}, {}
+    for path, leaf in flat:
+        name = _path_str(path)
+        (qp if predicate(name, leaf) else fp)[name] = leaf
+    return qp, fp
+
+
+def merge_params(template, quantized: Dict[str, jax.Array], floats: Dict[str, jax.Array]):
+    """Rebuild the original pytree structure from the two flat dicts."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(template)
+    leaves = []
+    for path, _ in flat:
+        name = _path_str(path)
+        leaves.append(quantized[name] if name in quantized else floats[name])
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+# --------------------------------------------------------------------------
+# BSQ over a dict of tensors
+# --------------------------------------------------------------------------
+
+
+def default_group_axes(name: str, w: jax.Array) -> Tuple[int, ...]:
+    """Layer-wise groups; for scan-stacked (L, ...) tensors the leading
+    axis indexes layers, and for stacked MoE experts (L, E, ...) both
+    leading axes — finer per-expert granularity the paper allows (§3.2).
+    Heuristic: group over all leading axes until <=2 trailing matmul dims.
+    """
+    if w.ndim <= 2:
+        return ()
+    return tuple(range(w.ndim - 2))
+
+
+def init_bitreps(
+    qparams: Dict[str, jax.Array],
+    cfg: BSQConfig,
+    group_axes_fn: Callable[[str, jax.Array], Tuple[int, ...]] = default_group_axes,
+) -> Dict[str, BitRep]:
+    reps = {}
+    for name, w in qparams.items():
+        ga = group_axes_fn(name, w)
+        n_max = cfg.planes if cfg.mode == "static" else cfg.n_init
+        reps[name] = decompose(w, cfg.n_init, group_axes=ga, n_max=n_max)
+    return reps
+
+
+def reconstruct(reps: Dict[str, BitRep], cfg: BSQConfig) -> Dict[str, jax.Array]:
+    """STE forward for every rep -> float weights dict (paper Eq. 3)."""
+    out = {}
+    for name, r in reps.items():
+        scale = r.scale if cfg.trainable_scale else jax.lax.stop_gradient(r.scale)
+        w = bitrep_forward(r.wp, r.wn, scale, r.mask, r.n_denom)
+        out[name] = w.astype(cfg.compute_dtype)
+    return out
+
+
+def regularizer(reps: Dict[str, BitRep], cfg: BSQConfig, total_params: Optional[int] = None):
+    return memory_reweighed_bgl(reps, total_params=total_params, reweigh=cfg.reweigh)
+
+
+def requantize_tree(reps: Dict[str, BitRep], mode: str = "static") -> Dict[str, BitRep]:
+    fn = requantize_static if mode == "static" else requantize_dynamic
+    return {k: fn(r) for k, r in reps.items()}
+
+
+def extract_scheme(reps: Dict[str, BitRep], float_params: int = 0) -> QuantScheme:
+    return scheme_from_reps(reps, float_params=float_params)
+
+
+def total_quantized_params(reps: Dict[str, BitRep]) -> int:
+    return sum(total_numel(r) for r in reps.values())
+
+
+# --------------------------------------------------------------------------
+# Export for serving
+# --------------------------------------------------------------------------
+
+
+def export_packed(reps: Dict[str, BitRep]) -> Dict[str, packing.PackedWeight]:
+    """Freeze each rep to a PackedWeight.
+
+    Per-tensor the packed layout uses the whole-tensor [lsb, msb] window
+    (ragged per-group layouts are honoured at the *accounting* level; a
+    production exporter would split tensors per group).  The code is
+    shifted by ``lsb`` and the scale updated exactly as in the dynamic
+    precision adjustment, so the dequantised values are bit-exact.
+    """
+    import numpy as np
+
+    from .bitrep import planes_to_int
+
+    out = {}
+    for name, r in reps.items():
+        r2 = requantize_static(r)  # ensure binary planes / fresh mask
+        m = r2.mask.astype(r2.wp.dtype)
+        q = np.asarray(
+            planes_to_int(r2.wp * m) - planes_to_int(r2.wn * m)
+        )  # codes under denom 2^n_denom - 1
+        mag = np.abs(q)
+        nz = [b for b in range(r2.n_bits) if ((mag >> b) & 1).any()]
+        if not nz:
+            lsb, msb = 0, 0
+        else:
+            lsb, msb = min(nz), max(nz)
+        n_bits = msb - lsb + 1
+        q_shift = ((mag >> lsb) * np.sign(q)).astype(np.int32)
+        # scale': dequant uses  scale' * q' / (2^{n'} - 1)  ==  scale * q / (2^n - 1)
+        scale = (
+            float(jnp.mean(r2.scale))
+            * (2.0**lsb)
+            * (2.0**n_bits - 1.0)
+            / (2.0**r2.n_denom - 1.0)
+        )
+        w2 = jnp.asarray(q_shift).reshape(-1, q.shape[-1])
+        out[name] = packing.pack_quantized(w2, jnp.float32(scale), n_bits)
+    return out

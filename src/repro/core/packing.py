@@ -1,0 +1,169 @@
+"""Sign+magnitude bit-plane packing for serving.
+
+A BSQ-quantised layer with per-layer precision ``n`` is exported as:
+
+* ``planes``: ``(n, K//8, N) uint8`` — magnitude bit-planes of the
+  integer code ``q = |Round[(2^n-1) W/s]|``, packed 8 codes/byte along
+  the *reduction* (K) axis so the bitserial-matmul kernel can unpack a
+  contiguous VMEM tile with shifts.
+* ``sign``:  ``(K//8, N) uint8`` — packed sign bits (1 = negative).
+* ``scale``: per-group float — ``W ~= (1-2*sign) * scale * q / (2^n-1)``.
+
+HBM bytes per weight element: ``(n+1)/8`` vs 2 for bf16 — this is where
+the paper's compression becomes decode-time memory bandwidth on TPU.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class PackedWeight:
+    planes: jax.Array  # (n_bits, K//8, N) uint8
+    sign: jax.Array  # (K//8, N) uint8
+    scale: jax.Array  # broadcastable to (K, N) — typically scalar or (1, N)
+    n_bits: int = dataclasses.field(metadata=dict(static=True))
+    k: int = dataclasses.field(metadata=dict(static=True))  # unpadded K
+
+    @property
+    def shape(self) -> Tuple[int, int]:
+        return (self.k, self.planes.shape[-1])
+
+    def hbm_bytes(self) -> int:
+        return int(self.planes.size + self.sign.size + self.scale.size * 4)
+
+
+def _pack_bits_axis0_groups_of_8(bits: jax.Array) -> jax.Array:
+    """Pack a {0,1} uint8 array of shape (K, N) to (K//8, N) bytes (K % 8 == 0)."""
+    k, n = bits.shape
+    b = bits.reshape(k // 8, 8, n).astype(jnp.uint8)
+    shifts = jnp.arange(8, dtype=jnp.uint8).reshape(1, 8, 1)
+    return jnp.sum(b << shifts, axis=1).astype(jnp.uint8)
+
+
+def unpack_bits_axis0(packed: jax.Array, k: int) -> jax.Array:
+    """Inverse of the packer: (K//8, N) bytes -> (K, N) {0,1} uint8."""
+    kb, n = packed.shape
+    shifts = jnp.arange(8, dtype=jnp.uint8).reshape(1, 8, 1)
+    bits = (packed[:, None, :] >> shifts) & 1
+    return bits.reshape(kb * 8, n)[:k]
+
+
+def pack_quantized(q: jax.Array, scale: jax.Array, n_bits: int) -> PackedWeight:
+    """Pack a signed integer code matrix ``q`` (K, N), |q| < 2^n_bits."""
+    if q.ndim != 2:
+        raise ValueError(f"pack_quantized expects a 2D (K, N) matrix, got {q.shape}")
+    k, n = q.shape
+    pad = (-k) % 8
+    if pad:
+        q = jnp.pad(q, ((0, pad), (0, 0)))
+    mag = jnp.abs(q).astype(jnp.uint32)
+    planes = []
+    for b in range(max(n_bits, 1)):
+        planes.append(_pack_bits_axis0_groups_of_8(((mag >> b) & 1).astype(jnp.uint8)))
+    sign = _pack_bits_axis0_groups_of_8((q < 0).astype(jnp.uint8))
+    return PackedWeight(
+        planes=jnp.stack(planes), sign=sign, scale=jnp.asarray(scale), n_bits=max(n_bits, 1), k=k
+    )
+
+
+def unpack_to_float(pw: PackedWeight, dtype=jnp.float32) -> jax.Array:
+    """Dequantise back to float (the ref path / oracle for the kernel)."""
+    k = pw.k
+    mag = sum(
+        unpack_bits_axis0(pw.planes[b], k).astype(jnp.int32) * (2**b) for b in range(pw.n_bits)
+    )
+    sgn = 1 - 2 * unpack_bits_axis0(pw.sign, k).astype(jnp.int32)
+    denom = 2.0**pw.n_bits - 1.0
+    return (sgn * mag).astype(dtype) * (pw.scale.astype(dtype) / denom)
+
+
+def pack_from_float(w: jax.Array, n_bits: int) -> PackedWeight:
+    """One-shot float -> packed path (per-tensor scale)."""
+    s = jnp.max(jnp.abs(w))
+    s = jnp.where(s == 0, 1.0, s)
+    levels = 2**n_bits - 1
+    q = jnp.round(w / s * levels).astype(jnp.int32)
+    return pack_quantized(q, s, n_bits)
+
+
+def packing_error(w: jax.Array, n_bits: int) -> float:
+    pw = pack_from_float(w, n_bits)
+    return float(jnp.max(jnp.abs(unpack_to_float(pw) - w)))
+
+
+def expected_max_error(scale: float, n_bits: int) -> float:
+    """Half a quantisation step — the round-trip error bound."""
+    return 0.5 * float(scale) / (2.0**n_bits - 1.0)
+
+
+# ---------------------------------------------------------------------------
+# Stacked + abstract packing (serving transform / dry-run specs)
+# ---------------------------------------------------------------------------
+
+
+def pack_stacked_from_float(w: jax.Array, n_bits: int) -> PackedWeight:
+    """Pack a stacked weight (L..., K, N): per-slice scale + codes, shared
+    n_bits, fields carry the leading dims so lax.scan can slice them."""
+    if w.ndim == 2:
+        return pack_from_float(w, n_bits)
+    lead = w.shape[:-2]
+    K, N = w.shape[-2:]
+    flat = w.reshape((-1, K, N))
+    packs = [pack_from_float(flat[i], n_bits) for i in range(flat.shape[0])]
+    planes = jnp.stack([p.planes for p in packs]).reshape(lead + packs[0].planes.shape)
+    sign = jnp.stack([p.sign for p in packs]).reshape(lead + packs[0].sign.shape)
+    scale = jnp.stack([p.scale for p in packs]).reshape(lead)
+    return PackedWeight(planes=planes, sign=sign, scale=scale, n_bits=n_bits, k=K)
+
+
+def abstract_packed(shape, n_bits: int) -> PackedWeight:
+    """ShapeDtypeStruct twin of pack_stacked_from_float (dry-run, no data)."""
+    lead, (K, N) = tuple(shape[:-2]), shape[-2:]
+    K8 = (K + 7) // 8
+    return PackedWeight(
+        planes=jax.ShapeDtypeStruct(lead + (n_bits, K8, N), jnp.uint8),
+        sign=jax.ShapeDtypeStruct(lead + (K8, N), jnp.uint8),
+        scale=jax.ShapeDtypeStruct(lead, jnp.float32),
+        n_bits=n_bits,
+        k=K,
+    )
+
+
+_PACKABLE_SUFFIXES = ("wq", "wk", "wv", "wo", "w_gate", "w_up", "w_down", "lm_head")
+
+
+def packable(name: str, shape) -> bool:
+    leaf = name.lower().rsplit("/", 1)[-1]
+    return (
+        leaf in _PACKABLE_SUFFIXES
+        and len(shape) >= 2
+        and shape[-2] % 8 == 0
+        and min(shape[-2:]) >= 64
+        and "/moe/" not in name.lower()  # expert einsum path stays dense
+    )
+
+
+def pack_model_params(params, n_bits: int, abstract: bool = False):
+    """Replace packable dense weights in a model param tree by
+    PackedWeights (serving transform; `abstract` for dry-run specs)."""
+    flat = jax.tree_util.tree_flatten_with_path(params)[0]
+    treedef = jax.tree_util.tree_structure(params)
+    leaves = []
+    for path, leaf in flat:
+        name = "/".join(str(getattr(q, "key", getattr(q, "idx", q))) for q in path)
+        if packable(name, leaf.shape):
+            leaves.append(
+                abstract_packed(leaf.shape, n_bits)
+                if abstract
+                else pack_stacked_from_float(leaf, n_bits)
+            )
+        else:
+            leaves.append(leaf)
+    return jax.tree_util.tree_unflatten(treedef, leaves)

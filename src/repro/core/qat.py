@@ -1,0 +1,59 @@
+"""Fixed-scheme quantisation-aware training (paper §3.3 finetune phase).
+
+After BSQ freezes the mixed-precision scheme, the paper finetunes with
+DoReFa-Net under that scheme; Table 1 also trains the same scheme *from
+scratch* as a baseline (which BSQ beats).  Both are provided here, as a
+params-transform that can wrap any model's loss function.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict
+
+import jax
+import numpy as np
+
+from .scheme import QuantScheme
+from .ste import dorefa_weight
+
+
+def _bits_for(scheme: QuantScheme, name: str) -> np.ndarray:
+    return scheme.bits[name]
+
+
+def apply_scheme_dorefa(
+    qparams: Dict[str, jax.Array], scheme: QuantScheme
+) -> Dict[str, jax.Array]:
+    """Quantise each tensor to its scheme precision with the DoReFa STE.
+
+    Per-group precision on stacked tensors is honoured by quantising each
+    leading-group slice at its own bit width (unrolled: group counts are
+    small — L or L*E — and this path is used on small/CPU models; the
+    SPMD path trains with BSQ's own bit representation instead).
+    """
+    out = {}
+    for name, w in qparams.items():
+        bits = _bits_for(scheme, name)
+        if bits.ndim == 0:
+            out[name] = dorefa_weight(w, int(bits))
+            continue
+        flat_bits = bits.reshape(-1)
+        gshape = bits.shape
+        lead = int(np.prod(gshape))
+        w2 = w.reshape((lead,) + w.shape[len(gshape):])
+        slices = [dorefa_weight(w2[i], int(flat_bits[i])) for i in range(lead)]
+        out[name] = jax.numpy.stack(slices).reshape(w.shape)
+    return out
+
+
+def finetune_loss_fn(
+    task_loss: Callable[..., jax.Array],
+    scheme: QuantScheme,
+    merge: Callable[[Dict[str, jax.Array], Dict[str, jax.Array]], object],
+) -> Callable[..., jax.Array]:
+    """Wrap a task loss so quantised params go through the frozen scheme."""
+
+    def loss(qparams, fparams, *args, **kwargs):
+        wq = apply_scheme_dorefa(qparams, scheme)
+        return task_loss(merge(wq, fparams), *args, **kwargs)
+
+    return loss

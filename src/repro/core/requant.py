@@ -1,0 +1,144 @@
+"""Re-quantisation and precision adjustment (paper §3.3).
+
+Two modes:
+
+* ``requantize_static`` — jit/SPMD-friendly: plane tensors keep their
+  allocated ``n_max`` shape; precision is tracked by the {0,1} plane mask.
+  Re-binarises the continuous planes, recomputes the active [lsb, msb]
+  window per group.  Forward-equivalent to the paper's physical resize
+  (Eq. 6) because masked planes are exactly zero.
+
+* ``requantize_dynamic`` — paper-faithful: physically strips all-zero
+  MSB/LSB planes and rescales ``s' = s * 2^k_lsb * (2^{n'}-1)/(2^n-1)``
+  so the represented weights are *bit-exact* before/after (Eq. 6).
+
+Both re-split the re-quantised integer ``q' = Round[sum wp 2^b] -
+Round[sum wn 2^b]`` into fresh positive/negative binary planes, which is
+what lets signs flip and carries propagate between adjustments.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .bitrep import (
+    BitRep,
+    _group_broadcast_shape,
+    accumulate_planes,
+    int_to_planes,
+    planes_to_int,
+)
+
+
+def _requantized_int(rep: BitRep, clamp: bool = True) -> jax.Array:
+    """``q' = Round[sum_b wp_b 2^b - sum_b wn_b 2^b]`` over active planes.
+
+    Static mode clamps into the allocated-plane window (the documented
+    headroom cap — with the standard init mask the top plane's headroom
+    makes the clamp a no-op).  Dynamic mode re-decomposes into n+1 bits
+    instead (paper: "W_q' is converted to a (n+1)-bit binary number")."""
+    m = rep.mask.astype(rep.wp.dtype)
+    acc = accumulate_planes(rep.wp * m) - accumulate_planes(rep.wn * m)
+    if clamp:
+        nb = rep.n_bits
+        limit = 2.0**nb - 1.0
+        acc = jnp.clip(jnp.round(acc), -limit, limit)
+    return jnp.round(acc).astype(jnp.int32)
+
+
+def _split_sign(q: jax.Array, n_bits: int, dtype) -> Tuple[jax.Array, jax.Array]:
+    mag = jnp.abs(q)
+    planes = int_to_planes(mag, n_bits, dtype=dtype)
+    pos = (q > 0).astype(dtype)
+    neg = (q < 0).astype(dtype)
+    return planes * pos[None], planes * neg[None]
+
+
+def requantize_static(rep: BitRep) -> BitRep:
+    """Mask-mode re-quantisation + precision adjustment (jittable)."""
+    q = _requantized_int(rep)
+    wp, wn = _split_sign(q, rep.n_bits, rep.wp.dtype)
+
+    # Per-(bit, group) any-nonzero, broadcastable mask shape (nb, *gbcast).
+    red = tuple(i + 1 for i in range(len(rep.w_shape)) if i not in rep.group_axes)
+    nz = jnp.any((wp + wn) > 0, axis=red, keepdims=True)
+    nb = rep.n_bits
+    idx = jnp.arange(nb).reshape((nb,) + (1,) * (len(rep.mask.shape) - 1))
+    any_nz = jnp.any(nz, axis=0, keepdims=True)
+    msb = jnp.max(jnp.where(nz, idx, -1), axis=0, keepdims=True)
+    lsb = jnp.min(jnp.where(nz, idx, nb), axis=0, keepdims=True)
+    # Active window [lsb, msb]; interior all-zero planes stay active
+    # (the paper only strips *outer* planes).
+    new_mask = ((idx >= lsb) & (idx <= msb) & any_nz).astype(rep.mask.dtype)
+    return dataclasses.replace(rep, wp=wp, wn=wn, mask=new_mask)
+
+
+def requantize_dynamic(rep: BitRep) -> BitRep:
+    """Paper-faithful physical precision adjustment (host-side; concrete arrays).
+
+    Strips all-zero MSB planes (scale numerator shrinks via the
+    ``(2^{n'}-1)/(2^n-1)`` factor) and all-zero LSB planes (each removal
+    doubles the scale), then re-splits signs.  Returns a BitRep whose
+    plane count equals the new precision ``n'`` (>= 1; an all-zero group
+    set degenerates to a single zero plane so array shapes stay valid —
+    ``effective_bits`` still reports 0).
+    """
+    if rep.group_axes:
+        raise ValueError(
+            "requantize_dynamic physically resizes the plane axis, which must "
+            "be uniform across the tensor — it therefore only supports single-"
+            "group tensors (group_axes=()), i.e. one BitRep per layer, which "
+            "is the paper's setting. Use requantize_static for stacked groups."
+        )
+    q = np.asarray(_requantized_int(rep, clamp=False))
+    nb = rep.n_bits + 1  # paper: q' needs (n+1) bits
+    mag = np.abs(q)
+    bits = np.stack([(mag >> b) & 1 for b in range(nb)])  # (nb, *w_shape)
+    nz = bits.reshape(nb, -1).any(axis=1)  # per-plane any-nonzero
+    if not nz.any():
+        msb_keep, lsb_drop = 0, 0
+    else:
+        msb_keep = int(np.max(np.nonzero(nz)[0])) + 1  # planes [0, msb_keep)
+        lsb_drop = int(np.min(np.nonzero(nz)[0]))
+    n_new = max(msb_keep - lsb_drop, 1)
+    q_shift = (np.abs(q) >> lsb_drop) * np.sign(q)
+    q_shift = jnp.asarray(q_shift.astype(np.int32))
+    wp, wn = _split_sign(q_shift, n_new, rep.wp.dtype)
+    old_denom = 2.0**rep.n_denom - 1.0
+    new_denom = 2.0**n_new - 1.0
+    new_scale = rep.scale * (2.0**lsb_drop) * new_denom / old_denom
+    gshape = _group_broadcast_shape(rep.w_shape, rep.group_axes)
+    mask = jnp.ones((n_new,) + gshape, dtype=rep.mask.dtype)
+    return BitRep(
+        wp=wp, wn=wn, scale=new_scale, mask=mask, n_denom=n_new, group_axes=rep.group_axes
+    )
+
+
+def grow_headroom(rep: BitRep, n_extra: int = 1) -> BitRep:
+    """Append ``n_extra`` zero MSB planes (dynamic mode, before resuming
+    training) so carries have room — mirrors the paper's n -> n+1 window."""
+    pad = [(0, n_extra)] + [(0, 0)] * (rep.wp.ndim - 1)
+    wp = jnp.pad(rep.wp, pad)
+    wn = jnp.pad(rep.wn, pad)
+    mask = jnp.pad(rep.mask, [(0, n_extra)] + [(0, 0)] * (rep.mask.ndim - 1), constant_values=1.0)
+    return dataclasses.replace(rep, wp=wp, wn=wn, mask=mask)
+
+
+def forward_value(rep: BitRep) -> jax.Array:
+    """The ``s * W_q`` the forward STE sees (paper Eq. 3), no gradient."""
+    m = rep.mask.astype(rep.wp.dtype)
+    acc = accumulate_planes(rep.wp * m) - accumulate_planes(rep.wn * m)
+    return rep.scale * jnp.round(acc) / (2.0**rep.n_denom - 1.0)
+
+
+def verify_equivalence(before: BitRep, after: BitRep, atol: float = 1e-6) -> bool:
+    """Check Eq. 6: the forward-pass weights are identical across an
+    adjustment (the paper: "s*W_q ... remains unchanged before and after
+    the re-quantization and precision adjustment")."""
+    a = forward_value(before)
+    b = forward_value(after)
+    return bool(jnp.max(jnp.abs(a - b)) <= atol)

@@ -1,0 +1,112 @@
+"""Straight-through estimators and fixed-scheme quantisers.
+
+Implements paper Eq. 1 (DoReFa-style uniform quantisation STE), Eq. 3
+(bit-representation STE) and the activation quantisers of §3.3
+(ReLU6-uniform for >=4-bit activations, PACT below).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ste_round(x: jax.Array) -> jax.Array:
+    """round(x) in the forward pass, identity in the backward pass."""
+    return x + jax.lax.stop_gradient(jnp.round(x) - x)
+
+
+def ste_clip(x: jax.Array, lo, hi) -> jax.Array:
+    """clip in the forward pass, identity gradient inside AND outside.
+
+    (Plain STE used by DoReFa; for range projection of bit-planes we use
+    a hard post-step trim instead — see ``optim.project_bitplanes``.)
+    """
+    return x + jax.lax.stop_gradient(jnp.clip(x, lo, hi) - x)
+
+
+def uniform_quantize(x: jax.Array, k_bits: int) -> jax.Array:
+    """Quantise x in [0,1] to ``2^k - 1`` uniform levels with round-STE (Eq. 1)."""
+    levels = 2.0**k_bits - 1.0
+    return ste_round(x * levels) / levels
+
+
+def bitrep_forward(wp, wn, scale, mask, n_denom: int) -> jax.Array:
+    """Bit-representation STE forward (paper Eq. 3).
+
+    ``W_q = Round[sum_b (wp_b - wn_b) 2^b] / (2^n - 1)``; the backward
+    pass routes ``2^b/(2^n-1) * dL/dW_q`` to plane ``b`` automatically,
+    since ``sum_b . 2^b`` is linear and only the Round uses an STE.
+    Returns the reconstructed weight ``scale * W_q``.
+    """
+    nb = wp.shape[0]
+    pow2 = (2.0 ** jnp.arange(nb, dtype=wp.dtype)).reshape((nb,) + (1,) * (wp.ndim - 1))
+    diff = (wp - wn) * mask.astype(wp.dtype)
+    acc = jnp.sum(diff * pow2, axis=0)
+    q = ste_round(acc)
+    return scale * q / (2.0**n_denom - 1.0)
+
+
+# ---------------------------------------------------------------------------
+# DoReFa weight quantiser (used for the post-BSQ finetune phase, §3.3, and
+# the "train from scratch under the same scheme" baseline of Table 1).
+# ---------------------------------------------------------------------------
+
+
+def dorefa_weight(w: jax.Array, k_bits: int) -> jax.Array:
+    """DoReFa-Net k-bit weight quantiser (Zhou et al. 2016).
+
+    ``w_q = 2 * quantize_k( tanh(w) / (2 max|tanh(w)|) + 1/2 ) - 1``.
+    k_bits == 32 returns w unchanged; k_bits == 0 returns zeros (a layer
+    fully pruned by BSQ).
+    """
+    if k_bits >= 32:
+        return w
+    if k_bits == 0:
+        return jnp.zeros_like(w)
+    t = jnp.tanh(w)
+    t = t / (2.0 * jnp.max(jnp.abs(t)) + 1e-12) + 0.5
+    return 2.0 * uniform_quantize(t, k_bits) - 1.0
+
+
+def fixed_scheme_weight(w: jax.Array, k_bits: int, scale: jax.Array) -> jax.Array:
+    """Symmetric k-bit quantiser with a frozen scale (serving-style QAT)."""
+    if k_bits >= 32:
+        return w
+    if k_bits == 0:
+        return jnp.zeros_like(w)
+    levels = 2.0**k_bits - 1.0
+    ws = jnp.clip(w / scale, -1.0, 1.0)
+    return scale * ste_round(ws * levels) / levels
+
+
+# ---------------------------------------------------------------------------
+# Activation quantisers (paper §3.3 "Activation quantization").
+# ---------------------------------------------------------------------------
+
+
+def relu6_act_quantize(x: jax.Array, k_bits: int) -> jax.Array:
+    """ReLU6 + uniform quantisation, for activation precision >= 4 bits."""
+    if k_bits >= 32:
+        return jax.nn.relu(x)
+    y = jnp.clip(x, 0.0, 6.0) / 6.0
+    return uniform_quantize(y, k_bits) * 6.0
+
+
+def pact_act_quantize(x: jax.Array, alpha: jax.Array, k_bits: int) -> jax.Array:
+    """PACT (Choi et al. 2018): trainable clip value ``alpha``.
+
+    Forward: clip to [0, alpha], quantise uniformly.  Gradient flows to
+    ``alpha`` for x >= alpha (the clipped region) via the clip itself.
+    """
+    y = jnp.clip(x, 0.0, alpha)
+    if k_bits >= 32:
+        return y
+    yn = y / alpha
+    return uniform_quantize(yn, k_bits) * alpha
+
+
+def act_quantize(x: jax.Array, k_bits: int, pact_alpha: jax.Array | None = None) -> jax.Array:
+    """Paper policy: ReLU6-uniform for >=4-bit, PACT below."""
+    if k_bits >= 4 or pact_alpha is None:
+        return relu6_act_quantize(x, k_bits)
+    return pact_act_quantize(x, pact_alpha, k_bits)

@@ -1,0 +1,112 @@
+"""Input pipeline: per-host sharding, packing, background prefetch.
+
+Designed for multi-process SPMD: each host produces only its slice of
+the global batch (``host_slice``), forms globally-sharded arrays with
+``jax.make_array_from_process_local_data`` when running distributed, and
+prefetches batches on a background thread so the accelerator never waits
+on host-side sampling.  In this single-process container the same code
+paths run with process_count == 1.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Callable, Dict, Iterator, Optional
+
+import jax
+import numpy as np
+
+
+def host_slice(global_batch: int, process_index: int, process_count: int) -> slice:
+    """Contiguous per-host rows of the global batch."""
+    if global_batch % process_count:
+        raise ValueError(f"global_batch {global_batch} % hosts {process_count} != 0")
+    per = global_batch // process_count
+    return slice(process_index * per, (process_index + 1) * per)
+
+
+def pack_documents(docs, seq_len: int, pad_id: int = 0, eod_id: int = 1):
+    """Greedy sequence packing: concatenate docs, split into seq_len rows.
+
+    Returns (tokens, labels) with labels = next-token shifted, -1 at pads.
+    """
+    flat = []
+    for d in docs:
+        flat.extend(list(d))
+        flat.append(eod_id)
+    n_rows = max(1, len(flat) // (seq_len + 1))
+    used = flat[: n_rows * (seq_len + 1)]
+    arr = np.asarray(used, np.int32).reshape(n_rows, seq_len + 1)
+    return arr[:, :-1], arr[:, 1:].copy()
+
+
+class Prefetcher:
+    """Background-thread prefetch with bounded queue (depth 2 default)."""
+
+    def __init__(self, it: Iterator, depth: int = 2):
+        self._q: queue.Queue = queue.Queue(maxsize=depth)
+        self._err: Optional[BaseException] = None
+        self._done = False
+
+        def worker():
+            try:
+                for item in it:
+                    self._q.put(item)
+            except BaseException as e:  # surfaced on next()
+                self._err = e
+            finally:
+                self._q.put(_SENTINEL)
+
+        self._t = threading.Thread(target=worker, daemon=True)
+        self._t.start()
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        item = self._q.get()
+        if item is _SENTINEL:
+            if self._err is not None:
+                raise self._err
+            raise StopIteration
+        return item
+
+
+_SENTINEL = object()
+
+
+def sharded_lm_iterator(
+    task,
+    global_batch: int,
+    seq_len: int,
+    *,
+    seed: int = 0,
+    sharding=None,
+    prefetch: int = 2,
+) -> Iterator[Dict[str, jax.Array]]:
+    """Infinite iterator of LM batches, host-sharded and device-put.
+
+    ``task`` is any object with ``.batch(rng, batch, seq) -> dict``
+    (e.g. data.synthetic.MarkovLM).  With a NamedSharding, arrays are
+    formed as global arrays from per-process data.
+    """
+    pi, pc = jax.process_index(), jax.process_count()
+    sl = host_slice(global_batch, pi, pc)
+    local = sl.stop - sl.start
+
+    def gen():
+        step = 0
+        while True:
+            # distinct stream per (host, step): deterministic resume
+            rng = np.random.default_rng(np.random.SeedSequence([seed, pi, step]))
+            b = task.batch(rng, local, seq_len)
+            if sharding is not None and pc > 1:
+                b = {
+                    k: jax.make_array_from_process_local_data(sharding, v) for k, v in b.items()
+                }
+            elif sharding is not None:
+                b = {k: jax.device_put(v, sharding) for k, v in b.items()}
+            yield b
+            step += 1
+
+    return Prefetcher(gen(), depth=prefetch)

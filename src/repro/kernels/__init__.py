@@ -1,0 +1,3 @@
+"""Pallas TPU kernels for BSQ's compute hot spots (+ ops wrappers, ref oracles)."""
+from . import ops, ref  # noqa: F401
+from .ops import bgl_sumsq, bitserial_matmul, flash_attention  # noqa: F401

@@ -1,0 +1,109 @@
+"""Pallas TPU kernel: fused unpack -> dequantise -> MXU matmul over
+bit-plane-packed weights (the serving hot path of BSQ, DESIGN.md §3.2).
+
+Weights live in HBM as ``planes (n_bits, K/8, N) uint8`` + ``sign
+(K/8, N) uint8`` + scalar scale (sign-magnitude layout from
+core/packing.py).  Per (m, n, k) grid step the kernel:
+
+  1. DMAs an x tile (bm, bk) and the packed tiles (n_bits, bk/8, bn),
+     (bk/8, bn) into VMEM  — HBM traffic for weights is (n_bits+1)/16 of
+     a bf16 weight load, which is the whole point: decode-time matmuls
+     are HBM-bandwidth-bound, so wall time scales with the *mixed
+     precision* BSQ found;
+  2. unpacks bits with shifts (VPU), builds the bf16 weight tile
+     ``(1-2*sign) * sum_b bits_b 2^b`` — small VPU cost, MXU-aligned
+     (bk, bn multiples of 128 for lane, 8 for sublane);
+  3. accumulates ``x_tile @ w_tile`` into an f32 VMEM scratch, applying
+     ``1 / (2^n - 1)`` once at the final k step (the per-tensor scale is
+     a free fused multiply outside the kernel, see ops.py).
+
+Validated against ref.bitserial_matmul_ref in interpret mode (tests
+sweep shapes/dtypes/n_bits).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, planes_ref, sign_ref, out_ref, acc_ref, *, n_bits: int, nsteps_k: int,
+            out_dtype):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...]  # (bm, bk)
+    packed = planes_ref[...]  # (n_bits, bk/8, bn) uint8
+    sign = sign_ref[...]  # (bk/8, bn) uint8
+    bk8, bn = sign.shape
+
+    shifts = jnp.arange(8, dtype=jnp.uint8).reshape(1, 8, 1)
+
+    def unpack(p):  # (bk/8, bn) -> (bk, bn) {0,1} int8
+        bits = (p[:, None, :] >> shifts) & 1
+        return bits.reshape(bk8 * 8, bn)
+
+    mag = jnp.zeros((bk8 * 8, bn), jnp.float32)
+    for b in range(n_bits):
+        mag = mag + unpack(planes_ref[b]).astype(jnp.float32) * float(2**b)
+    sgn = 1.0 - 2.0 * unpack(sign).astype(jnp.float32)
+    w = (sgn * mag).astype(x.dtype)  # (bk, bn)
+
+    acc_ref[...] += jax.lax.dot(
+        x, w, preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == nsteps_k - 1)
+    def _finish():
+        denom = 2.0**n_bits - 1.0
+        out_ref[...] = (acc_ref[...] * (1.0 / denom)).astype(out_dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n_bits", "block_m", "block_n", "block_k", "interpret")
+)
+def bitserial_matmul_pallas(
+    x: jax.Array,  # (M, K)
+    planes: jax.Array,  # (n_bits, K/8, N) uint8
+    sign: jax.Array,  # (K/8, N) uint8
+    *,
+    n_bits: int,
+    block_m: int = 128,
+    block_n: int = 128,
+    block_k: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    M, K = x.shape
+    N = sign.shape[-1]
+    block_m = min(block_m, M)
+    block_n = min(block_n, N)
+    block_k = min(block_k, K)
+    assert K % block_k == 0 and block_k % 8 == 0, (K, block_k)
+    assert M % block_m == 0 and N % block_n == 0, (M, N, block_m, block_n)
+    nk = K // block_k
+    grid = (M // block_m, N // block_n, nk)
+    kern = functools.partial(
+        _kernel,
+        n_bits=n_bits,
+        nsteps_k=nk,
+        out_dtype=x.dtype,
+    )
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda i, j, k: (i, k)),
+            pl.BlockSpec((planes.shape[0], block_k // 8, block_n), lambda i, j, k: (0, k, j)),
+            pl.BlockSpec((block_k // 8, block_n), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), x.dtype),
+        scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32)],
+        interpret=interpret,
+    )(x, planes, sign)

@@ -1,0 +1,131 @@
+"""Pallas TPU kernel: causal (optionally sliding-window) flash attention
+forward — the prefill hot path at 32k sequence length.
+
+Standard online-softmax tiling: grid (batch*heads, n_q_blocks,
+n_k_blocks); running max m, denominator l and the output accumulator
+live in VMEM scratch across the k-block axis.  Fully-masked k blocks
+(above the causal diagonal, or outside the sliding window) are skipped
+with @pl.when so the causal kernel does ~half the work of the dense one
+— and the windowed variant only touches O(S * window) tiles.
+
+Layout: q, k, v are (BH, S, d) with d a multiple of 128 (pad head_dim 64
+archs to 128 at the call site or pick block_d = 64: lane dim is d, so
+d=64 still maps — at reduced MXU efficiency; documented trade-off).
+Oracle: ref.flash_attention_ref (naive f32 softmax).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, out_ref, acc_ref, m_ref, l_ref, *,
+            block_q: int, block_k: int, n_k: int, sm_scale: float,
+            causal: bool, window: int | None):
+    qi = pl.program_id(1)
+    kj = pl.program_id(2)
+
+    @pl.when(kj == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q_start = qi * block_q
+    k_start = kj * block_k
+
+    def run():
+        q = q_ref[0]  # (bq, d)
+        k = k_ref[0]  # (bk, d)
+        v = v_ref[0]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * sm_scale  # (bq, bk)
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+        mask = jnp.ones((block_q, block_k), jnp.bool_)
+        if causal:
+            mask &= qpos >= kpos
+        if window is not None:
+            mask &= (qpos - kpos) < window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]  # (bq, 1)
+        l_prev = l_ref[...]
+        m_cur = jnp.max(s, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)  # (bq, bk)
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = alpha * l_prev + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot(
+            p.astype(v.dtype), v, preferred_element_type=jnp.float32
+        )
+        m_ref[...] = m_new
+        l_ref[...] = l_new
+
+    if causal or window is not None:
+        # skip fully-masked blocks
+        needed = jnp.bool_(True)
+        if causal:
+            needed &= k_start <= q_start + block_q - 1
+        if window is not None:
+            needed &= (q_start - (k_start + block_k - 1)) < window
+        pl.when(needed)(run)
+    else:
+        run()
+
+    @pl.when(kj == n_k - 1)
+    def _finish():
+        out_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(out_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "sm_scale", "block_q", "block_k", "interpret"),
+)
+def flash_attention_pallas(
+    q: jax.Array,  # (BH, S, d)
+    k: jax.Array,  # (BH, S, d)
+    v: jax.Array,  # (BH, S, d)
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    sm_scale: float | None = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    BH, S, d = q.shape
+    block_q = min(block_q, S)
+    block_k = min(block_k, S)
+    assert S % block_q == 0 and S % block_k == 0, (S, block_q, block_k)
+    if sm_scale is None:
+        sm_scale = d**-0.5
+    n_q, n_k = S // block_q, S // block_k
+    kern = functools.partial(
+        _kernel, block_q=block_q, block_k=block_k, n_k=n_k,
+        sm_scale=float(sm_scale), causal=causal, window=window,
+    )
+    return pl.pallas_call(
+        kern,
+        grid=(BH, n_q, n_k),
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, block_k, d), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, block_k, d), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, S, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, d), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

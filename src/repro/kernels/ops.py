@@ -1,0 +1,79 @@
+"""Jitted public wrappers: Pallas on TPU, interpret-mode Pallas or the
+pure-jnp ref elsewhere.  These are the entry points the rest of the
+system calls (serve engine, regularizer fast path, prefill attention).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from ..core.packing import PackedWeight
+from . import ref
+from .bgl_norm import bgl_sumsq_pallas
+from .bitserial_matmul import bitserial_matmul_pallas
+from .flash_attention import flash_attention_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def bitserial_matmul(
+    x: jax.Array, pw: PackedWeight, *, use_pallas: bool | None = None, interpret: bool | None = None
+) -> jax.Array:
+    """x (..., K) @ packed weight (K, N) with on-the-fly dequantisation."""
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    use_pallas = _on_tpu() if use_pallas is None else use_pallas
+    if use_pallas:
+        interpret = (not _on_tpu()) if interpret is None else interpret
+        M, K = x2.shape
+        N = pw.sign.shape[-1]
+        bm = 128 if M % 128 == 0 else (8 if M % 8 == 0 else M)
+        bn = 128 if N % 128 == 0 else N
+        bk = 512 if K % 512 == 0 else (128 if K % 128 == 0 else K)
+        out = bitserial_matmul_pallas(
+            x2, pw.planes, pw.sign, n_bits=pw.n_bits,
+            block_m=bm, block_n=bn, block_k=bk, interpret=interpret,
+        )
+        out = out * jnp.asarray(pw.scale, out.dtype)
+    else:
+        out = ref.bitserial_matmul_ref(x2, pw.planes, pw.sign, pw.scale, pw.n_bits)
+    return out.reshape(*lead, -1)
+
+
+def bgl_sumsq(x: jax.Array, *, use_pallas: bool | None = None, interpret: bool | None = None):
+    """Per-row sum of squares; rows = (bit, group) pairs."""
+    use_pallas = _on_tpu() if use_pallas is None else use_pallas
+    if not use_pallas:
+        return ref.bgl_sumsq_ref(x)
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    R, C = x.shape
+    br = 8 if R % 8 == 0 else 1
+    bc = 4096 if C % 4096 == 0 else (512 if C % 512 == 0 else C)
+    return bgl_sumsq_pallas(x, block_r=br, block_c=bc, interpret=interpret)
+
+
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    use_pallas: bool | None = None,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """(BH, S, d) flash attention; GQA callers broadcast kv beforehand."""
+    use_pallas = _on_tpu() if use_pallas is None else use_pallas
+    if not use_pallas:
+        return ref.flash_attention_ref(q, k, v, causal=causal, window=window)
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    S = q.shape[1]
+    bq = 128 if S % 128 == 0 else S
+    bk = 128 if S % 128 == 0 else S
+    return flash_attention_pallas(
+        q, k, v, causal=causal, window=window, block_q=bq, block_k=bk, interpret=interpret
+    )

@@ -1,0 +1,43 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contract)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..core.packing import unpack_bits_axis0
+
+
+def bitserial_matmul_ref(x, planes, sign, scale, n_bits: int):
+    """x (M,K) @ dequant(planes, sign) * scale / (2^n - 1)."""
+    K = x.shape[1]
+    mag = sum(
+        unpack_bits_axis0(planes[b], K).astype(jnp.float32) * (2.0**b) for b in range(n_bits)
+    )
+    sgn = 1.0 - 2.0 * unpack_bits_axis0(sign, K).astype(jnp.float32)
+    w = (sgn * mag).astype(x.dtype)
+    denom = 2.0**n_bits - 1.0
+    return (x @ w) * jnp.asarray(scale / denom, x.dtype)
+
+
+def bgl_sumsq_ref(x: jax.Array) -> jax.Array:
+    """Per-row sum of squares of an (R, C) matrix, f32."""
+    x = x.astype(jnp.float32)
+    return jnp.sum(x * x, axis=1)
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=None, sm_scale=None):
+    """Naive f32 softmax attention over (BH, S, d)."""
+    BH, S, d = q.shape
+    if sm_scale is None:
+        sm_scale = d**-0.5
+    s = jnp.einsum("bqd,bkd->bqk", q, k, preferred_element_type=jnp.float32) * sm_scale
+    qpos = jnp.arange(S)[:, None]
+    kpos = jnp.arange(S)[None, :]
+    mask = jnp.ones((S, S), bool)
+    if causal:
+        mask &= qpos >= kpos
+    if window is not None:
+        mask &= (qpos - kpos) < window
+    s = jnp.where(mask[None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p.astype(v.dtype), v)

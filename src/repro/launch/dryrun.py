@@ -1,0 +1,340 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST be the first two lines: jax locks the device count on first init.
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this builds the real step function (BSQ train step for
+train shapes, decode step for decode shapes, prefill forward for
+prefill shapes), lowers it with ShapeDtypeStruct inputs (NO allocation),
+compiles for the 16x16 single-pod / 2x16x16 multi-pod mesh, and records
+memory_analysis + cost_analysis + collective bytes for §Roofline.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch granite-3-2b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all --out results/dryrun.json
+  ... --multi-pod / --single-pod (default: both)
+"""
+import argparse
+import json
+import math
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs import ARCH_IDS, SHAPES, get_config, shape_applicable
+from ..core.bsq import BSQConfig
+from ..dist.sharding import (
+    cache_tree_specs,
+    data_batch_spec,
+    tree_param_specs,
+)
+from ..models import transformer
+from ..models.frontends import batch_specs
+from ..optim import SGDM, AdamW, step_decay
+from ..roofline import analysis
+from ..train.step import abstract_bsq_state, abstract_plain_state, make_bsq_train_step, \
+    make_plain_train_step
+from .mesh import make_production_mesh
+
+
+def _shardings(mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def _batch_shardings(mesh, batch_sds):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, data_batch_spec(mesh, s.shape[0], len(s.shape))),
+        batch_sds,
+    )
+
+
+def _active_params(cfg, params_sds) -> float:
+    """Active non-embedding params (MoE: top_k/E of routed experts)."""
+    total = 0.0
+    flat = jax.tree_util.tree_flatten_with_path(params_sds)[0]
+    for path, leaf in flat:
+        name = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path).lower()
+        n = float(math.prod(leaf.shape))
+        if "embed" in name or name.endswith("lm_head"):
+            continue
+        if "/moe/" in name and any(name.endswith(s) for s in ("w_gate", "w_up", "w_down")):
+            n *= cfg.top_k / max(cfg.n_experts, 1)
+        total += n
+    return total
+
+
+# ---------------------------------------------------------------------------
+# Cell builders: return (fn, example_args_sds, in_shardings, out_shardings,
+#                        donate, model_flops_per_device)
+# ---------------------------------------------------------------------------
+
+
+def build_train_cell(cfg, shape, mesh, technique="bsq", optimizer="sgdm",
+                     microbatches=1):
+    opt = SGDM() if optimizer == "sgdm" else AdamW()
+    lr_fn = step_decay(0.1, [10_000, 20_000])
+    if technique == "bsq":
+        bsq_cfg = BSQConfig(n_init=8, alpha=5e-3, mode="static")
+        state_sds, ctx = abstract_bsq_state(cfg, bsq_cfg, opt)
+        fn = make_bsq_train_step(ctx, opt, lr_fn, microbatches=microbatches)
+        params_sds = ctx.template
+    else:
+        state_sds = abstract_plain_state(cfg, opt)
+        fn = make_plain_train_step(cfg, opt, lr_fn)
+        params_sds = state_sds["params"]
+    batch_sds = batch_specs(cfg, shape)
+    state_specs = tree_param_specs(state_sds, mesh)
+    state_sh = _shardings(mesh, state_specs)
+    batch_sh = _batch_shardings(mesh, batch_sds)
+    n_active = _active_params(cfg, params_sds)
+    tokens = shape.seq_len * shape.global_batch
+    mf = 6.0 * n_active * tokens / math.prod(mesh.devices.shape)
+    return fn, (state_sds, batch_sds), (state_sh, batch_sh), (state_sh, None), (0,), mf
+
+
+def build_decode_cell(cfg, shape, mesh, packed_bits: int = 0):
+    B, S = shape.global_batch, shape.seq_len
+    params_sds = jax.eval_shape(
+        lambda k: transformer.init_params(k, cfg), jax.random.PRNGKey(0)
+    )
+    if packed_bits:
+        from ..core.packing import pack_model_params
+
+        params_sds = pack_model_params(params_sds, packed_bits, abstract=True)
+    cache_sds = jax.eval_shape(
+        lambda: transformer.init_cache(cfg, B, S, jnp.dtype(cfg.kv_cache_dtype))
+    )
+    tok_sds = (
+        jax.ShapeDtypeStruct((B, 1, cfg.d_model), jnp.bfloat16)
+        if cfg.frontend == "audio"
+        else jax.ShapeDtypeStruct((B, 1), jnp.int32)
+    )
+    cross_sds = None
+    if cfg.frontend == "vision":
+        cross_sds = jax.ShapeDtypeStruct((B, cfg.frontend_tokens, cfg.d_model), jnp.bfloat16)
+
+    def fn(params, cache, tok, pos, cross):
+        return transformer.decode_step(params, cache, tok, pos, cfg, cross_embeds=cross)
+
+    params_sh = _shardings(mesh, tree_param_specs(params_sds, mesh))
+    cache_sh = _shardings(mesh, cache_tree_specs(cache_sds, mesh))
+    tok_sh = NamedSharding(mesh, data_batch_spec(mesh, B, len(tok_sds.shape)))
+    pos_sds = jax.ShapeDtypeStruct((), jnp.int32)
+    pos_sh = NamedSharding(mesh, P())
+    cross_sh = (
+        NamedSharding(mesh, data_batch_spec(mesh, B, 3)) if cross_sds is not None else None
+    )
+    args = (params_sds, cache_sds, tok_sds, pos_sds, cross_sds)
+    in_sh = (params_sh, cache_sh, tok_sh, pos_sh, cross_sh)
+    out_sh = (None, cache_sh)
+    n_active = _active_params(cfg, params_sds)
+    mf = 2.0 * n_active * B / math.prod(mesh.devices.shape)
+    return fn, args, in_sh, out_sh, (1,), mf
+
+
+def build_prefill_cell(cfg, shape, mesh):
+    """Prefill = full forward (logits over the prompt); cache seeding is
+    exercised by the serve engine, the dry-run lowers the FLOPs-dominant
+    forward."""
+    batch_sds = batch_specs(cfg, shape)
+
+    def fn(params, batch):
+        logits, aux = transformer.forward(params, batch, cfg)
+        return logits[:, -1], aux
+
+    params_sds = jax.eval_shape(
+        lambda k: transformer.init_params(k, cfg), jax.random.PRNGKey(0)
+    )
+    params_sh = _shardings(mesh, tree_param_specs(params_sds, mesh))
+    batch_sh = _batch_shardings(mesh, batch_sds)
+    n_active = _active_params(cfg, params_sds)
+    tokens = shape.seq_len * shape.global_batch
+    mf = 2.0 * n_active * tokens / math.prod(mesh.devices.shape)
+    return fn, (params_sds, batch_sds), (params_sh, batch_sh), None, (), mf
+
+
+def _build(cfg, shape, mesh, technique, microbatches, packed_bits=0):
+    if shape.kind == "train":
+        return build_train_cell(cfg, shape, mesh, technique, microbatches=microbatches)
+    if shape.kind == "decode":
+        return build_decode_cell(cfg, shape, mesh, packed_bits=packed_bits)
+    return build_prefill_cell(cfg, shape, mesh)
+
+
+def _compile(cfg, shape, mesh, technique, microbatches, packed_bits=0):
+    fn, args, in_sh, out_sh, donate, mf = _build(cfg, shape, mesh, technique, microbatches,
+                                                 packed_bits)
+    with mesh:
+        jitted = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh, donate_argnums=donate)
+        lowered = jitted.lower(*args)
+        compiled = lowered.compile()
+    return compiled, mf
+
+
+def accounting_terms(cfg, shape, mesh, technique, packed_bits=0):
+    """Exact per-device roofline terms via superblock differencing.
+
+    XLA's cost_analysis counts while-loop (scan) bodies ONCE, so the
+    scanned production module under-reports.  Instead we compile two
+    small UNROLLED variants — 1 and 2 superblocks — whose per-layer SPMD
+    partitioning is identical to the full model's (rules are shape-based),
+    and extrapolate:  total = base + n_superblocks * delta (+ tail).
+    Unrolled small models compile in seconds; the 394s/466GiB full-unroll
+    is avoided.  Accounting uses microbatches=1 (grad accumulation leaves
+    arithmetic totals unchanged; see EXPERIMENTS.md §Dry-run notes).
+    """
+    import dataclasses as dc
+
+    plen = cfg.pattern_len
+    n_dev = math.prod(mesh.devices.shape)
+    outs = []
+    for n_blocks in (1, 2):
+        small = dc.replace(cfg, n_layers=plen * n_blocks, scan_layers=False, name=cfg.name)
+        compiled, _ = _compile(small, shape, mesh, technique, 1, packed_bits)
+        outs.append(analysis.analyze(compiled, n_dev))
+    one, two = outs
+    nb = cfg.n_superblocks + cfg.n_tail_layers / plen
+
+    def extrap(a, b):
+        delta = max(b - a, 0.0)
+        return max(a - delta, 0.0) + nb * delta
+
+    flops = extrap(one.flops_per_device, two.flops_per_device)
+    byts = extrap(one.bytes_per_device, two.bytes_per_device)
+    coll = {
+        k: extrap(one.collectives.get(k, 0), two.collectives.get(k, 0))
+        for k in set(one.collectives) | set(two.collectives)
+    }
+    return analysis.RooflineTerms(
+        flops_per_device=flops,
+        bytes_per_device=byts,
+        collective_bytes_per_device=float(sum(coll.values())),
+        collectives={k: int(v) for k, v in coll.items()},
+        n_devices=n_dev,
+    )
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, technique: str = "bsq",
+             microbatches: int | None = None, verbose: bool = True,
+             cfg_override=None, skip_accounting: bool = False, packed_bits: int = 0):
+    cfg = cfg_override if cfg_override is not None else get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = math.prod(mesh.devices.shape)
+    if microbatches is None:
+        # grad accumulation so the production step FITS in 16 GiB HBM;
+        # batch%mb==0 and per-microbatch batch must cover the DP axes.
+        # one batch row per device per microbatch: smallest activation peak
+        n_batch_shards = 32 if multi_pod else 16
+        microbatches = min(16, shape.global_batch // n_batch_shards) \
+            if shape.kind == "train" else 1
+        microbatches = max(microbatches, 1)
+    rec = {
+        "arch": arch, "shape": shape_name, "mesh": "2x16x16" if multi_pod else "16x16",
+        "kind": shape.kind, "technique": technique if shape.kind == "train" else "serve",
+        "microbatches": microbatches,
+    }
+    t0 = time.time()
+    try:
+        # 1) production compile (scan + microbatching): memory proof
+        compiled, mf = _compile(cfg, shape, mesh, technique, microbatches, packed_bits)
+        t_compile = time.time() - t0
+        mem = compiled.memory_analysis()
+        # 2) accounting compile pair: exact roofline terms
+        if skip_accounting:
+            terms = analysis.analyze(compiled, n_dev)
+        else:
+            terms = accounting_terms(cfg, shape, mesh, technique, packed_bits)
+        rec.update(
+            status="ok",
+            compile_s=round(t_compile, 1),
+            total_s=round(time.time() - t0, 1),
+            memory={
+                "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+                "output_bytes": getattr(mem, "output_size_in_bytes", None),
+                "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+                "peak_bytes": getattr(mem, "peak_memory_in_bytes", None),
+            },
+            roofline=terms.to_dict(),
+            model_flops_per_device=mf,
+            useful_ratio=mf / terms.flops_per_device if terms.flops_per_device else None,
+            roofline_fraction=terms.roofline_fraction(mf),
+        )
+        if verbose:
+            m = rec["memory"]
+            fits = (m["argument_bytes"] or 0) + (m["temp_bytes"] or 0) <= 16 * 2**30
+            print(
+                f"[ok] {arch} x {shape_name} x {rec['mesh']}: "
+                f"{rec['total_s']:.0f}s | "
+                f"args {(m['argument_bytes'] or 0)/2**30:.2f} + "
+                f"temp {(m['temp_bytes'] or 0)/2**30:.2f} GiB "
+                f"({'fits' if fits else 'OVER 16GiB'}) | "
+                f"compute {terms.compute_s*1e3:.2f} ms, mem {terms.memory_s*1e3:.2f} ms, "
+                f"coll {terms.collective_s*1e3:.2f} ms -> {terms.bottleneck} | "
+                f"MFU-bound {rec['roofline_fraction']*100:.1f}%", flush=True,
+            )
+    except Exception as e:  # noqa: BLE001 — record the failure, keep sweeping
+        rec.update(status="fail", error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-2000:])
+        if verbose:
+            print(f"[FAIL] {arch} x {shape_name} x {rec['mesh']}: {rec['error']}", flush=True)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--single-pod", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--technique", default="bsq", choices=["bsq", "plain"])
+    ap.add_argument("--microbatches", type=int, default=None)
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    assert jax.device_count() == 512, jax.device_count()
+    meshes = []
+    if args.single_pod or not args.multi_pod:
+        meshes.append(False)
+    if args.multi_pod or not args.single_pod:
+        meshes.append(True)
+
+    archs = [args.arch] if args.arch else ARCH_IDS
+    shapes = [args.shape] if args.shape else list(SHAPES)
+
+    results = []
+    if args.out and os.path.exists(args.out):
+        with open(args.out) as f:
+            results = json.load(f)
+    done = {(r["arch"], r["shape"], r["mesh"], r.get("technique"))
+            for r in results if r.get("status") == "ok"}
+
+    for arch in archs:
+        for shape_name in shapes:
+            if not shape_applicable(arch, shape_name):
+                print(f"[skip] {arch} x {shape_name}: long_500k needs sub-quadratic "
+                      f"attention (DESIGN.md §5)")
+                continue
+            for mp in meshes:
+                mesh_name = "2x16x16" if mp else "16x16"
+                tech = args.technique if SHAPES[shape_name].kind == "train" else "serve"
+                if (arch, shape_name, mesh_name, tech) in done:
+                    continue
+                rec = run_cell(arch, shape_name, mp, args.technique, args.microbatches)
+                results.append(rec)
+                if args.out:
+                    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+                    with open(args.out, "w") as f:
+                        json.dump(results, f, indent=1)
+    n_ok = sum(1 for r in results if r["status"] == "ok")
+    print(f"\n{n_ok}/{len(results)} cells ok")
+    return 0 if n_ok == len(results) else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,96 @@
+"""Production training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch granite-3-2b \
+        --steps 200 --alpha 5e-3 --workdir /tmp/run1 [--reduced] \
+        [--data-parallel N --model-parallel M] [--technique bsq|plain]
+
+On a real fleet this runs once per host (jax.distributed.initialize is
+called when JAX_COORDINATOR is set); in this container it runs on however
+many host devices exist.  The reduced flag swaps in the smoke-size config
+so the full loop (BSQ + requant + checkpoint + straggler monitor) is
+exercisable on CPU.
+"""
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite-3-2b")
+    ap.add_argument("--technique", default="bsq", choices=["bsq", "plain"])
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--alpha", type=float, default=5e-3)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=0.2)
+    ap.add_argument("--requant-interval", type=int, default=50)
+    ap.add_argument("--ckpt-interval", type=int, default=50)
+    ap.add_argument("--workdir", default=None)
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--full", dest="reduced", action="store_false")
+    ap.add_argument("--data-parallel", type=int, default=0)
+    ap.add_argument("--model-parallel", type=int, default=0)
+    ap.add_argument("--optimizer", default="sgdm", choices=["sgdm", "adamw"])
+    args = ap.parse_args()
+
+    if os.environ.get("JAX_COORDINATOR"):
+        jax.distributed.initialize()  # multi-host fleet entry
+
+    from ..configs import get_config, reduced_config
+    from ..core import BSQConfig
+    from ..data import MarkovLM, sharded_lm_iterator
+    from ..optim import SGDM, AdamW, step_decay
+    from ..train.step import (
+        init_bsq_state,
+        init_plain_state,
+        make_bsq_train_step,
+        make_plain_train_step,
+        make_requant_step,
+    )
+    from ..train.trainer import TrainerConfig, simple_train_loop, train_bsq
+
+    cfg = reduced_config(args.arch) if args.reduced else get_config(args.arch)
+    opt = SGDM() if args.optimizer == "sgdm" else AdamW()
+    lr_fn = step_decay(args.lr, [int(args.steps * 0.7), int(args.steps * 0.9)])
+
+    # optional explicit mesh + sharded state placement
+    mesh = None
+    if args.data_parallel and args.model_parallel:
+        mesh = jax.make_mesh((args.data_parallel, args.model_parallel), ("data", "model"))
+
+    task = MarkovLM(vocab=cfg.vocab_size, seed=13)
+    data = sharded_lm_iterator(task, args.batch, args.seq, seed=0)
+    tcfg = TrainerConfig(
+        total_steps=args.steps, requant_interval=args.requant_interval,
+        ckpt_interval=args.ckpt_interval, log_interval=10, workdir=args.workdir,
+    )
+
+    if args.technique == "bsq":
+        bsq_cfg = BSQConfig(n_init=8, alpha=args.alpha, mode="static",
+                            compute_dtype=jnp.float32 if args.reduced else jnp.bfloat16)
+        state, ctx = init_bsq_state(jax.random.PRNGKey(0), cfg, bsq_cfg, opt)
+        if mesh is not None:
+            from jax.sharding import NamedSharding
+
+            from ..dist.sharding import tree_param_specs
+
+            sh = jax.tree.map(lambda s: NamedSharding(mesh, s),
+                              tree_param_specs(state, mesh))
+            state = jax.tree.map(jax.device_put, state, sh)
+        step = jax.jit(make_bsq_train_step(ctx, opt, lr_fn), donate_argnums=0)
+        requant = jax.jit(make_requant_step(ctx))
+        out = train_bsq(state, ctx, step, requant, data, tcfg)
+        s = out["scheme"]
+        print(f"done: bits/para={s.bits_per_param:.2f} comp={s.compression:.2f}x")
+    else:
+        state = init_plain_state(jax.random.PRNGKey(0), cfg, opt)
+        step = jax.jit(make_plain_train_step(cfg, opt, lr_fn), donate_argnums=0)
+        state, history = simple_train_loop(state, step, data, args.steps)
+        print(f"done: final={history[-1]}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,222 @@
+"""Attention: GQA/MQA/MHA, full + sliding-window causal, cross-attn.
+
+Prefill/train uses a query-chunked (flash-style) path by default so the
+score tensor never materialises at (S, S); decode is a single-query read
+over a preallocated KV cache.  All softmax math in f32.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import apply_rope, dense_apply, dense_init
+
+Params = Dict[str, jax.Array]
+
+NEG_INF = -1e30
+
+
+def attn_init(key, d_model: int, n_heads: int, n_kv: int, head_dim: int) -> Params:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(k1, d_model, n_heads * head_dim),
+        "wk": dense_init(k2, d_model, n_kv * head_dim),
+        "wv": dense_init(k3, d_model, n_kv * head_dim),
+        "wo": dense_init(k4, n_heads * head_dim, d_model),
+    }
+
+
+def _qkv(p: Params, x: jax.Array, n_heads: int, n_kv: int, head_dim: int):
+    B, S, _ = x.shape
+    q = dense_apply(x, p["wq"]).reshape(B, S, n_heads, head_dim)
+    k = dense_apply(x, p["wk"]).reshape(B, S, n_kv, head_dim)
+    v = dense_apply(x, p["wv"]).reshape(B, S, n_kv, head_dim)
+    return q, k, v
+
+
+def _gqa_scores(q: jax.Array, k: jax.Array, dtype=jnp.float32) -> jax.Array:
+    """q: (B, Sq, K, G, d); k: (B, Sk, K, d) -> (B, K, G, Sq, Sk)."""
+    return jnp.einsum("bqkgd,bskd->bkgqs", q, k, preferred_element_type=dtype)
+
+
+def _gqa_combine(w: jax.Array, v: jax.Array, dtype) -> jax.Array:
+    """w: (B, K, G, Sq, Sk); v: (B, Sk, K, d) -> (B, Sq, K*G*d)."""
+    o = jnp.einsum("bkgqs,bskd->bqkgd", w.astype(dtype), v)
+    B, Sq = o.shape[0], o.shape[1]
+    return o.reshape(B, Sq, -1)
+
+
+def _mask(q_pos: jax.Array, k_pos: jax.Array, window: Optional[int]) -> jax.Array:
+    """(Sq, Sk) boolean: causal, optionally sliding-window."""
+    m = q_pos[:, None] >= k_pos[None, :]
+    if window is not None:
+        m &= (q_pos[:, None] - k_pos[None, :]) < window
+    return m
+
+
+def attention(
+    p: Params,
+    x: jax.Array,
+    *,
+    n_heads: int,
+    n_kv: int,
+    head_dim: int,
+    rope_theta: float,
+    window: Optional[int] = None,
+    q_chunk: int = 1024,
+    positions: Optional[jax.Array] = None,
+    unroll: bool = False,
+    scores_dtype=jnp.float32,
+) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
+    """Causal self-attention for train/prefill.  Returns (out, (k, v)) so
+    prefill can seed the decode cache."""
+    B, S, _ = x.shape
+    G = n_heads // n_kv
+    q, k, v = _qkv(p, x, n_heads, n_kv, head_dim)
+    if positions is None:
+        positions = jnp.arange(S)[None, :]
+    q = apply_rope(q, positions, rope_theta)
+    k = apply_rope(k, positions, rope_theta)
+    q = q.reshape(B, S, n_kv, G, head_dim) * (head_dim**-0.5)
+
+    kpos = jnp.arange(S)
+
+    def block(qc: jax.Array, q0: jax.Array) -> jax.Array:
+        qpos = q0 + jnp.arange(qc.shape[1])
+        s = _gqa_scores(qc, k, scores_dtype)
+        m = _mask(qpos, kpos, window)
+        s = jnp.where(m[None, None, None], s, jnp.asarray(NEG_INF, scores_dtype))
+        # max-subtraction keeps bf16 scores numerically safe
+        s = s - jax.lax.stop_gradient(jnp.max(s, axis=-1, keepdims=True))
+        w = jax.nn.softmax(s.astype(scores_dtype), axis=-1)
+        return _gqa_combine(w, v, x.dtype)
+
+    if S <= q_chunk:
+        out = block(q, jnp.int32(0))
+    else:
+        assert S % q_chunk == 0, (S, q_chunk)
+        nq = S // q_chunk
+        qs = q.reshape(B, nq, q_chunk, n_kv, G, head_dim).transpose(1, 0, 2, 3, 4, 5)
+
+        if unroll:  # dry-run accounting path (cost_analysis vs while loops)
+            outs = jnp.stack([block(qs[i], jnp.int32(i * q_chunk)) for i in range(nq)])
+        else:
+            def step(_, inp):
+                qc, i = inp
+                return None, block(qc, i * q_chunk)
+
+            _, outs = jax.lax.scan(step, None, (qs, jnp.arange(nq)))
+        out = outs.transpose(1, 0, 2, 3).reshape(B, S, -1)
+    return dense_apply(out, p["wo"]), (k, v)
+
+
+def decode_attention(
+    p: Params,
+    x: jax.Array,
+    cache_k: jax.Array,
+    cache_v: jax.Array,
+    pos: jax.Array,
+    *,
+    n_heads: int,
+    n_kv: int,
+    head_dim: int,
+    rope_theta: float,
+    window: Optional[int] = None,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """One-token decode.  x: (B, 1, D); cache_[kv]: (B, Smax, K, d);
+    pos: scalar int32 current position.  Returns (out, new_k, new_v)."""
+    B = x.shape[0]
+    G = n_heads // n_kv
+    q, k, v = _qkv(p, x, n_heads, n_kv, head_dim)
+    posb = jnp.full((B, 1), pos)
+    q = apply_rope(q, posb, rope_theta)
+    k = apply_rope(k, posb, rope_theta)
+    cache_k = jax.lax.dynamic_update_slice_in_dim(cache_k, k.astype(cache_k.dtype), pos, axis=1)
+    cache_v = jax.lax.dynamic_update_slice_in_dim(cache_v, v.astype(cache_v.dtype), pos, axis=1)
+    q = q.reshape(B, 1, n_kv, G, head_dim) * (head_dim**-0.5)
+    s = _gqa_scores(q, cache_k.astype(x.dtype))  # (B, K, G, 1, Smax)
+    kpos = jnp.arange(cache_k.shape[1])
+    valid = kpos <= pos
+    if window is not None:
+        valid &= (pos - kpos) < window
+    s = jnp.where(valid[None, None, None, None, :], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    out = _gqa_combine(w, cache_v.astype(x.dtype), x.dtype)
+    return dense_apply(out, p["wo"]), cache_k, cache_v
+
+
+def decode_attention_cache(
+    p: Params,
+    x: jax.Array,
+    cache_k: jax.Array,
+    cache_v: jax.Array,
+    pos: jax.Array,
+    *,
+    n_heads: int,
+    n_kv: int,
+    head_dim: int,
+    rope_theta: float,
+    window: Optional[int] = None,
+    ring: bool = False,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """One-token decode against either a full-length cache or a ring buffer.
+
+    Ring buffer (``ring=True``, sliding-window layers): the cache holds the
+    last ``Wc = cache_k.shape[1]`` entries; position ``p`` lives in slot
+    ``p % Wc``.  Keys are stored post-RoPE, so only absolute positions
+    matter, which slot ``s`` encodes as ``p_s = pos - ((pos - s) mod Wc)``.
+    This caps the long-context cache of local layers at the window size —
+    the difference between 16 GB and 64 MB per local layer at 500k.
+    """
+    if not ring:
+        return decode_attention(
+            p, x, cache_k, cache_v, pos, n_heads=n_heads, n_kv=n_kv,
+            head_dim=head_dim, rope_theta=rope_theta, window=window,
+        )
+    B = x.shape[0]
+    Wc = cache_k.shape[1]
+    G = n_heads // n_kv
+    q, k, v = _qkv(p, x, n_heads, n_kv, head_dim)
+    posb = jnp.full((B, 1), pos)
+    q = apply_rope(q, posb, rope_theta)
+    k = apply_rope(k, posb, rope_theta)
+    slot = jnp.mod(pos, Wc)
+    cache_k = jax.lax.dynamic_update_slice_in_dim(cache_k, k.astype(cache_k.dtype), slot, axis=1)
+    cache_v = jax.lax.dynamic_update_slice_in_dim(cache_v, v.astype(cache_v.dtype), slot, axis=1)
+    q = q.reshape(B, 1, n_kv, G, head_dim) * (head_dim**-0.5)
+    s = _gqa_scores(q, cache_k.astype(x.dtype))  # (B, K, G, 1, Wc)
+    slots = jnp.arange(Wc)
+    abs_pos = pos - jnp.mod(pos - slots, Wc)
+    valid = abs_pos >= 0
+    if window is not None and window < Wc:
+        valid &= (pos - abs_pos) < window
+    s = jnp.where(valid[None, None, None, None, :], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    out = _gqa_combine(w, cache_v.astype(x.dtype), x.dtype)
+    return dense_apply(out, p["wo"]), cache_k, cache_v
+
+
+def cross_attention(
+    p: Params,
+    x: jax.Array,
+    kv_src: jax.Array,
+    *,
+    n_heads: int,
+    n_kv: int,
+    head_dim: int,
+) -> jax.Array:
+    """Unmasked cross-attention: x (B,S,D) queries attend to kv_src (B,T,D).
+
+    Used for the VLM image layers (kv_src = precomputed patch embeddings,
+    identical at train and decode time — no cache update needed)."""
+    B, S, _ = x.shape
+    G = n_heads // n_kv
+    q = dense_apply(x, p["wq"]).reshape(B, S, n_kv, G, head_dim) * (head_dim**-0.5)
+    k = dense_apply(kv_src, p["wk"]).reshape(B, -1, n_kv, head_dim)
+    v = dense_apply(kv_src, p["wv"]).reshape(B, -1, n_kv, head_dim)
+    s = _gqa_scores(q, k)
+    w = jax.nn.softmax(s, axis=-1)
+    out = _gqa_combine(w, v, x.dtype)
+    return dense_apply(out, p["wo"])

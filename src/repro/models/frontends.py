@@ -1,0 +1,51 @@
+"""Modality-frontend stubs (per assignment: '[audio]/[vlm] entries specify
+the transformer BACKBONE only; the modality frontend is a STUB
+(input_specs() provides precomputed frame/patch embeddings)').
+
+These produce ShapeDtypeStructs for the dry-run and deterministic synthetic
+embeddings for smoke tests/examples."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig, ShapeConfig
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig, *, global_batch: int | None = None):
+    """ShapeDtypeStruct stand-ins for every model input of a full-sequence
+    step (train/prefill). Decode specs live in launch/dryrun.py."""
+    B = global_batch if global_batch is not None else shape.global_batch
+    S = shape.seq_len
+    specs = {}
+    if cfg.frontend == "audio":
+        specs["embeds"] = jax.ShapeDtypeStruct((B, S, cfg.d_model), jnp.bfloat16)
+    else:
+        specs["tokens"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+    if cfg.frontend == "vision":
+        specs["cross_embeds"] = jax.ShapeDtypeStruct(
+            (B, cfg.frontend_tokens, cfg.d_model), jnp.bfloat16
+        )
+    if shape.kind == "train":
+        specs["labels"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+    return specs
+
+
+def synthetic_batch(cfg: ModelConfig, batch: int, seq: int, seed: int = 0, with_labels=True):
+    """Concrete synthetic inputs matching batch_specs (smoke tests)."""
+    key = jax.random.PRNGKey(seed)
+    k1, k2, k3 = jax.random.split(key, 3)
+    out = {}
+    if cfg.frontend == "audio":
+        out["embeds"] = jax.random.normal(k1, (batch, seq, cfg.d_model), jnp.float32).astype(
+            jnp.dtype(cfg.dtype)
+        )
+    else:
+        out["tokens"] = jax.random.randint(k1, (batch, seq), 0, cfg.vocab_size)
+    if cfg.frontend == "vision":
+        out["cross_embeds"] = jax.random.normal(
+            k2, (batch, cfg.frontend_tokens, cfg.d_model), jnp.float32
+        ).astype(jnp.dtype(cfg.dtype))
+    if with_labels:
+        out["labels"] = jax.random.randint(k3, (batch, seq), 0, cfg.vocab_size)
+    return out

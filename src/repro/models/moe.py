@@ -1,0 +1,115 @@
+"""Mixture-of-Experts FFN with sort-based capacity dispatch.
+
+Design (TPU/SPMD-friendly, no (T, E, C) one-hot einsum):
+  * tokens are split into G groups (the leading batch axis, sharded over
+    "data"), each group dispatches locally: top-k -> stable sort by
+    expert -> rank-within-expert -> scatter into an (E, C, d) buffer,
+    dropping overflow beyond capacity C;
+  * expert FFN is one stacked einsum over (G, E, C, d) x (E, d, f); with
+    the expert axis sharded over "model" this induces the all-to-all
+    exchange (expert parallelism) under SPMD;
+  * combine scatters expert outputs back, weighted by router probs.
+
+Shared experts (Qwen-style) run densely as one fused SwiGLU of width
+``n_shared * d_ff`` and are added to the routed output.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import dense_init, mlp_apply, mlp_init
+
+Params = Dict[str, jax.Array]
+
+
+def moe_capacity(tokens_per_group: int, top_k: int, n_experts: int, cf: float) -> int:
+    c = int(-(-tokens_per_group * top_k * cf // n_experts))  # ceil
+    return max(8, ((c + 7) // 8) * 8)
+
+
+def moe_init(key, d: int, d_ff: int, n_experts: int, n_shared: int, mlp_kind: str) -> Params:
+    k0, k1, k2, k3, k4 = jax.random.split(key, 5)
+    p = {
+        "router": dense_init(k0, d, n_experts, scale=0.02),
+        "w_gate": jax.vmap(lambda k: dense_init(k, d, d_ff))(jax.random.split(k1, n_experts)),
+        "w_up": jax.vmap(lambda k: dense_init(k, d, d_ff))(jax.random.split(k2, n_experts)),
+        "w_down": jax.vmap(lambda k: dense_init(k, d_ff, d))(jax.random.split(k3, n_experts)),
+    }
+    if n_shared:
+        p["shared"] = mlp_init(k4, d, n_shared * d_ff, mlp_kind)
+    return p
+
+
+def _dispatch_one_group(xg, gates, top_k: int, n_experts: int, capacity: int):
+    """xg: (T, d); gates: (T, E) f32. Returns (buf (E*C, d), combine info)."""
+    T = xg.shape[0]
+    top_w, top_e = jax.lax.top_k(gates, top_k)  # (T, k)
+    probs = jax.nn.softmax(top_w, axis=-1)  # normalise over the chosen k
+    flat_e = top_e.reshape(-1)  # (T*k,)
+    flat_t = jnp.repeat(jnp.arange(T), top_k)
+    flat_w = probs.reshape(-1)
+    order = jnp.argsort(flat_e, stable=True)
+    se, st, sw = flat_e[order], flat_t[order], flat_w[order]
+    counts = jnp.zeros((n_experts,), jnp.int32).at[flat_e].add(1)
+    offs = jnp.concatenate([jnp.zeros((1,), jnp.int32), jnp.cumsum(counts)[:-1]])
+    rank = jnp.arange(T * top_k, dtype=jnp.int32) - offs[se]
+    keep = rank < capacity
+    slot = jnp.where(keep, se * capacity + rank, n_experts * capacity)  # overflow -> dropped row
+    buf = jnp.zeros((n_experts * capacity + 1, xg.shape[1]), xg.dtype)
+    buf = buf.at[slot].set(xg[st], mode="drop")
+    return buf[:-1], (st, slot, keep, sw)
+
+
+def _combine_one_group(out_flat, info, T: int):
+    """out_flat: (E*C, d). Scatter-add expert outputs back to tokens."""
+    st, slot, keep, sw = info
+    slot_c = jnp.minimum(slot, out_flat.shape[0] - 1)
+    contrib = out_flat[slot_c] * (sw * keep.astype(sw.dtype))[:, None].astype(out_flat.dtype)
+    return jnp.zeros((T, out_flat.shape[1]), out_flat.dtype).at[st].add(contrib)
+
+
+def moe_apply(
+    p: Params,
+    x: jax.Array,
+    *,
+    top_k: int,
+    n_experts: int,
+    capacity_factor: float,
+    mlp_kind: str,
+    n_shared: int = 0,
+) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, S, d) -> (y, aux_load_balance_loss)."""
+    B, S, d = x.shape
+    G, T = (B, S) if S > 1 else (1, B)
+    xg = x.reshape(G, T, d)
+    gates = (xg.astype(jnp.float32) @ p["router"].astype(jnp.float32)).astype(jnp.float32)
+    C = moe_capacity(T, top_k, n_experts, capacity_factor)
+
+    buf, info = jax.vmap(
+        lambda xx, gg: _dispatch_one_group(xx, gg, top_k, n_experts, C)
+    )(xg, gates)
+    ein = buf.reshape(G, n_experts, C, d)  # (G, E, C, d)
+
+    dt = x.dtype
+    g = jnp.einsum("gecd,edf->gecf", ein, p["w_gate"].astype(dt))
+    u = jnp.einsum("gecd,edf->gecf", ein, p["w_up"].astype(dt))
+    h = (jax.nn.silu(g) if mlp_kind == "swiglu" else jax.nn.gelu(g, approximate=True)) * u
+    out = jnp.einsum("gecf,efd->gecd", h, p["w_down"].astype(dt))
+
+    y = jax.vmap(lambda o, i: _combine_one_group(o.reshape(n_experts * C, d), i, T))(out, info)
+    y = y.reshape(B, S, d)
+
+    # Switch-style load-balance auxiliary loss.
+    probs_full = jax.nn.softmax(gates, axis=-1)  # (G, T, E)
+    _, top_e = jax.lax.top_k(gates, top_k)
+    onehot = jax.nn.one_hot(top_e, n_experts, dtype=jnp.float32)  # (G, T, k, E)
+    frac_tokens = jnp.mean(jnp.sum(onehot, axis=2), axis=(0, 1))  # (E,)
+    frac_probs = jnp.mean(probs_full, axis=(0, 1))
+    aux = n_experts * jnp.sum(frac_tokens * frac_probs) / top_k
+
+    if n_shared:
+        y = y + mlp_apply(p["shared"], x, mlp_kind)
+    return y, aux

@@ -1,0 +1,122 @@
+"""ResNet-20 for CIFAR (He et al. 2016) — the paper's own benchmark model.
+
+Faithful to the paper's setup: 3 stages x 3 basic blocks, widths
+16/32/64, BatchNorm kept in float throughout BSQ training (paper App.
+A.1), ReLU6 activations when activation quantisation is on.  Pure JAX
+with lax.conv; params are nested dicts so `core.bsq.partition_params`
+picks up the conv kernels (HWIO, >=2D) and skips BN.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core.ste import relu6_act_quantize
+
+Params = Dict[str, jax.Array]
+
+
+def _conv_init(key, kh, kw, cin, cout):
+    fan_in = kh * kw * cin
+    return jax.random.normal(key, (kh, kw, cin, cout), jnp.float32) * (2.0 / fan_in) ** 0.5
+
+
+def _bn_init(c):
+    return {
+        "bnscale": jnp.ones((c,), jnp.float32),
+        "bnbias": jnp.zeros((c,), jnp.float32),
+        "mean": jnp.zeros((c,), jnp.float32),
+        "var": jnp.ones((c,), jnp.float32),
+    }
+
+
+def _conv(x, w, stride=1):
+    return jax.lax.conv_general_dilated(
+        x, w, (stride, stride), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC")
+    )
+
+
+def _bn(p, x, train: bool, momentum=0.9, eps=1e-5):
+    if train:
+        mean = jnp.mean(x, axis=(0, 1, 2))
+        var = jnp.var(x, axis=(0, 1, 2))
+        new_stats = {
+            "mean": momentum * p["mean"] + (1 - momentum) * mean,
+            "var": momentum * p["var"] + (1 - momentum) * var,
+        }
+    else:
+        mean, var = p["mean"], p["var"]
+        new_stats = {"mean": p["mean"], "var": p["var"]}
+    y = (x - mean) * jax.lax.rsqrt(var + eps) * p["bnscale"] + p["bnbias"]
+    return y, new_stats
+
+
+def _act(x, act_bits: int):
+    if act_bits >= 32:
+        return jax.nn.relu(x)
+    return relu6_act_quantize(x, act_bits)
+
+
+def init_resnet20(key, num_classes: int = 10, width: int = 16) -> Params:
+    keys = iter(jax.random.split(key, 64))
+    p: Params = {"conv0": _conv_init(next(keys), 3, 3, 3, width), "bn0": _bn_init(width)}
+    cin = width
+    for stage in range(3):
+        cout = width * (2**stage)
+        for blk in range(3):
+            stride = 2 if (stage > 0 and blk == 0) else 1
+            name = f"s{stage}b{blk}"
+            p[f"{name}_conv1"] = _conv_init(next(keys), 3, 3, cin, cout)
+            p[f"{name}_bn1"] = _bn_init(cout)
+            p[f"{name}_conv2"] = _conv_init(next(keys), 3, 3, cout, cout)
+            p[f"{name}_bn2"] = _bn_init(cout)
+            if stride != 1 or cin != cout:
+                p[f"{name}_proj"] = _conv_init(next(keys), 1, 1, cin, cout)
+                p[f"{name}_bnp"] = _bn_init(cout)
+            cin = cout
+    p["fc"] = jax.random.normal(next(keys), (cin, num_classes), jnp.float32) * (1.0 / cin) ** 0.5
+    p["fc_bias"] = jnp.zeros((num_classes,), jnp.float32)
+    return p
+
+
+def resnet20_forward(
+    p: Params, images: jax.Array, train: bool = False, act_bits: int = 32, width: int = 16
+) -> Tuple[jax.Array, Params]:
+    """images: (B, 32, 32, 3). Returns (logits, new_bn_stats)."""
+    stats: Params = {}
+    x = _conv(images, p["conv0"])
+    x, stats["bn0"] = _bn(p["bn0"], x, train)
+    x = _act(x, act_bits)
+    cin = width
+    for stage in range(3):
+        cout = width * (2**stage)
+        for blk in range(3):
+            stride = 2 if (stage > 0 and blk == 0) else 1
+            name = f"s{stage}b{blk}"
+            sc = x
+            y = _conv(x, p[f"{name}_conv1"], stride)
+            y, stats[f"{name}_bn1"] = _bn(p[f"{name}_bn1"], y, train)
+            y = _act(y, act_bits)
+            y = _conv(y, p[f"{name}_conv2"])
+            y, stats[f"{name}_bn2"] = _bn(p[f"{name}_bn2"], y, train)
+            if f"{name}_proj" in p:
+                sc = _conv(sc, p[f"{name}_proj"], stride)
+                sc, stats[f"{name}_bnp"] = _bn(p[f"{name}_bnp"], sc, train)
+            x = _act(y + sc, act_bits)
+            cin = cout
+    x = jnp.mean(x, axis=(1, 2))
+    return x @ p["fc"] + p["fc_bias"], stats
+
+
+def merge_bn_stats(params: Params, stats: Params) -> Params:
+    out = dict(params)
+    for bn_name, s in stats.items():
+        out[bn_name] = {**params[bn_name], **s}
+    return out
+
+
+def classification_loss(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32))
+    return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=-1))

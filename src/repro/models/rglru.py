@@ -1,0 +1,106 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma, arXiv:2402.19427).
+
+Recurrence (per channel):
+    r_t = sigmoid(x_t W_r + b_r)            # recurrence gate
+    i_t = sigmoid(x_t W_i + b_i)            # input gate
+    a_t = exp(-c * softplus(Lambda) * r_t)  # c = 8
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Train/prefill uses `jax.lax.associative_scan` over the elementwise linear
+recurrence; decode is a single fused step.  The full Griffin block is:
+gate branch (GeLU) x recurrent branch (conv1d -> RG-LRU), then output
+projection.  Recurrence width R = d_model here (paper's lru_width).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import dense_init
+
+Params = Dict[str, jax.Array]
+
+_C = 8.0
+
+
+def rglru_init(key, d_model: int, width: int, conv_w: int = 4) -> Params:
+    k1, k2, k3, k4, k5, k6 = jax.random.split(key, 6)
+    # Lambda init so a^(1/c) ~ U[0.9, 0.999] (paper App. A)
+    u = jax.random.uniform(k6, (width,), minval=0.9, maxval=0.999)
+    lam = jnp.log(jnp.expm1(-jnp.log(u)))  # softplus^{-1}(-log u)
+    return {
+        "w_gate_branch": dense_init(k1, d_model, width),
+        "w_x": dense_init(k2, d_model, width),
+        "conv_w": jax.random.normal(k3, (conv_w, width), jnp.float32) * 0.1,
+        "conv_b": jnp.zeros((width,), jnp.float32),
+        "w_rgate": dense_init(k4, width, width),
+        "b_rgate": jnp.zeros((width,), jnp.float32),
+        "w_igate": dense_init(k5, width, width),
+        "b_igate": jnp.zeros((width,), jnp.float32),
+        "rg_lambda": lam,
+        "w_out": dense_init(jax.random.fold_in(k1, 7), width, d_model),
+    }
+
+
+def _gates(p: Params, xr: jax.Array):
+    r = jax.nn.sigmoid(xr @ p["w_rgate"].astype(xr.dtype) + p["b_rgate"].astype(xr.dtype))
+    i = jax.nn.sigmoid(xr @ p["w_igate"].astype(xr.dtype) + p["b_igate"].astype(xr.dtype))
+    log_a = -_C * jax.nn.softplus(p["rg_lambda"])[None] * r.astype(jnp.float32)
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12))
+    b = beta * (i.astype(jnp.float32) * xr.astype(jnp.float32))
+    return a, b  # f32
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    W = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    out = sum(xp[:, i : i + x.shape[1], :] * w[i][None, None].astype(x.dtype) for i in range(W))
+    return out + b.astype(x.dtype)
+
+
+def rglru_scan(a: jax.Array, b: jax.Array, h0: jax.Array | None = None) -> jax.Array:
+    """h_t = a_t h_{t-1} + b_t along axis 1 via associative scan (f32)."""
+    if h0 is not None:
+        b = b.at[:, 0].add(a[:, 0] * h0)
+
+    def combine(lhs, rhs):
+        a1, b1 = lhs
+        a2, b2 = rhs
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h
+
+
+def rglru_apply(p: Params, x: jax.Array) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
+    """Train/prefill. x: (B,S,D). Returns (y, (h_final, conv_tail))."""
+    gate = jax.nn.gelu(x @ p["w_gate_branch"].astype(x.dtype), approximate=True)
+    xr = x @ p["w_x"].astype(x.dtype)
+    conv_in = xr
+    xr = _causal_conv(xr, p["conv_w"], p["conv_b"])
+    a, b = _gates(p, xr)
+    h = rglru_scan(a, b)
+    y = (gate.astype(jnp.float32) * h).astype(x.dtype)
+    W = p["conv_w"].shape[0]
+    conv_tail = conv_in[:, -(W - 1) :, :]  # state for decode continuation
+    return y @ p["w_out"].astype(x.dtype), (h[:, -1], conv_tail)
+
+
+def rglru_decode(
+    p: Params,
+    x: jax.Array,  # (B, 1, D)
+    h: jax.Array,  # (B, R) f32
+    conv_state: jax.Array,  # (B, W-1, R)
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    gate = jax.nn.gelu(x @ p["w_gate_branch"].astype(x.dtype), approximate=True)
+    xr = (x @ p["w_x"].astype(x.dtype))[:, 0]  # (B, R)
+    window = jnp.concatenate([conv_state, xr[:, None]], axis=1)
+    conv_out = jnp.einsum("bwc,wc->bc", window.astype(jnp.float32), p["conv_w"]) + p["conv_b"]
+    new_conv = window[:, 1:]
+    a, b = _gates(p, conv_out.astype(x.dtype))
+    h_new = a * h + b
+    y = (gate[:, 0].astype(jnp.float32) * h_new).astype(x.dtype)[:, None]
+    return y @ p["w_out"].astype(x.dtype), h_new, new_conv

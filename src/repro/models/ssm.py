@@ -1,0 +1,185 @@
+"""Mamba-2 SSD (state-space duality) block — chunked train/prefill path and
+O(1)-per-token recurrent decode path.
+
+Shapes: d_inner = expand * d_model, H = d_inner // head_dim heads,
+state size N, B/C shared across heads (G = 1 group).  The chunked
+algorithm (Dao & Gu 2024, §6) splits the sequence into chunks of Q
+tokens: quadratic attention-like math within a chunk, a linear recurrence
+across chunk boundaries.  All decay math in f32 (decays are exp of
+non-positive sums, so always in (0, 1]).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import dense_init, rmsnorm
+
+Params = Dict[str, jax.Array]
+
+
+def ssm_dims(d_model: int, expand: int, head_dim: int, state: int):
+    d_inner = expand * d_model
+    n_heads = d_inner // head_dim
+    conv_dim = d_inner + 2 * state  # xs + B + C  (G = 1 group)
+    return d_inner, n_heads, conv_dim
+
+
+def ssm_init(key, d_model: int, expand: int, head_dim: int, state: int, conv_w: int) -> Params:
+    d_inner, H, conv_dim = ssm_dims(d_model, expand, head_dim, state)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        # fused input projection -> [z (d_inner), xBC (conv_dim), dt (H)]
+        "in_proj": dense_init(k1, d_model, 2 * d_inner + 2 * state + H),
+        "conv_w": jax.random.normal(k2, (conv_w, conv_dim), jnp.float32) * 0.1,
+        "conv_b": jnp.zeros((conv_dim,), jnp.float32),
+        "a_log": jnp.log(jnp.arange(1, H + 1, dtype=jnp.float32)),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "d_skip": jnp.ones((H,), jnp.float32),
+        "norm": {"scale": jnp.zeros((d_inner,), jnp.float32)},
+        "out_proj": dense_init(k3, d_inner, d_model),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv along S. x: (B, S, C); w: (W, C)."""
+    W = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    out = sum(xp[:, i : i + x.shape[1], :] * w[i][None, None].astype(x.dtype) for i in range(W))
+    return jax.nn.silu(out + b.astype(x.dtype))
+
+
+def _split(p: Params, x: jax.Array, d_inner: int, state: int, H: int):
+    proj = x @ p["in_proj"].astype(x.dtype)
+    z = proj[..., :d_inner]
+    xBC = proj[..., d_inner : d_inner + d_inner + 2 * state]
+    dt = proj[..., -H:]
+    return z, xBC, dt
+
+
+def ssd_chunked(
+    xs: jax.Array,  # (B, S, H, P)
+    dt: jax.Array,  # (B, S, H) — post-softplus, f32
+    a: jax.Array,  # (H,) negative, f32
+    Bm: jax.Array,  # (B, S, N)
+    Cm: jax.Array,  # (B, S, N)
+    chunk: int = 256,
+    h0: jax.Array | None = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (y (B,S,H,P), final state (B,H,P,N))."""
+    Bsz, S, H, P = xs.shape
+    N = Bm.shape[-1]
+    Q = min(chunk, S)
+    assert S % Q == 0, (S, Q)
+    nc = S // Q
+
+    la = (dt * a[None, None]).astype(jnp.float32).reshape(Bsz, nc, Q, H)  # log-decay
+    cum = jnp.cumsum(la, axis=2)  # inclusive
+    dtx = (xs * dt[..., None].astype(xs.dtype)).reshape(Bsz, nc, Q, H, P)
+    Bc = Bm.reshape(Bsz, nc, Q, N)
+    Cc = Cm.reshape(Bsz, nc, Q, N)
+
+    # --- intra-chunk (quadratic within Q) ---------------------------------
+    # L[q, k] = exp(cum_q - cum_k) for q >= k else 0  (per head)
+    diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # (B,nc,Q,Qk,H)
+    mask = (jnp.arange(Q)[:, None] >= jnp.arange(Q)[None, :])[None, None, :, :, None]
+    # mask BEFORE exp: exp(diff) overflows for the (discarded) j > i
+    # entries, and where(mask, inf, 0) produces NaN *gradients* (0 * inf)
+    L = jnp.exp(jnp.where(mask, diff, -60.0))
+    CB = jnp.einsum("bcqn,bckn->bcqk", Cc.astype(jnp.float32), Bc.astype(jnp.float32))
+    M = CB[..., None] * L  # (B,nc,Q,Qk,H)
+    y_intra = jnp.einsum("bcqkh,bckhp->bcqhp", M.astype(xs.dtype), dtx)
+
+    # --- chunk states and inter-chunk recurrence --------------------------
+    seg_end = jnp.exp(cum[:, :, -1:, :] - cum)  # decay from position k to chunk end
+    S_c = jnp.einsum(
+        "bckn,bckhp->bchpn", Bc.astype(jnp.float32), (dtx.astype(jnp.float32) * seg_end[..., None])
+    )  # (B,nc,H,P,N)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])  # (B,nc,H)
+
+    if h0 is None:
+        h0 = jnp.zeros((Bsz, H, P, N), jnp.float32)
+
+    def step(h, inp):
+        s_c, dec = inp  # (B,H,P,N), (B,H)
+        h_out = h  # state *entering* the chunk
+        h = h * dec[:, :, None, None] + s_c
+        return h, h_out
+
+    hT, h_in = jax.lax.scan(
+        step, h0, (S_c.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2))
+    )
+    h_in = h_in.transpose(1, 0, 2, 3, 4)  # (B,nc,H,P,N) state entering each chunk
+
+    y_inter = jnp.einsum(
+        "bcqn,bcqh,bchpn->bcqhp", Cc.astype(jnp.float32), jnp.exp(cum), h_in
+    ).astype(xs.dtype)
+
+    y = (y_intra + y_inter).reshape(Bsz, S, H, P)
+    return y, hT
+
+
+def ssm_apply(
+    p: Params,
+    x: jax.Array,
+    *,
+    expand: int,
+    head_dim: int,
+    state: int,
+    chunk: int = 256,
+) -> Tuple[jax.Array, jax.Array]:
+    """Train/prefill forward. Returns (y, final_state)."""
+    d_model = x.shape[-1]
+    d_inner, H, conv_dim = ssm_dims(d_model, expand, head_dim, state)
+    z, xBC, dt = _split(p, x, d_inner, state, H)
+    xBC = _causal_conv(xBC, p["conv_w"], p["conv_b"])
+    xs = xBC[..., :d_inner].reshape(*x.shape[:2], H, head_dim)
+    Bm = xBC[..., d_inner : d_inner + state]
+    Cm = xBC[..., d_inner + state :]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    a = -jnp.exp(p["a_log"])
+    y, hT = ssd_chunked(xs, dt, a, Bm, Cm, chunk=chunk)
+    y = y + xs * p["d_skip"][None, None, :, None].astype(xs.dtype)
+    y = y.reshape(*x.shape[:2], d_inner)
+    y = rmsnorm(p["norm"], y * jax.nn.silu(z))
+    return y @ p["out_proj"].astype(x.dtype), hT
+
+
+def ssm_decode(
+    p: Params,
+    x: jax.Array,  # (B, 1, D)
+    ssm_state: jax.Array,  # (B, H, P, N) f32
+    conv_state: jax.Array,  # (B, W-1, conv_dim)
+    *,
+    expand: int,
+    head_dim: int,
+    state: int,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Single-token recurrent step: h' = exp(dt*a) h + dt * x (x) B; y = C.h."""
+    d_model = x.shape[-1]
+    d_inner, H, conv_dim = ssm_dims(d_model, expand, head_dim, state)
+    z, xBC, dt = _split(p, x, d_inner, state, H)
+    xBC = xBC[:, 0]  # (B, conv_dim)
+    # conv over [conv_state ; xBC]
+    W = p["conv_w"].shape[0]
+    window = jnp.concatenate([conv_state, xBC[:, None]], axis=1)  # (B, W, C)
+    conv_out = jnp.einsum("bwc,wc->bc", window.astype(jnp.float32), p["conv_w"]) + p["conv_b"]
+    conv_out = jax.nn.silu(conv_out).astype(x.dtype)
+    new_conv = window[:, 1:]
+    xs = conv_out[..., :d_inner].reshape(-1, H, head_dim)
+    Bm = conv_out[..., d_inner : d_inner + state]
+    Cm = conv_out[..., d_inner + state :]
+    dtv = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])  # (B, H)
+    a = -jnp.exp(p["a_log"])
+    decay = jnp.exp(dtv * a[None])  # (B, H)
+    inp = jnp.einsum(
+        "bhp,bn->bhpn", (xs.astype(jnp.float32) * dtv[..., None]), Bm.astype(jnp.float32)
+    )
+    h = ssm_state * decay[:, :, None, None] + inp
+    y = jnp.einsum("bhpn,bn->bhp", h, Cm.astype(jnp.float32)).astype(x.dtype)
+    y = y + xs * p["d_skip"][None, :, None].astype(xs.dtype)
+    y = y.reshape(-1, 1, d_inner)
+    y = rmsnorm(p["norm"], y * jax.nn.silu(z))
+    return y @ p["out_proj"].astype(x.dtype), h, new_conv

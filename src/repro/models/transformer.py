@@ -1,0 +1,467 @@
+"""Decoder-only LM assembled from a per-layer kind pattern.
+
+The depth is organised as ``n_superblocks`` repetitions of
+``cfg.layer_pattern`` (scanned, params stacked on a leading axis) plus an
+unrolled tail for depths that don't divide the pattern (e.g.
+recurrentgemma's 38 = 12x(rglru,rglru,local) + 2).  Layer kinds:
+"attn", "local", "ssm", "rglru", each optionally "+cross" (VLM image
+cross-attention sublayer).
+
+Inputs are a batch dict: ``tokens (B,S) int32`` or ``embeds (B,S,D)``
+(modality-frontend stub), optional ``cross_embeds (B,T,D)``, and for
+training ``labels (B,S)``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from . import attention as attn_mod
+from . import moe as moe_mod
+from . import rglru as rglru_mod
+from . import ssm as ssm_mod
+from .common import (
+    cross_entropy,
+    dense_init,
+    embed_apply,
+    embed_init,
+    logits_apply,
+    mlp_apply,
+    mlp_init,
+    rmsnorm,
+    rmsnorm_init,
+)
+
+Params = Dict[str, Any]
+
+
+def _base_kind(kind: str) -> str:
+    return kind.split("+")[0]
+
+
+def _has_cross(kind: str) -> bool:
+    return "+cross" in kind
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+
+def _init_layer(key, cfg: ModelConfig, kind: str) -> Params:
+    base = _base_kind(kind)
+    keys = jax.random.split(key, 6)
+    p: Params = {"norm1": rmsnorm_init(cfg.d_model)}
+    hd = cfg.resolved_head_dim
+    if base in ("attn", "local"):
+        p["mixer"] = attn_mod.attn_init(keys[0], cfg.d_model, cfg.n_heads, cfg.n_kv_heads, hd)
+    elif base == "ssm":
+        p["mixer"] = ssm_mod.ssm_init(
+            keys[0], cfg.d_model, cfg.ssm_expand, cfg.ssm_head_dim, cfg.ssm_state, cfg.ssm_conv
+        )
+    elif base == "rglru":
+        p["mixer"] = rglru_mod.rglru_init(keys[0], cfg.d_model, cfg.d_model)
+    else:
+        raise ValueError(f"unknown layer kind {kind!r}")
+    if _has_cross(kind):
+        p["norm_cross"] = rmsnorm_init(cfg.d_model)
+        p["cross"] = attn_mod.attn_init(keys[1], cfg.d_model, cfg.n_heads, cfg.n_kv_heads, hd)
+    if cfg.d_ff > 0:
+        p["norm2"] = rmsnorm_init(cfg.d_model)
+        if cfg.n_experts > 0:
+            p["moe"] = moe_mod.moe_init(
+                keys[2], cfg.d_model, cfg.d_ff, cfg.n_experts, cfg.n_shared_experts, cfg.mlp_type
+            )
+        else:
+            p["mlp"] = mlp_init(keys[2], cfg.d_model, cfg.d_ff, cfg.mlp_type)
+    return p
+
+
+def _init_superblock(key, cfg: ModelConfig) -> Params:
+    keys = jax.random.split(key, len(cfg.layer_pattern))
+    return {f"p{i}": _init_layer(keys[i], cfg, k) for i, k in enumerate(cfg.layer_pattern)}
+
+
+def init_params(key, cfg: ModelConfig) -> Params:
+    k_emb, k_blocks, k_tail, k_head = jax.random.split(key, 4)
+    params: Params = {}
+    params["embed"] = embed_init(k_emb, cfg.padded_vocab, cfg.d_model)
+    nb = cfg.n_superblocks
+    params["blocks"] = jax.vmap(lambda k: _init_superblock(k, cfg))(jax.random.split(k_blocks, nb))
+    if cfg.n_tail_layers:
+        tkeys = jax.random.split(k_tail, cfg.n_tail_layers)
+        params["tail"] = [
+            _init_layer(tkeys[i], cfg, cfg.layer_pattern[i]) for i in range(cfg.n_tail_layers)
+        ]
+    params["final_norm"] = rmsnorm_init(cfg.d_model)
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(k_head, cfg.d_model, cfg.padded_vocab, scale=0.02)
+    return params
+
+
+def param_count(params) -> int:
+    return sum(x.size for x in jax.tree_util.tree_leaves(params))
+
+
+# ---------------------------------------------------------------------------
+# Forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+
+def _apply_layer_fwd(
+    p: Params, x: jax.Array, cfg: ModelConfig, kind: str, cross_src: Optional[jax.Array]
+) -> Tuple[jax.Array, jax.Array, Any]:
+    """Returns (x, aux_loss, cache_seed) for one layer."""
+    base = _base_kind(kind)
+    hd = cfg.resolved_head_dim
+    aux = jnp.zeros((), jnp.float32)
+    h = rmsnorm(p["norm1"], x, cfg.norm_eps)
+    if base in ("attn", "local"):
+        win = cfg.window if base == "local" else None
+        out, (k, v) = attn_mod.attention(
+            p["mixer"], h, n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads, head_dim=hd,
+            rope_theta=cfg.rope_theta, window=win, unroll=not cfg.scan_layers,
+            scores_dtype=jnp.dtype(cfg.attn_scores_dtype),
+        )
+        seed = {"k": k, "v": v}
+    elif base == "ssm":
+        out, hT = ssm_mod.ssm_apply(
+            p["mixer"], h, expand=cfg.ssm_expand, head_dim=cfg.ssm_head_dim,
+            state=cfg.ssm_state, chunk=cfg.ssm_chunk,
+        )
+        W = cfg.ssm_conv
+        # conv tail recomputed cheaply at the prefill->decode handoff
+        seed = {"state": hT, "conv_tail_src": h[:, -(W - 1):, :] if h.shape[1] >= W - 1 else h}
+    elif base == "rglru":
+        out, (hT, conv_tail) = rglru_mod.rglru_apply(p["mixer"], h)
+        seed = {"state": hT, "conv_tail": conv_tail}
+    else:
+        raise ValueError(kind)
+    x = x + out
+    if _has_cross(kind) and cross_src is not None:
+        hc = rmsnorm(p["norm_cross"], x, cfg.norm_eps)
+        x = x + attn_mod.cross_attention(
+            p["cross"], hc, cross_src, n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads, head_dim=hd
+        )
+    if cfg.d_ff > 0:
+        h2 = rmsnorm(p["norm2"], x, cfg.norm_eps)
+        if cfg.n_experts > 0:
+            y, aux = moe_mod.moe_apply(
+                p["moe"], h2, top_k=cfg.top_k, n_experts=cfg.n_experts,
+                capacity_factor=cfg.capacity_factor, mlp_kind=cfg.mlp_type,
+                n_shared=cfg.n_shared_experts,
+            )
+        else:
+            y = mlp_apply(p["mlp"], h2, cfg.mlp_type, cfg.act_bits)
+        x = x + y
+    return x, aux, seed
+
+
+def _superblock_fwd(x, blk: Params, cfg: ModelConfig, cross_src):
+    aux_total = jnp.zeros((), jnp.float32)
+    for i, kind in enumerate(cfg.layer_pattern):
+        x, aux, _ = _apply_layer_fwd(blk[f"p{i}"], x, cfg, kind, cross_src)
+        aux_total = aux_total + aux
+    return x, aux_total
+
+
+def forward(params: Params, batch: Dict[str, jax.Array], cfg: ModelConfig):
+    """Full-sequence forward. Returns (logits (B,S,V), aux_loss)."""
+    dt = cfg.compute_dtype
+    if "embeds" in batch and batch["embeds"] is not None:
+        x = batch["embeds"].astype(dt)
+    else:
+        x = embed_apply(params["embed"], batch["tokens"], dt)
+        x = x * jnp.asarray(cfg.d_model**0.5, dt)
+    cross_src = batch.get("cross_embeds")
+    if cross_src is not None:
+        cross_src = cross_src.astype(dt)
+
+    body = functools.partial(_superblock_fwd, cfg=cfg, cross_src=cross_src)
+    if cfg.remat and cfg.remat_policy != "none":
+        policy = {
+            "nothing": jax.checkpoint_policies.nothing_saveable,
+            "dots": jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+            # save only the wide MLP activations (the dominant recompute)
+            "mlp_names": jax.checkpoint_policies.save_only_these_names("mlp_wide"),
+            # save matmul outputs but stream them to host DRAM: HBM
+            # residency of the saved set goes to ~zero, recompute still
+            # avoided (costs PCIe bandwidth on real hardware)
+            "dots_offload": jax.checkpoint_policies.offload_dot_with_no_batch_dims(
+                "device", "pinned_host"),
+        }[cfg.remat_policy]
+        body = jax.checkpoint(body, policy=policy)
+
+    if cfg.scan_layers:
+        def scan_body(carry, blk):
+            x, aux = carry
+            x, aux_i = body(x, blk)
+            return (x, aux + aux_i), None
+
+        (x, aux), _ = jax.lax.scan(scan_body, (x, jnp.zeros((), jnp.float32)), params["blocks"])
+    else:  # unrolled (dry-run accounting: see ModelConfig.scan_layers)
+        aux = jnp.zeros((), jnp.float32)
+        for b in range(cfg.n_superblocks):
+            blk = jax.tree.map(lambda a: a[b], params["blocks"])
+            x, aux_i = body(x, blk)
+            aux = aux + aux_i
+    for i in range(cfg.n_tail_layers):
+        x, aux_i, _ = _apply_layer_fwd(
+            params["tail"][i], x, cfg, cfg.layer_pattern[i], cross_src
+        )
+        aux = aux + aux_i
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = logits_apply(head, x, cfg.logit_softcap)
+    return logits, aux
+
+
+def loss_fn(params: Params, batch: Dict[str, jax.Array], cfg: ModelConfig):
+    logits, aux = forward(params, batch, cfg)
+    ce = cross_entropy(logits, batch["labels"], cfg.padded_vocab)
+    return ce + cfg.router_aux_weight * aux, {"ce": ce, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# KV / recurrent caches + decode
+# ---------------------------------------------------------------------------
+
+
+def _init_layer_cache(cfg: ModelConfig, kind: str, batch: int, max_len: int, dtype):
+    base = _base_kind(kind)
+    hd = cfg.resolved_head_dim
+    if base == "attn":
+        shape = (batch, max_len, cfg.n_kv_heads, hd)
+        return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+    if base == "local":
+        wc = min(cfg.window, max_len)
+        shape = (batch, wc, cfg.n_kv_heads, hd)
+        return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+    if base == "ssm":
+        d_inner, H, conv_dim = ssm_mod.ssm_dims(
+            cfg.d_model, cfg.ssm_expand, cfg.ssm_head_dim, cfg.ssm_state
+        )
+        return {
+            "state": jnp.zeros((batch, H, cfg.ssm_head_dim, cfg.ssm_state), jnp.float32),
+            "conv": jnp.zeros((batch, cfg.ssm_conv - 1, conv_dim), dtype),
+        }
+    if base == "rglru":
+        return {
+            "state": jnp.zeros((batch, cfg.d_model), jnp.float32),
+            "conv": jnp.zeros((batch, 3, cfg.d_model), dtype),
+        }
+    raise ValueError(kind)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    per_block = {
+        f"p{i}": _init_layer_cache(cfg, k, batch, max_len, dtype)
+        for i, k in enumerate(cfg.layer_pattern)
+    }
+    blocks = jax.tree.map(
+        lambda a: jnp.broadcast_to(a[None], (cfg.n_superblocks,) + a.shape), per_block
+    )
+    cache = {"blocks": blocks}
+    if cfg.n_tail_layers:
+        cache["tail"] = [
+            _init_layer_cache(cfg, cfg.layer_pattern[i], batch, max_len, dtype)
+            for i in range(cfg.n_tail_layers)
+        ]
+    return cache
+
+
+def _apply_layer_decode(p, x, cfg: ModelConfig, kind: str, cache, pos, cross_src):
+    base = _base_kind(kind)
+    hd = cfg.resolved_head_dim
+    h = rmsnorm(p["norm1"], x, cfg.norm_eps)
+    new_cache = dict(cache)
+    if base in ("attn", "local"):
+        ring = base == "local"
+        out, nk, nv = attn_mod.decode_attention_cache(
+            p["mixer"], h, cache["k"], cache["v"], pos,
+            n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads, head_dim=hd,
+            rope_theta=cfg.rope_theta,
+            window=cfg.window if base == "local" else None, ring=ring,
+        )
+        new_cache = {"k": nk, "v": nv}
+    elif base == "ssm":
+        out, hT, conv = ssm_mod.ssm_decode(
+            p["mixer"], h, cache["state"], cache["conv"],
+            expand=cfg.ssm_expand, head_dim=cfg.ssm_head_dim, state=cfg.ssm_state,
+        )
+        new_cache = {"state": hT, "conv": conv}
+    elif base == "rglru":
+        out, hT, conv = rglru_mod.rglru_decode(p["mixer"], h, cache["state"], cache["conv"])
+        new_cache = {"state": hT, "conv": conv}
+    x = x + out
+    if _has_cross(kind) and cross_src is not None:
+        hc = rmsnorm(p["norm_cross"], x, cfg.norm_eps)
+        x = x + attn_mod.cross_attention(
+            p["cross"], hc, cross_src, n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads, head_dim=hd
+        )
+    if cfg.d_ff > 0:
+        h2 = rmsnorm(p["norm2"], x, cfg.norm_eps)
+        if cfg.n_experts > 0:
+            y, _ = moe_mod.moe_apply(
+                p["moe"], h2, top_k=cfg.top_k, n_experts=cfg.n_experts,
+                capacity_factor=cfg.capacity_factor, mlp_kind=cfg.mlp_type,
+                n_shared=cfg.n_shared_experts,
+            )
+        else:
+            y = mlp_apply(p["mlp"], h2, cfg.mlp_type, cfg.act_bits)
+        x = x + y
+    return x, new_cache
+
+
+def decode_step(
+    params: Params,
+    cache,
+    tokens: jax.Array,  # (B, 1) int32 or embeds (B, 1, D)
+    pos: jax.Array,  # scalar int32
+    cfg: ModelConfig,
+    cross_embeds: Optional[jax.Array] = None,
+):
+    """One decode step for the whole model. Returns (logits (B,V), cache)."""
+    dt = cfg.compute_dtype
+    if tokens.ndim == 3:
+        x = tokens.astype(dt)
+    else:
+        x = embed_apply(params["embed"], tokens, dt) * jnp.asarray(cfg.d_model**0.5, dt)
+    cross_src = None if cross_embeds is None else cross_embeds.astype(dt)
+
+    def scan_body(x, inp):
+        blk, blk_cache = inp
+        new_cache = {}
+        for i, kind in enumerate(cfg.layer_pattern):
+            x, new_cache[f"p{i}"] = _apply_layer_decode(
+                blk[f"p{i}"], x, cfg, kind, blk_cache[f"p{i}"], pos, cross_src
+            )
+        return x, new_cache
+
+    if cfg.scan_layers:
+        x, new_blocks = jax.lax.scan(scan_body, x, (params["blocks"], cache["blocks"]))
+    else:
+        outs = []
+        for b in range(cfg.n_superblocks):
+            blk = jax.tree.map(lambda a: a[b], params["blocks"])
+            blk_cache = jax.tree.map(lambda a: a[b], cache["blocks"])
+            x, nc = scan_body(x, (blk, blk_cache))
+            outs.append(nc)
+        new_blocks = jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
+    new_cache = {"blocks": new_blocks}
+    if cfg.n_tail_layers:
+        new_tail = []
+        for i in range(cfg.n_tail_layers):
+            x, c = _apply_layer_decode(
+                params["tail"][i], x, cfg, cfg.layer_pattern[i], cache["tail"][i], pos, cross_src
+            )
+            new_tail.append(c)
+        new_cache["tail"] = new_tail
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = logits_apply(head, x, cfg.logit_softcap)
+    return logits[:, 0], new_cache
+
+
+# ---------------------------------------------------------------------------
+# Prefill: run forward and seed the decode cache
+# ---------------------------------------------------------------------------
+
+
+def prefill(params: Params, batch: Dict[str, jax.Array], cfg: ModelConfig, max_len: int,
+            cache_dtype=jnp.bfloat16):
+    """Full-sequence prefill that also populates a decode cache.
+
+    Returns (last_token_logits, cache, seq_len).  Implemented by running
+    the layer-level forward unscanned per superblock (cache seeds need to
+    escape the scan), so it's used for serving, not the train step.
+    """
+    dt = cfg.compute_dtype
+    if "embeds" in batch and batch["embeds"] is not None:
+        x = batch["embeds"].astype(dt)
+        B, S = x.shape[0], x.shape[1]
+    else:
+        B, S = batch["tokens"].shape
+        x = embed_apply(params["embed"], batch["tokens"], dt) * jnp.asarray(cfg.d_model**0.5, dt)
+    cross_src = batch.get("cross_embeds")
+    if cross_src is not None:
+        cross_src = cross_src.astype(dt)
+    cache = init_cache(cfg, B, max_len, cache_dtype)
+
+    # Unrolled over superblocks (prefill compiles once per shape; the
+    # unroll is acceptable for the serving path and keeps seeds reachable).
+    blocks = params["blocks"]
+    new_blocks = []
+    aux = jnp.zeros((), jnp.float32)
+    for b in range(cfg.n_superblocks):
+        blk = jax.tree.map(lambda a: a[b], blocks)
+        blk_cache = jax.tree.map(lambda a: a[b], cache["blocks"])
+        ncache = {}
+        for i, kind in enumerate(cfg.layer_pattern):
+            x, aux_i, seed = _apply_layer_fwd(blk[f"p{i}"], x, cfg, kind, cross_src)
+            aux = aux + aux_i
+            ncache[f"p{i}"] = _seed_layer_cache(
+                blk[f"p{i}"], cfg, kind, seed, blk_cache[f"p{i}"], S, cache_dtype
+            )
+        new_blocks.append(ncache)
+    cache["blocks"] = jax.tree.map(lambda *xs: jnp.stack(xs), *new_blocks)
+    if cfg.n_tail_layers:
+        new_tail = []
+        for i in range(cfg.n_tail_layers):
+            x, aux_i, seed = _apply_layer_fwd(params["tail"][i], x, cfg,
+                                              cfg.layer_pattern[i], cross_src)
+            new_tail.append(
+                _seed_layer_cache(params["tail"][i], cfg, cfg.layer_pattern[i],
+                                  seed, cache["tail"][i], S, cache_dtype)
+            )
+        cache["tail"] = new_tail
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = logits_apply(head, x[:, -1:], cfg.logit_softcap)
+    return logits[:, 0], cache
+
+
+def _seed_layer_cache(layer_params, cfg: ModelConfig, kind, seed, layer_cache, S, cache_dtype):
+    base = _base_kind(kind)
+    if base == "attn":
+        k, v = seed["k"].astype(cache_dtype), seed["v"].astype(cache_dtype)
+        return {
+            "k": jax.lax.dynamic_update_slice_in_dim(layer_cache["k"], k, 0, axis=1),
+            "v": jax.lax.dynamic_update_slice_in_dim(layer_cache["v"], v, 0, axis=1),
+        }
+    if base == "local":
+        wc = layer_cache["k"].shape[1]
+        k, v = seed["k"], seed["v"]
+        take = min(wc, S)
+        pos = jnp.arange(S - take, S)
+        slots = pos % wc
+        return {
+            "k": layer_cache["k"].at[:, slots].set(k[:, S - take:].astype(cache_dtype)),
+            "v": layer_cache["v"].at[:, slots].set(v[:, S - take:].astype(cache_dtype)),
+        }
+    if base == "ssm":
+        # state carried exactly; conv state = last W-1 post-norm inputs'
+        # xBC projection (recomputed here — cheap: (W-1) tokens).
+        W = cfg.ssm_conv
+        h_tail = seed["conv_tail_src"]
+        p = layer_params["mixer"]
+        d_inner, H, conv_dim = ssm_mod.ssm_dims(
+            cfg.d_model, cfg.ssm_expand, cfg.ssm_head_dim, cfg.ssm_state
+        )
+        proj = h_tail @ p["in_proj"].astype(h_tail.dtype)
+        xBC = proj[..., d_inner : d_inner + conv_dim]
+        pad = (W - 1) - xBC.shape[1]
+        if pad > 0:
+            xBC = jnp.pad(xBC, ((0, 0), (pad, 0), (0, 0)))
+        return {"state": seed["state"], "conv": xBC.astype(cache_dtype)}
+    if base == "rglru":
+        conv = seed["conv_tail"]
+        pad = 3 - conv.shape[1]
+        if pad > 0:
+            conv = jnp.pad(conv, ((0, 0), (pad, 0), (0, 0)))
+        return {"state": seed["state"], "conv": conv.astype(cache_dtype)}
+    return layer_cache

@@ -1,0 +1,9 @@
+from .optimizers import (  # noqa: F401
+    AdamW,
+    SGDM,
+    clip_by_global_norm,
+    cosine_warmup,
+    global_norm,
+    project_bitplanes,
+    step_decay,
+)

@@ -1,0 +1,128 @@
+"""Optimizers (built from scratch — no optax in this environment).
+
+SGD+momentum is the paper's optimizer (App. A: momentum 0.9, wd 1e-4);
+AdamW is provided for the LM-scale runs.  All are functional:
+``init(params) -> state``; ``update(grads, state, params, lr) ->
+(new_params, new_state)``.  The BSQ projection step (trim bit-planes to
+[0, 2] after each update — paper §3.1) is applied by the train step via
+:func:`project_bitplanes`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+def global_norm(tree: PyTree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(grads: PyTree, max_norm: float) -> Tuple[PyTree, jax.Array]:
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), norm
+
+
+@dataclasses.dataclass(frozen=True)
+class SGDM:
+    momentum: float = 0.9
+    weight_decay: float = 1e-4
+    nesterov: bool = False
+
+    def init(self, params: PyTree) -> PyTree:
+        return jax.tree.map(jnp.zeros_like, params)
+
+    def update(self, grads, state, params, lr):
+        def upd(g, m, p):
+            g = g + self.weight_decay * p
+            m_new = self.momentum * m + g
+            step = (self.momentum * m_new + g) if self.nesterov else m_new
+            return p - lr * step, m_new
+
+        out = jax.tree.map(upd, grads, state, params)
+        new_params = jax.tree.map(lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_state = jax.tree.map(lambda t: t[1], out, is_leaf=lambda x: isinstance(x, tuple))
+        return new_params, new_state
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+
+    def init(self, params: PyTree) -> Dict[str, PyTree]:
+        return {
+            "mu": jax.tree.map(jnp.zeros_like, params),
+            "nu": jax.tree.map(jnp.zeros_like, params),
+            "count": jnp.zeros((), jnp.int32),
+        }
+
+    def update(self, grads, state, params, lr):
+        count = state["count"] + 1
+        c1 = 1.0 - self.b1 ** count.astype(jnp.float32)
+        c2 = 1.0 - self.b2 ** count.astype(jnp.float32)
+
+        def upd(g, mu, nu, p):
+            g32 = g.astype(jnp.float32)
+            mu_new = self.b1 * mu + (1 - self.b1) * g32
+            nu_new = self.b2 * nu + (1 - self.b2) * g32 * g32
+            step = (mu_new / c1) / (jnp.sqrt(nu_new / c2) + self.eps)
+            p_new = p - lr * (step + self.weight_decay * p.astype(jnp.float32)).astype(p.dtype)
+            return p_new, mu_new, nu_new
+
+        out = jax.tree.map(upd, grads, state["mu"], state["nu"], params)
+        pick = lambda i: jax.tree.map(lambda t: t[i], out, is_leaf=lambda x: isinstance(x, tuple))
+        return pick(0), {"mu": pick(1), "nu": pick(2), "count": count}
+
+
+# ---------------------------------------------------------------------------
+# Schedules
+# ---------------------------------------------------------------------------
+
+
+def step_decay(base_lr: float, boundaries, factor: float = 0.1) -> Callable[[jax.Array], jax.Array]:
+    """Paper's schedule: decay by `factor` at each boundary step."""
+
+    def fn(step):
+        lr = jnp.asarray(base_lr, jnp.float32)
+        for b in boundaries:
+            lr = jnp.where(step >= b, lr * factor, lr)
+        return lr
+
+    return fn
+
+
+def cosine_warmup(base_lr: float, warmup: int, total: int, floor: float = 0.1):
+    def fn(step):
+        step = step.astype(jnp.float32)
+        warm = base_lr * step / max(warmup, 1)
+        frac = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = base_lr * (floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * frac)))
+        return jnp.where(step < warmup, warm, cos)
+
+    return fn
+
+
+# ---------------------------------------------------------------------------
+# BSQ-specific projection (paper §3.1: trim planes to [0, 2] post-step)
+# ---------------------------------------------------------------------------
+
+
+def project_bitplanes(reps: Dict[str, Any]) -> Dict[str, Any]:
+    import dataclasses as dc
+
+    out = {}
+    for k, r in reps.items():
+        out[k] = dc.replace(
+            r, wp=jnp.clip(r.wp, 0.0, 2.0), wn=jnp.clip(r.wn, 0.0, 2.0),
+            scale=jnp.maximum(r.scale, 1e-8),
+        )
+    return out

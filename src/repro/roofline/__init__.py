@@ -1,0 +1,2 @@
+from . import analysis, hw  # noqa: F401
+from .analysis import RooflineTerms, analyze, collective_bytes  # noqa: F401

@@ -1,0 +1,199 @@
+"""Roofline terms from a compiled dry-run artifact (no real hardware).
+
+  compute    = HLO_FLOPs_per_device / peak_FLOP/s
+  memory     = HLO_bytes_per_device / HBM_bw
+  collective = collective_bytes_per_device / link_bw
+
+``cost_analysis()`` provides flops/bytes of the (post-SPMD, per-device)
+module; collective bytes are NOT in cost_analysis, so we parse the
+compiled HLO text and sum the *output operand* sizes of every
+all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute op (a per-device lower bound on wire bytes; ring
+algorithms move ~2x for all-reduce — we report raw operand bytes and
+note the convention).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict
+
+from . import hw
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+
+_COLLECTIVE_KINDS = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+# e.g.:  %all-gather.3 = bf16[4,2048]{1,0} all-gather(...)
+#        ROOT %x = (f32[8]{0}, f32[8]{0}) all-reduce(...)
+_OP_RE = re.compile(
+    r"=\s*(?P<shapes>\([^)]*\)|[a-z0-9]+\[[^\]]*\](?:\{[^}]*\})?)\s*"
+    r"(?P<kind>" + "|".join(_COLLECTIVE_KINDS) + r")(?:-start|-done)?\("
+)
+_SHAPE_RE = re.compile(r"(?P<dtype>[a-z0-9]+)\[(?P<dims>[0-9,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt = m.group("dtype")
+        if dt not in _DTYPE_BYTES:
+            continue
+        dims = m.group("dims")
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Per-collective-kind output bytes of one device's module.
+
+    '-start' ops are counted; their '-done' twins are skipped (the regex
+    only matches ops whose result is the collective itself, and `-done`
+    ops produce the same buffer — we de-dup by only counting `-start` when
+    both appear on the same value id).
+    """
+    out: Dict[str, int] = {k: 0 for k in _COLLECTIVE_KINDS}
+    seen_done_sources = set()
+    for line in hlo_text.splitlines():
+        if "-done(" in line:
+            continue  # async completion: buffer already counted at -start
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        out[m.group("kind")] += _shape_bytes(m.group("shapes"))
+    return out
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    flops_per_device: float
+    bytes_per_device: float
+    collective_bytes_per_device: float
+    collectives: Dict[str, int]
+    n_devices: int
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops_per_device / hw.PEAK_FLOPS_BF16
+
+    @property
+    def memory_s(self) -> float:
+        return self.bytes_per_device / hw.HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        return self.collective_bytes_per_device / hw.ICI_LINK_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_lower_bound_s(self) -> float:
+        """Perfect-overlap model: the slowest term bounds the step."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    def roofline_fraction(self, model_flops_per_device: float) -> float:
+        """Useful-FLOPs MFU bound implied by the dominant term."""
+        t = self.step_time_lower_bound_s
+        if t <= 0:
+            return 0.0
+        return (model_flops_per_device / t) / hw.PEAK_FLOPS_BF16
+
+    def to_dict(self) -> dict:
+        return {
+            "flops_per_device": self.flops_per_device,
+            "bytes_per_device": self.bytes_per_device,
+            "collective_bytes_per_device": self.collective_bytes_per_device,
+            "collectives": self.collectives,
+            "n_devices": self.n_devices,
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "bottleneck": self.bottleneck,
+        }
+
+
+def analyze(compiled, n_devices: int) -> RooflineTerms:
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):
+        cost = cost[0]
+    flops = float(cost.get("flops", 0.0))
+    byts = float(cost.get("bytes accessed", 0.0))
+    coll = collective_bytes(compiled.as_text())
+    return RooflineTerms(
+        flops_per_device=flops,
+        bytes_per_device=byts,
+        collective_bytes_per_device=float(sum(coll.values())),
+        collectives=coll,
+        n_devices=n_devices,
+    )
+
+
+_ANY_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*"
+    r"(?P<shapes>\([^)]*\)|[a-z0-9]+\[[^\]]*\](?:\{[^}]*\})?)\s*"
+    r"(?P<kind>[\w\-]+)\("
+)
+
+
+def op_byte_profile(hlo_text: str, top_k: int = 20):
+    """Aggregate HLO output bytes by op kind — the dry-run 'profiler'.
+
+    This is where §Perf hypotheses come from: which op family moves the
+    bytes (fusions = fused elementwise chains, dot, all-*, copy/transpose
+    = layout churn, ...).  Output bytes only (operand bytes double-count
+    producers), so the total is a lower bound on 'bytes accessed'.
+    """
+    agg: Dict[str, int] = {}
+    counts: Dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        m = _ANY_OP_RE.match(line)
+        if not m:
+            continue
+        kind = m.group("kind")
+        b = _shape_bytes(m.group("shapes"))
+        agg[kind] = agg.get(kind, 0) + b
+        counts[kind] = counts.get(kind, 0) + 1
+    top = sorted(agg.items(), key=lambda kv: -kv[1])[:top_k]
+    return [(k, v, counts[k]) for k, v in top]
+
+
+def biggest_ops(hlo_text: str, top_k: int = 15):
+    """The individual largest-output instructions (name, kind, bytes)."""
+    out = []
+    for line in hlo_text.splitlines():
+        m = _ANY_OP_RE.match(line)
+        if not m:
+            continue
+        out.append((m.group("kind"), _shape_bytes(m.group("shapes")), line.strip()[:120]))
+    out.sort(key=lambda t: -t[1])
+    return out[:top_k]
+
+
+def model_flops(n_params_active: float, tokens: float) -> float:
+    """MODEL_FLOPS = 6*N*D (training) — use 2*N*D for inference."""
+    return 6.0 * n_params_active * tokens
+
+
+def model_flops_inference(n_params_active: float, tokens: float) -> float:
+    return 2.0 * n_params_active * tokens

@@ -1,0 +1,7 @@
+"""TPU v5e hardware constants for roofline math (per system constants)."""
+
+PEAK_FLOPS_BF16 = 197e12  # FLOP/s per chip
+HBM_BW = 819e9  # bytes/s per chip
+ICI_LINK_BW = 50e9  # bytes/s per link
+VMEM_BYTES = 128 * 2**20  # ~128 MiB on v5e (for BlockSpec sanity checks)
+HBM_BYTES = 16 * 2**30

@@ -1,0 +1,1 @@
+from .engine import Request, Result, ServeEngine, dequantize_packed_params  # noqa: F401

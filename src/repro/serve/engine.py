@@ -1,0 +1,116 @@
+"""Batched serving engine over BSQ-quantised (packed) weights.
+
+Pipeline: requests -> length-bucketed batches -> jitted prefill ->
+jitted decode loop (token-at-a-time, greedy or temperature sampling).
+
+Weights arrive either as plain float params or as a BSQ export
+(``core.export_packed``): packed weights are dequantised on the fly by
+``kernels.ops.bitserial_matmul`` (Pallas on TPU, fused-unpack XLA ref
+path elsewhere), so HBM reads scale with the *mixed-precision* bit count
+— the serving-side payoff of the paper's compression (DESIGN.md §3.2).
+
+Bucketing: one compiled program per (prompt_len_bucket, batch) shape;
+requests inside a bucket share positions, so the per-request position
+bookkeeping stays scalar.  (Production continuous batching would add
+per-slot positions; bucketing keeps this engine compact and jit-clean.)
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ModelConfig
+from ..models import transformer
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    tokens: np.ndarray  # (S,) int32 prompt
+    max_new: int = 32
+    temperature: float = 0.0  # 0 => greedy
+
+
+@dataclasses.dataclass
+class Result:
+    uid: int
+    tokens: np.ndarray
+    prefill_ms: float
+    decode_ms_per_tok: float
+
+
+class ServeEngine:
+    def __init__(self, params, cfg: ModelConfig, max_len: int = 4096, seed: int = 0):
+        self.params = params
+        self.cfg = cfg
+        self.max_len = max_len
+        self.key = jax.random.PRNGKey(seed)
+        self._prefill = jax.jit(
+            lambda p, batch: transformer.prefill(p, batch, cfg, max_len),
+        )
+        self._decode = jax.jit(
+            lambda p, cache, tok, pos: transformer.decode_step(p, cache, tok, pos, cfg)
+        )
+
+    # -- sampling ---------------------------------------------------------
+    def _sample(self, logits: jax.Array, temperature: float) -> jax.Array:
+        logits = logits[:, : self.cfg.vocab_size]  # mask padded vocab rows
+        if temperature <= 0.0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        self.key, sub = jax.random.split(self.key)
+        return jax.random.categorical(sub, logits / temperature, axis=-1).astype(jnp.int32)
+
+    # -- batching ---------------------------------------------------------
+    @staticmethod
+    def _buckets(requests: List[Request]) -> Dict[int, List[Request]]:
+        out: Dict[int, List[Request]] = {}
+        for r in requests:
+            out.setdefault(len(r.tokens), []).append(r)
+        return out
+
+    def generate(self, requests: List[Request]) -> List[Result]:
+        results = []
+        for plen, bucket in self._buckets(requests).items():
+            results.extend(self._run_bucket(plen, bucket))
+        return results
+
+    def _run_bucket(self, plen: int, bucket: List[Request]) -> List[Result]:
+        B = len(bucket)
+        prompts = jnp.asarray(np.stack([r.tokens for r in bucket]))
+        max_new = max(r.max_new for r in bucket)
+        t0 = time.perf_counter()
+        logits, cache = self._prefill(self.params, {"tokens": prompts})
+        jax.block_until_ready(logits)
+        prefill_ms = (time.perf_counter() - t0) * 1e3
+        temp = bucket[0].temperature
+        tok = self._sample(logits, temp)
+        out_toks = [tok]
+        t1 = time.perf_counter()
+        for t in range(max_new - 1):
+            logits, cache = self._decode(self.params, cache, tok[:, None], jnp.int32(plen + t))
+            tok = self._sample(logits, temp)
+            out_toks.append(tok)
+        jax.block_until_ready(tok)
+        decode_ms = (time.perf_counter() - t1) * 1e3 / max(max_new - 1, 1)
+        gen = np.asarray(jnp.stack(out_toks, axis=1))
+        return [
+            Result(r.uid, gen[i, : r.max_new], prefill_ms, decode_ms)
+            for i, r in enumerate(bucket)
+        ]
+
+
+def dequantize_packed_params(template, packed: Dict[str, "object"], floats: Dict[str, jax.Array]):
+    """Materialise a float param tree from a BSQ packed export (ref path —
+    the Pallas path dequantises inside the matmul instead)."""
+    from ..core.bsq import merge_params
+    from ..core.packing import unpack_to_float
+
+    flat = {}
+    for name, pw in packed.items():
+        flat[name] = unpack_to_float(pw)
+    return merge_params(template, flat, floats)

@@ -1,0 +1,12 @@
+from .ft import FailureDetector, Heartbeat  # noqa: F401
+from .step import (  # noqa: F401
+    BSQTrainContext,
+    init_bsq_state,
+    init_plain_state,
+    make_bsq_train_step,
+    make_compressed_dp_step,
+    make_plain_train_step,
+    make_requant_step,
+    state_reps,
+)
+from .trainer import StragglerMonitor, TrainerConfig, simple_train_loop, train_bsq  # noqa: F401

@@ -1,0 +1,121 @@
+"""End-to-end BSQ behaviour on small models — the paper's qualitative
+claims C3 (alpha controls compression), C1 at the training level (requant
+doesn't change the loss), plus the finetune/QAT path."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import reduced_config
+from repro.core import BSQConfig, extract_scheme
+from repro.core.bsq import merge_params, partition_params
+from repro.core.qat import apply_scheme_dorefa
+from repro.models import loss_fn
+from repro.models.frontends import synthetic_batch
+from repro.optim import SGDM, step_decay
+from repro.train.step import (
+    bsq_loss,
+    init_bsq_state,
+    make_bsq_train_step,
+    make_requant_step,
+    state_reps,
+)
+
+
+def _run_bsq(alpha, steps=60, arch="granite-3-2b", seed=0, reweigh=True, lr=0.5):
+    cfg = reduced_config(arch)
+    bsq_cfg = BSQConfig(n_init=8, alpha=alpha, reweigh=reweigh, mode="static",
+                        compute_dtype=jnp.float32)
+    opt = SGDM()
+    state, ctx = init_bsq_state(jax.random.PRNGKey(seed), cfg, bsq_cfg, opt)
+    step = jax.jit(make_bsq_train_step(ctx, opt, step_decay(lr, [1000])))
+    requant = jax.jit(make_requant_step(ctx))
+    batch = synthetic_batch(cfg, 4, 16, seed=seed)
+    for i in range(steps):
+        state, m = step(state, batch)
+        if (i + 1) % 20 == 0:
+            state = requant(state)
+    state = requant(state)
+    scheme = extract_scheme(state_reps(state, ctx))
+    return state, ctx, scheme, float(m["ce"])
+
+
+def test_alpha_controls_compression():
+    """Paper Table 1: larger alpha => fewer bits per parameter."""
+    _, _, s_lo, _ = _run_bsq(alpha=1e-3)
+    _, _, s_hi, _ = _run_bsq(alpha=2.0)
+    assert s_hi.bits_per_param < s_lo.bits_per_param
+    assert s_hi.compression > s_lo.compression
+
+
+def test_requant_preserves_loss():
+    """Paper §3.3: sW_q unchanged by requantisation => same CE loss."""
+    cfg = reduced_config("granite-3-2b")
+    bsq_cfg = BSQConfig(n_init=8, alpha=5e-3, mode="static", compute_dtype=jnp.float32)
+    opt = SGDM()
+    state, ctx = init_bsq_state(jax.random.PRNGKey(0), cfg, bsq_cfg, opt)
+    step = jax.jit(make_bsq_train_step(ctx, opt, step_decay(0.05, [1000])))
+    requant = jax.jit(make_requant_step(ctx))
+    batch = synthetic_batch(cfg, 4, 16)
+    for _ in range(5):
+        state, _ = step(state, batch)
+    l_before, _ = bsq_loss(state["trainable"], state["masks"], batch, ctx)
+    state2 = requant(state)
+    l_after, _ = bsq_loss(state2["trainable"], state2["masks"], batch, ctx)
+    np.testing.assert_allclose(float(l_before), float(l_after), rtol=1e-4)
+
+
+def test_training_reduces_ce():
+    cfg = reduced_config("granite-3-2b")
+    bsq_cfg = BSQConfig(n_init=8, alpha=1e-4, mode="static", compute_dtype=jnp.float32)
+    opt = SGDM()
+    state, ctx = init_bsq_state(jax.random.PRNGKey(0), cfg, bsq_cfg, opt)
+    step = jax.jit(make_bsq_train_step(ctx, opt, step_decay(0.5, [1000])))
+    batch = synthetic_batch(cfg, 4, 16)
+    _, m0 = step(state, batch)
+    for _ in range(30):
+        state, m = step(state, batch)
+    assert float(m["ce"]) < float(m0["ce"])
+
+
+def test_planes_stay_in_range():
+    state, ctx, _, _ = _run_bsq(alpha=5e-3, steps=25)
+    for rep in state["trainable"]["reps"].values():
+        assert float(jnp.min(rep["wp"])) >= 0.0
+        assert float(jnp.max(rep["wp"])) <= 2.0
+        assert float(jnp.min(rep["wn"])) >= 0.0
+        assert float(jnp.max(rep["wn"])) <= 2.0
+
+
+def test_scheme_applies_via_dorefa_qat():
+    """Finetune path: the frozen scheme quantises a fresh model (Table 1
+    'train from scratch' baseline machinery)."""
+    state, ctx, scheme, _ = _run_bsq(alpha=5e-3, steps=20)
+    cfg = ctx.cfg
+    from repro.models import init_params
+
+    params = init_params(jax.random.PRNGKey(7), cfg)
+    qp, fp = partition_params(params)
+    wq = apply_scheme_dorefa(qp, scheme)
+    q_params = merge_params(params, wq, fp)
+    batch = synthetic_batch(cfg, 2, 16)
+    loss, _ = loss_fn(q_params, batch, cfg)
+    assert np.isfinite(float(loss))
+    # quantised values per tensor bounded by the scheme's level count
+    for name, w in wq.items():
+        bits = scheme.bits[name]
+        if bits.ndim == 0 and int(bits) > 0:
+            n_vals = len(np.unique(np.asarray(w)))
+            assert n_vals <= 2 ** int(bits) + 1
+
+
+def test_moe_arch_bsq_trains():
+    """BSQ on per-expert groups (DESIGN §5) — one step must be finite."""
+    state, ctx, scheme, ce = _run_bsq(alpha=5e-3, steps=8, arch="qwen2-moe-a2.7b")
+    assert np.isfinite(ce)
+    # expert tensors got per-(layer, expert) groups
+    ga = [g for name, (n, g) in ctx.meta.items()
+          if "/moe/" in name and "/shared/" not in name]
+    assert ga and all(len(g) == 2 for g in ga)  # per-(layer, expert) groups

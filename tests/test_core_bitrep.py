@@ -1,0 +1,67 @@
+"""Core bit-representation: decomposition, reconstruction, STE (paper §3.1)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    bitrep_forward,
+    decompose,
+    effective_bits,
+    extract_scale,
+    int_to_planes,
+    planes_to_int,
+    reconstruct_exact,
+)
+
+
+def test_int_planes_roundtrip():
+    q = jnp.arange(256).reshape(16, 16)
+    planes = int_to_planes(q, 8)
+    assert planes.shape == (8, 16, 16)
+    np.testing.assert_array_equal(planes_to_int(planes), q)
+
+
+@pytest.mark.parametrize("n_bits", [2, 4, 8])
+@pytest.mark.parametrize("shape,group_axes", [((32, 16), ()), ((4, 16, 8), (0,)), ((2, 3, 8, 8), (0, 1))])
+def test_decompose_roundtrip_error_bound(n_bits, shape, group_axes):
+    w = jax.random.normal(jax.random.PRNGKey(0), shape) * 0.5
+    rep = decompose(w, n_bits, group_axes=group_axes)
+    wr = reconstruct_exact(rep)
+    bound = np.asarray(rep.scale) / (2**n_bits - 1) / 2 * (1 + 1e-5)
+    assert np.all(np.abs(np.asarray(wr - w)) <= bound)
+
+
+def test_scale_is_per_group_max():
+    w = jnp.stack([jnp.ones((4, 4)) * 3.0, jnp.ones((4, 4)) * 0.5])
+    s = extract_scale(w, (0,))
+    np.testing.assert_allclose(np.asarray(s).ravel(), [3.0, 0.5])
+
+
+def test_zero_group_scale_guard():
+    w = jnp.zeros((2, 4, 4)).at[1].set(1.0)
+    rep = decompose(w, 4, group_axes=(0,))
+    assert np.all(np.isfinite(np.asarray(reconstruct_exact(rep))))
+
+
+def test_headroom_plane_allocated_and_masked():
+    w = jax.random.normal(jax.random.PRNGKey(1), (8, 8))
+    rep = decompose(w, 4)  # n_max defaults to 5
+    assert rep.wp.shape[0] == 5
+    assert float(rep.mask[4].max()) == 0.0
+    assert np.asarray(effective_bits(rep)) == 4
+
+
+def test_signs_split_into_wp_wn():
+    w = jnp.array([[0.5, -0.5]])
+    rep = decompose(w, 3)
+    # positive element only in wp, negative only in wn
+    assert float(rep.wp[:, 0, 1].sum()) == 0.0
+    assert float(rep.wn[:, 0, 0].sum()) == 0.0
+
+
+def test_bitrep_forward_equals_exact_for_binary_planes():
+    w = jax.random.normal(jax.random.PRNGKey(2), (16, 16))
+    rep = decompose(w, 6)
+    f = bitrep_forward(rep.wp, rep.wn, rep.scale, rep.mask, rep.n_denom)
+    np.testing.assert_allclose(np.asarray(f), np.asarray(reconstruct_exact(rep)), atol=1e-6)

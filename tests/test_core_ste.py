@@ -1,0 +1,69 @@
+"""STE gradients — paper claim C2: dL/dW_s^(b) = 2^b/(2^n-1) * dL/dW_q (Eq. 3)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import decompose, dorefa_weight, pact_act_quantize, relu6_act_quantize
+from repro.core.ste import bitrep_forward, ste_round, uniform_quantize
+
+
+def test_ste_round_gradient_is_identity():
+    g = jax.grad(lambda x: jnp.sum(ste_round(x) * 3.0))(jnp.linspace(-2, 2, 11))
+    np.testing.assert_allclose(np.asarray(g), 3.0)
+
+
+def test_bit_gradient_matches_eq3():
+    """The bit-plane b gradient must be exactly 2^b/(2^n-1) * upstream."""
+    n = 6
+    w = jax.random.normal(jax.random.PRNGKey(0), (8, 8)) * 0.3
+    rep = decompose(w, n, n_max=n)
+    upstream = jax.random.normal(jax.random.PRNGKey(1), (8, 8))
+
+    def f(wp):
+        return jnp.sum(bitrep_forward(wp, rep.wn, rep.scale, rep.mask, n) * upstream)
+
+    g = jax.grad(f)(rep.wp)
+    for b in range(n):
+        expected = np.asarray(rep.scale * upstream) * (2.0**b) / (2.0**n - 1.0)
+        np.testing.assert_allclose(np.asarray(g[b]), expected, rtol=1e-5)
+
+
+def test_masked_planes_get_zero_gradient():
+    n = 4
+    w = jax.random.normal(jax.random.PRNGKey(0), (4, 4))
+    rep = decompose(w, n)  # plane n is masked headroom
+    g = jax.grad(
+        lambda wp: jnp.sum(bitrep_forward(wp, rep.wn, rep.scale, rep.mask, rep.n_denom))
+    )(rep.wp)
+    np.testing.assert_allclose(np.asarray(g[n]), 0.0)
+
+
+@pytest.mark.parametrize("k", [1, 2, 4, 8])
+def test_uniform_quantize_levels(k):
+    x = jnp.linspace(0, 1, 300)
+    q = uniform_quantize(x, k)
+    assert len(np.unique(np.asarray(q))) <= 2**k
+    assert float(jnp.max(jnp.abs(q - x))) <= 0.5 / (2**k - 1) + 1e-6
+
+
+def test_dorefa_range_and_zero_bits():
+    w = jax.random.normal(jax.random.PRNGKey(0), (32, 32))
+    for k in (1, 2, 3):
+        q = dorefa_weight(w, k)
+        assert float(jnp.max(jnp.abs(q))) <= 1.0 + 1e-6
+    np.testing.assert_array_equal(np.asarray(dorefa_weight(w, 0)), 0.0)
+    np.testing.assert_array_equal(np.asarray(dorefa_weight(w, 32)), np.asarray(w))
+
+
+def test_relu6_act_quantize():
+    x = jnp.array([-1.0, 0.5, 3.0, 7.0])
+    q = relu6_act_quantize(x, 4)
+    assert float(q[0]) == 0.0 and float(q[3]) == 6.0
+    assert abs(float(q[1]) - 0.5) <= 6.0 / (2**4 - 1)
+
+
+def test_pact_gradient_flows_to_alpha():
+    x = jnp.array([0.5, 2.0, 5.0])
+    g = jax.grad(lambda a: jnp.sum(pact_act_quantize(x, a, 4)))(jnp.float32(3.0))
+    assert float(g) > 0  # clipped elements push alpha

@@ -1,0 +1,97 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret=True) vs ref.py oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.packing import pack_from_float
+from repro.kernels import ops, ref
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "M,K,N,n_bits",
+    [(8, 64, 128, 4), (128, 512, 128, 8), (16, 128, 256, 3), (8, 64, 128, 1), (32, 256, 128, 6)],
+)
+def test_bitserial_matmul_sweep(M, K, N, n_bits, dtype):
+    w = jax.random.normal(KEY, (K, N)) * 0.2
+    x = (jax.random.normal(jax.random.fold_in(KEY, 1), (M, K)) * 0.5).astype(dtype)
+    pw = pack_from_float(w, n_bits)
+    got = ops.bitserial_matmul(x, pw, use_pallas=True, interpret=True)
+    want = ops.bitserial_matmul(x, pw, use_pallas=False)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), atol=tol, rtol=tol
+    )
+
+
+def test_bitserial_matmul_vs_dense():
+    """Dequant-matmul must equal matmul against the dequantised weights."""
+    w = jax.random.normal(KEY, (128, 128)) * 0.3
+    x = jax.random.normal(jax.random.fold_in(KEY, 2), (8, 128))
+    pw = pack_from_float(w, 8)
+    from repro.core.packing import unpack_to_float
+
+    got = ops.bitserial_matmul(x, pw, use_pallas=True, interpret=True)
+    want = x @ unpack_to_float(pw)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-4, rtol=1e-4)
+
+
+@pytest.mark.parametrize("R,C", [(8, 4096), (16, 8192), (2, 512), (40, 1024)])
+def test_bgl_sumsq_sweep(R, C):
+    x = jax.random.normal(KEY, (R, C))
+    got = ops.bgl_sumsq(x, use_pallas=True, interpret=True)
+    want = ref.bgl_sumsq_ref(x)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "BH,S,d,window,causal",
+    [
+        (4, 256, 64, None, True),
+        (2, 512, 128, None, True),
+        (2, 512, 64, 128, True),
+        (1, 256, 128, None, False),
+        (2, 384, 64, 96, True),
+    ],
+)
+def test_flash_attention_sweep(BH, S, d, window, causal, dtype):
+    q = (jax.random.normal(KEY, (BH, S, d)) * 0.5).astype(dtype)
+    k = (jax.random.normal(jax.random.fold_in(KEY, 1), (BH, S, d)) * 0.5).astype(dtype)
+    v = (jax.random.normal(jax.random.fold_in(KEY, 2), (BH, S, d)) * 0.5).astype(dtype)
+    got = ops.flash_attention(q, k, v, causal=causal, window=window,
+                              use_pallas=True, interpret=True)
+    want = ref.flash_attention_ref(q, k, v, causal=causal, window=window)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), atol=tol, rtol=tol
+    )
+
+
+def test_flash_matches_model_attention():
+    """Kernel agrees with the model's chunked attention implementation."""
+    from repro.models.attention import attention
+
+    B, S, H, hd = 2, 256, 4, 64
+    d_model = H * hd
+    key = jax.random.PRNGKey(3)
+    x = jax.random.normal(key, (B, S, d_model)) * 0.2
+    p = {
+        "wq": jnp.eye(d_model), "wk": jnp.eye(d_model), "wv": jnp.eye(d_model),
+        "wo": jnp.eye(d_model),
+    }
+    out, _ = attention(p, x, n_heads=H, n_kv=H, head_dim=hd, rope_theta=1e4, q_chunk=64)
+    # same computation via the kernel (rope applied manually)
+    from repro.models.common import apply_rope
+
+    qkv = x.reshape(B, S, H, hd)
+    pos = jnp.arange(S)[None]
+    q = apply_rope(qkv, pos, 1e4).transpose(0, 2, 1, 3).reshape(B * H, S, hd)
+    kk = q  # wk == wq == identity
+    v = qkv.transpose(0, 2, 1, 3).reshape(B * H, S, hd)
+    o = ops.flash_attention(q, kk, v, causal=True, use_pallas=True, interpret=True)
+    o = o.reshape(B, H, S, hd).transpose(0, 2, 1, 3).reshape(B, S, d_model)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(o), atol=2e-5, rtol=2e-5)

@@ -1,0 +1,103 @@
+"""Property-based tests (hypothesis) on the system's core invariants."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import HealthCheck, given, settings
+from hypothesis import strategies as st
+
+from repro.core import (
+    decompose,
+    forward_value,
+    int_to_planes,
+    pack_from_float,
+    planes_to_int,
+    reconstruct_exact,
+    requantize_dynamic,
+    requantize_static,
+    unpack_to_float,
+    verify_equivalence,
+)
+from repro.dist.collectives import dequantize_int8, quantize_int8
+
+_settings = settings(
+    max_examples=25, deadline=None, suppress_health_check=[HealthCheck.too_slow]
+)
+
+finite_arrays = st.builds(
+    lambda seed, r, c, scale: np.asarray(
+        jax.random.normal(jax.random.PRNGKey(seed), (r, c)) * scale
+    ),
+    st.integers(0, 2**16),
+    st.integers(1, 12),
+    st.integers(1, 12),
+    st.floats(1e-3, 100.0),
+)
+
+
+@_settings
+@given(q=st.lists(st.integers(0, 2**12 - 1), min_size=1, max_size=64))
+def test_int_planes_bijection(q):
+    arr = jnp.asarray(np.asarray(q, np.int32))
+    assert np.array_equal(np.asarray(planes_to_int(int_to_planes(arr, 12))), np.asarray(arr))
+
+
+@_settings
+@given(w=finite_arrays, n_bits=st.integers(1, 8))
+def test_decompose_error_bound(w, n_bits):
+    """Quantisation error is at most half a step of the per-tensor scale."""
+    rep = decompose(jnp.asarray(w), n_bits)
+    err = np.abs(np.asarray(reconstruct_exact(rep)) - w)
+    bound = np.max(np.abs(w)) / (2**n_bits - 1) / 2 * (1 + 1e-4) + 1e-9
+    assert np.all(err <= bound)
+
+
+@_settings
+@given(w=finite_arrays, n_bits=st.integers(2, 8), seed=st.integers(0, 1000))
+def test_requant_equivalence_invariant(w, n_bits, seed):
+    """Eq. 6 holds for ARBITRARY continuous plane states in [0, 2]."""
+    rep = decompose(jnp.asarray(w), n_bits)
+    key = jax.random.PRNGKey(seed)
+    wp = jnp.clip(rep.wp + jax.random.uniform(key, rep.wp.shape) * rep.mask, 0, 2)
+    wn = jnp.clip(
+        rep.wn + jax.random.uniform(jax.random.fold_in(key, 1), rep.wn.shape) * rep.mask, 0, 2
+    )
+    rep = dataclasses.replace(rep, wp=wp, wn=wn)
+    scale = float(np.max(np.abs(np.asarray(forward_value(rep))))) + 1e-6
+    rep2 = requantize_static(rep)
+    assert verify_equivalence(rep, rep2, atol=1e-5 * scale + 1e-6)
+    rep3 = requantize_dynamic(dataclasses.replace(rep, mask=jnp.ones_like(rep.mask)))
+    assert verify_equivalence(rep, rep3, atol=1e-5 * scale + 1e-6)
+
+
+@_settings
+@given(w=finite_arrays, n_bits=st.integers(1, 8))
+def test_packing_roundtrip_bound(w, n_bits):
+    pw = pack_from_float(jnp.asarray(w), n_bits)
+    err = np.abs(np.asarray(unpack_to_float(pw)) - w)
+    bound = np.max(np.abs(w)) / (2**n_bits - 1) / 2 * (1 + 1e-4) + 1e-9
+    assert np.all(err <= bound)
+
+
+@_settings
+@given(w=finite_arrays)
+def test_int8_quantize_bound(w):
+    q, s = quantize_int8(jnp.asarray(w))
+    err = np.max(np.abs(np.asarray(dequantize_int8(q, s)) - w))
+    assert err <= float(s) / 2 + 1e-7
+
+
+@_settings
+@given(
+    seed=st.integers(0, 2**16),
+    n_bits=st.integers(2, 8),
+    rows=st.integers(1, 6),
+)
+def test_requant_idempotent(seed, n_bits, rows):
+    """Requantising twice == requantising once (binary fixed point)."""
+    w = np.asarray(jax.random.normal(jax.random.PRNGKey(seed), (rows, 8)))
+    rep = requantize_static(decompose(jnp.asarray(w), n_bits))
+    rep2 = requantize_static(rep)
+    np.testing.assert_array_equal(np.asarray(rep.wp), np.asarray(rep2.wp))
+    np.testing.assert_array_equal(np.asarray(rep.mask), np.asarray(rep2.mask))

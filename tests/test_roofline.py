@@ -1,0 +1,82 @@
+"""Roofline analysis unit tests: HLO parsing, term math, report rendering."""
+import numpy as np
+
+from repro.roofline import hw
+from repro.roofline.analysis import (
+    RooflineTerms,
+    _shape_bytes,
+    collective_bytes,
+    op_byte_profile,
+)
+
+HLO = """
+HloModule jit_step
+ENTRY %main {
+  %p0 = f32[16,1024]{1,0} parameter(0)
+  %ag = bf16[4,2048]{1,0} all-gather(%p0), replica_groups={}
+  %ar.1 = (f32[256,16]{1,0}, f32[]) all-reduce(%x, %y), to_apply=%add
+  %rs = f32[8,8]{1,0} reduce-scatter(%p0), dimensions={0}
+  %a2a = bf16[32]{0} all-to-all(%z)
+  %cp = u8[100]{0} collective-permute(%w)
+  %ag-start = bf16[64]{0} all-gather-start(%p0)
+  %ag-done = bf16[64]{0} all-gather-done(%ag-start)
+  %dot.5 = f32[128,128]{1,0} dot(%p0, %p0), lhs_contracting_dims={1}
+}
+"""
+
+
+def test_shape_bytes():
+    assert _shape_bytes("f32[16,1024]{1,0}") == 16 * 1024 * 4
+    assert _shape_bytes("bf16[4,2048]") == 4 * 2048 * 2
+    assert _shape_bytes("(f32[8]{0}, f32[]{0})") == 8 * 4 + 4
+    assert _shape_bytes("u8[100]") == 100
+    assert _shape_bytes("pred[7]") == 7
+
+
+def test_collective_bytes_parses_all_kinds():
+    c = collective_bytes(HLO)
+    assert c["all-gather"] == 4 * 2048 * 2 + 64 * 2  # ag + ag-start (done skipped)
+    assert c["all-reduce"] == 256 * 16 * 4 + 4
+    assert c["reduce-scatter"] == 8 * 8 * 4
+    assert c["all-to-all"] == 32 * 2
+    assert c["collective-permute"] == 100
+
+
+def test_op_profile_ranks_dot():
+    prof = dict((k, b) for k, b, _ in op_byte_profile(HLO))
+    assert prof["dot"] == 128 * 128 * 4
+    assert "all-gather" in prof
+
+
+def test_roofline_terms_math():
+    t = RooflineTerms(
+        flops_per_device=hw.PEAK_FLOPS_BF16,  # exactly 1 second of compute
+        bytes_per_device=hw.HBM_BW / 2,  # 0.5 s
+        collective_bytes_per_device=hw.ICI_LINK_BW / 4,  # 0.25 s
+        collectives={},
+        n_devices=256,
+    )
+    assert abs(t.compute_s - 1.0) < 1e-9
+    assert abs(t.memory_s - 0.5) < 1e-9
+    assert abs(t.collective_s - 0.25) < 1e-9
+    assert t.bottleneck == "compute"
+    assert abs(t.step_time_lower_bound_s - 1.0) < 1e-9
+    # if all compiled flops were useful, the MFU bound is 100%
+    assert abs(t.roofline_fraction(hw.PEAK_FLOPS_BF16) - 1.0) < 1e-9
+
+
+def test_report_renders_baseline_json():
+    import os
+
+    path = "results/dryrun_baseline.json"
+    if not os.path.exists(path):
+        import pytest
+
+        pytest.skip("baseline sweep not present")
+    from repro.roofline.report import render, summary
+
+    table = render(path)
+    assert table.count("|") > 100
+    assert "granite-3-2b" in table
+    s = summary(path)
+    assert "cells ok" in s

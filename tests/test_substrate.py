@@ -1,0 +1,180 @@
+"""Substrate: optimizers, data pipeline, checkpointing, fault tolerance,
+compressed collectives."""
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.ckpt import checkpoint as ckpt
+from repro.data import MarkovLM, Prefetcher, host_slice, pack_documents
+from repro.dist.collectives import dequantize_int8, quantize_int8
+from repro.optim import SGDM, AdamW, clip_by_global_norm, cosine_warmup, step_decay
+from repro.train.ft import FailureDetector, Heartbeat
+
+
+# ------------------------------------------------------------------ optim
+def test_sgdm_matches_closed_form():
+    opt = SGDM(momentum=0.9, weight_decay=0.0)
+    p = {"w": jnp.array([1.0])}
+    s = opt.init(p)
+    g = {"w": jnp.array([1.0])}
+    p, s = opt.update(g, s, p, 0.1)  # m=1, p=1-0.1
+    np.testing.assert_allclose(np.asarray(p["w"]), [0.9])
+    p, s = opt.update(g, s, p, 0.1)  # m=1.9, p=0.9-0.19
+    np.testing.assert_allclose(np.asarray(p["w"]), [0.71], rtol=1e-6)
+
+
+def test_sgdm_weight_decay():
+    opt = SGDM(momentum=0.0, weight_decay=0.5)
+    p = {"w": jnp.array([2.0])}
+    s = opt.init(p)
+    p, _ = opt.update({"w": jnp.array([0.0])}, s, p, 0.1)
+    np.testing.assert_allclose(np.asarray(p["w"]), [2.0 - 0.1 * 1.0])  # wd*p = 1
+
+
+def test_adamw_converges_quadratic():
+    opt = AdamW(weight_decay=0.0)
+    p = {"w": jnp.array([5.0])}
+    s = opt.init(p)
+    for _ in range(300):
+        g = {"w": 2 * p["w"]}
+        p, s = opt.update(g, s, p, 0.05)
+    assert float(jnp.abs(p["w"]).max()) < 0.05
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.ones((4,)) * 3.0}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    np.testing.assert_allclose(float(norm), 6.0)
+    np.testing.assert_allclose(
+        float(jnp.linalg.norm(clipped["a"])), 1.0, rtol=1e-5
+    )
+
+
+def test_schedules():
+    sd = step_decay(0.1, [10, 20])
+    assert float(sd(jnp.int32(5))) == pytest.approx(0.1)
+    assert float(sd(jnp.int32(15))) == pytest.approx(0.01)
+    assert float(sd(jnp.int32(25))) == pytest.approx(0.001)
+    cw = cosine_warmup(1.0, warmup=10, total=110)
+    assert float(cw(jnp.int32(5))) == pytest.approx(0.5)
+    assert float(cw(jnp.int32(110))) == pytest.approx(0.1, rel=1e-3)
+
+
+# ------------------------------------------------------------------- data
+def test_markov_learnable_and_deterministic():
+    t = MarkovLM(vocab=32, seed=3)
+    b1 = t.batch(np.random.default_rng(7), 4, 64)
+    b2 = t.batch(np.random.default_rng(7), 4, 64)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    assert 0.0 < t.entropy_floor() < np.log(32)
+    # labels are next tokens
+    np.testing.assert_array_equal(b1["tokens"][:, 1:], b1["labels"][:, :-1])
+
+
+def test_host_slice_partitions():
+    slices = [host_slice(64, i, 4) for i in range(4)]
+    covered = sorted(sum([list(range(s.start, s.stop)) for s in slices], []))
+    assert covered == list(range(64))
+    with pytest.raises(ValueError):
+        host_slice(10, 0, 3)
+
+
+def test_pack_documents():
+    docs = [[5, 6, 7], [8, 9], [10, 11, 12, 13]]
+    toks, labels = pack_documents(docs, seq_len=5, eod_id=1)
+    assert toks.shape[1] == 5 and labels.shape == toks.shape
+    flat = [5, 6, 7, 1, 8, 9, 1, 10, 11, 12, 13, 1]
+    np.testing.assert_array_equal(toks[0], flat[:5])
+    np.testing.assert_array_equal(labels[0], flat[1:6])
+
+
+def test_prefetcher_order_and_error():
+    out = list(Prefetcher(iter(range(5)), depth=2))
+    assert out == list(range(5))
+
+    def bad():
+        yield 1
+        raise RuntimeError("boom")
+
+    it = Prefetcher(bad())
+    assert next(it) == 1
+    with pytest.raises(RuntimeError):
+        for _ in it:
+            pass
+
+
+# ------------------------------------------------------------------- ckpt
+def test_checkpoint_roundtrip_and_prune(tmp_path):
+    tree = {"a": jnp.arange(8.0), "b": {"c": jnp.ones((2, 3)), "step": jnp.int32(7)}}
+    for step in (1, 2, 3, 4):
+        ckpt.save(tree, str(tmp_path), step)
+    ckpt.prune_old(str(tmp_path), keep=2)
+    assert ckpt.available_steps(str(tmp_path)) == [3, 4]
+    restored, step = ckpt.restore_latest(tree, str(tmp_path))
+    assert step == 4
+    np.testing.assert_array_equal(np.asarray(restored["a"]), np.arange(8.0))
+
+
+def test_checkpoint_detects_corruption(tmp_path):
+    tree = {"a": jnp.arange(4.0)}
+    ckpt.save(tree, str(tmp_path), 1)
+    ckpt.save(tree, str(tmp_path), 2)
+    # corrupt the newest shard -> restore_latest must fall back to step 1
+    shard = os.path.join(str(tmp_path), "step_2", "shard_0.npz")
+    with open(shard, "wb") as f:
+        f.write(b"garbage")
+    restored, step = ckpt.restore_latest(tree, str(tmp_path))
+    assert step == 1 and restored is not None
+
+
+def test_checkpoint_async(tmp_path):
+    tree = {"a": jnp.ones((1024,))}
+    t = ckpt.save(tree, str(tmp_path), 5, blocking=False)
+    t.join()
+    _, step = ckpt.restore_latest(tree, str(tmp_path))
+    assert step == 5
+
+
+# --------------------------------------------------------------------- ft
+def test_heartbeat_and_failure_detection(tmp_path):
+    hb0 = Heartbeat(str(tmp_path), 0, interval=0.05)
+    hb1 = Heartbeat(str(tmp_path), 1, interval=0.05)
+    hb0.start()
+    hb1.start()
+    time.sleep(0.2)
+    det = FailureDetector(str(tmp_path), suspect_after=1.0, dead_after=2.0)
+    assert det.check([0, 1]) == {0: "healthy", 1: "healthy"}
+    hb1.stop()
+    # host 2 never heartbeated -> dead; host 1 will age into suspect/dead
+    status = det.check([0, 1, 2])
+    assert status[2] == "dead"
+    assert det.surviving([0, 2]) == [0]
+    hb0.stop()
+
+
+# ------------------------------------------------------------- collectives
+def test_int8_quantize_error_bound():
+    x = jax.random.normal(jax.random.PRNGKey(0), (1024,)) * 3.0
+    q, s = quantize_int8(x)
+    err = jnp.max(jnp.abs(dequantize_int8(q, s) - x))
+    assert float(err) <= float(s) / 2 + 1e-6
+    assert q.dtype == jnp.int8
+
+
+def test_error_feedback_removes_bias():
+    """Mean of EF-compressed estimates converges to the true value."""
+    x = jnp.array([0.001, -0.4, 0.25])  # small values vs int8 grid
+    residual = jnp.zeros_like(x)
+    total = jnp.zeros_like(x)
+    steps = 200
+    for _ in range(steps):
+        g = x + residual
+        q, s = quantize_int8(g)
+        deq = dequantize_int8(q, s)
+        residual = g - deq
+        total = total + deq
+    np.testing.assert_allclose(np.asarray(total / steps), np.asarray(x), atol=1e-3)

@@ -1,0 +1,119 @@
+"""End-to-end system test: BSQ training -> scheme -> packed export ->
+serving — the full paper pipeline on a tiny LM, plus the trainer's
+fault-tolerance behaviours (checkpoint resume, STOP preemption)."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import reduced_config
+from repro.core import BSQConfig, export_packed, extract_scheme
+from repro.data import MarkovLM, sharded_lm_iterator
+from repro.kernels import ops
+from repro.optim import SGDM, step_decay
+from repro.serve import Request, ServeEngine
+from repro.train.step import (
+    init_bsq_state,
+    make_bsq_train_step,
+    make_requant_step,
+    state_reps,
+)
+from repro.train.trainer import TrainerConfig, train_bsq
+
+
+def _mk(arch="granite-3-2b", alpha=5e-3):
+    cfg = reduced_config(arch)
+    bsq_cfg = BSQConfig(n_init=8, alpha=alpha, mode="static", compute_dtype=jnp.float32)
+    opt = SGDM()
+    state, ctx = init_bsq_state(jax.random.PRNGKey(0), cfg, bsq_cfg, opt)
+    step = jax.jit(make_bsq_train_step(ctx, opt, step_decay(0.5, [500])))
+    requant = jax.jit(make_requant_step(ctx))
+    return cfg, state, ctx, step, requant
+
+
+def _data(cfg, batch=4, seq=16):
+    task = MarkovLM(vocab=cfg.vocab_size, seed=1)
+    return sharded_lm_iterator(task, batch, seq, seed=0)
+
+
+def test_full_pipeline_train_export_serve(tmp_path):
+    cfg, state, ctx, step, requant = _mk()
+    data = _data(cfg)
+    out = train_bsq(
+        state, ctx, step, requant, data,
+        TrainerConfig(total_steps=30, requant_interval=10, ckpt_interval=10,
+                      log_interval=10, workdir=str(tmp_path)),
+    )
+    state, scheme = out["state"], out["scheme"]
+    assert 0 < scheme.bits_per_param <= 9
+    assert (tmp_path / "scheme.json").exists()
+
+    # packed export + bitserial matmul sanity on one tensor
+    reps = state_reps(state, ctx)
+    name = next(k for k, r in reps.items() if len(r.w_shape) == 2)
+    packed = export_packed({name: reps[name]})[name]
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, packed.shape[0]))
+    y = ops.bitserial_matmul(x, packed, use_pallas=False)
+    assert np.isfinite(np.asarray(y)).all()
+
+    # serve with the BSQ-trained weights (float reconstruction path)
+    from repro.core.bsq import merge_params, reconstruct
+
+    w = reconstruct(reps, ctx.bsq_cfg)
+    params = merge_params(ctx.template, w, state["trainable"]["float"])
+    engine = ServeEngine(params, cfg, max_len=64)
+    reqs = [Request(uid=i, tokens=np.arange(4 + 4 * (i % 2), dtype=np.int32) % cfg.vocab_size,
+                    max_new=6) for i in range(4)]
+    results = engine.generate(reqs)
+    assert len(results) == 4
+    for r in results:
+        assert r.tokens.shape == (6,)
+        assert (r.tokens >= 0).all() and (r.tokens < cfg.vocab_size).all()
+
+
+def test_trainer_resume_from_checkpoint(tmp_path):
+    cfg, state, ctx, step, requant = _mk()
+    data = _data(cfg)
+    tcfg = TrainerConfig(total_steps=20, requant_interval=50, ckpt_interval=5,
+                         log_interval=5, workdir=str(tmp_path))
+    out = train_bsq(state, ctx, step, requant, data, tcfg)
+    final_step = int(jax.device_get(out["state"]["step"]))
+    assert final_step == 20
+    # fresh state, same workdir: resumes from the last checkpoint (step 20)
+    cfg2, state2, ctx2, step2, requant2 = _mk()
+    out2 = train_bsq(state2, ctx2, step2, requant2, _data(cfg), tcfg)
+    assert int(jax.device_get(out2["state"]["step"])) == 20
+
+
+def test_trainer_stop_file_preemption(tmp_path):
+    cfg, state, ctx, step, requant = _mk()
+    os.makedirs(tmp_path, exist_ok=True)
+    with open(os.path.join(str(tmp_path), "STOP"), "w") as f:
+        f.write("preempt")
+    train_bsq(
+        state, ctx, step, requant, _data(cfg),
+        TrainerConfig(total_steps=50, requant_interval=100, ckpt_interval=100,
+                      log_interval=10, workdir=str(tmp_path)),
+    )
+    from repro.ckpt import checkpoint as ckpt
+
+    # stopped after the first step, checkpoint written
+    assert ckpt.available_steps(str(tmp_path)) == [1]
+
+
+def test_bsq_alpha_tradeoff_on_learnable_task():
+    """C3 tradeoff: tiny alpha keeps accuracy, crushing alpha buys bits."""
+    results = {}
+    for alpha in (1e-3, 2.0):
+        cfg, state, ctx, step, requant = _mk(alpha=alpha)
+        data = _data(cfg)
+        for _ in range(40):
+            state, m = step(state, next(data))
+        state = requant(state)
+        scheme = extract_scheme(state_reps(state, ctx))
+        results[alpha] = (float(m["ce"]), scheme.bits_per_param)
+    ce_lo, bits_lo = results[1e-3]
+    ce_hi, bits_hi = results[2.0]
+    assert bits_hi < bits_lo
+    assert ce_lo < ce_hi + 1.0
