@@ -117,9 +117,21 @@ def available_steps(directory: str):
     return sorted(steps)
 
 
-def restore(tree_like: PyTree, directory: str, step: int, shardings: Optional[PyTree] = None):
+def restore(
+    tree_like: PyTree,
+    directory: str,
+    step: int,
+    shardings: Optional[PyTree] = None,
+    mesh=None,
+):
     """Restore into the structure of `tree_like` (shapes/dtypes authoritative
-    from the manifest). `shardings`: optional matching pytree of NamedSharding."""
+    from the manifest).
+
+    Target placement comes from the dist layer: with ``mesh``, the loaded
+    (logically-unsharded) arrays go through ``dist.elastic.reshard_tree``
+    — the elastic-resume path, valid for any device count the shapes
+    divide over.  ``shardings`` (a matching pytree of NamedSharding)
+    overrides the derived rules."""
     ckpt_dir = os.path.join(directory, f"step_{step}")
     if not _verify(ckpt_dir):
         raise IOError(f"checkpoint {ckpt_dir} failed integrity check")
@@ -142,17 +154,27 @@ def restore(tree_like: PyTree, directory: str, step: int, shardings: Optional[Py
         arr = load_leaf(name)
         if shard_leaves is not None:
             arr = jax.device_put(arr, shard_leaves[i])
-        else:
+        elif mesh is None:
             arr = jax.numpy.asarray(arr)
         out.append(arr)
-    return jax.tree_util.tree_unflatten(treedef, out)
+    tree = jax.tree_util.tree_unflatten(treedef, out)
+    if shard_leaves is None and mesh is not None:
+        from ..dist.elastic import reshard_tree
+
+        tree = reshard_tree(tree, mesh)
+    return tree
 
 
-def restore_latest(tree_like: PyTree, directory: str, shardings: Optional[PyTree] = None):
+def restore_latest(
+    tree_like: PyTree,
+    directory: str,
+    shardings: Optional[PyTree] = None,
+    mesh=None,
+):
     """Newest checkpoint that passes integrity; returns (tree, step) or (None, -1)."""
     for step in reversed(available_steps(directory)):
         if _verify(os.path.join(directory, f"step_{step}")):
-            return restore(tree_like, directory, step, shardings), step
+            return restore(tree_like, directory, step, shardings, mesh=mesh), step
     return None, -1
 
 

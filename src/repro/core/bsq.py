@@ -171,8 +171,14 @@ def export_packed(reps: Dict[str, BitRep]) -> Dict[str, packing.PackedWeight]:
     (ragged per-group layouts are honoured at the *accounting* level; a
     production exporter would split tensors per group).  The code is
     shifted by ``lsb`` and the scale updated exactly as in the dynamic
-    precision adjustment, so the dequantised values are bit-exact.
+    precision adjustment, so the dequantised values are bit-exact —
+    PROVIDED the rep has one scale (or all per-group scales agree).  When
+    per-group scales disagree the export cannot be exact with a single
+    packed scale: we warn and fall back to the mean scale (lossy; a
+    per-group exporter is the documented follow-up, see ROADMAP).
     """
+    import warnings
+
     import numpy as np
 
     from .bitrep import planes_to_int
@@ -192,9 +198,23 @@ def export_packed(reps: Dict[str, BitRep]) -> Dict[str, packing.PackedWeight]:
             lsb, msb = min(nz), max(nz)
         n_bits = msb - lsb + 1
         q_shift = ((mag >> lsb) * np.sign(q)).astype(np.int32)
+        s_groups = np.asarray(jax.device_get(r2.scale)).reshape(-1)
+        if s_groups.size > 1 and not np.allclose(
+            s_groups, s_groups[0], rtol=1e-6, atol=0.0
+        ):
+            spread = float(s_groups.max() / max(float(s_groups.min()), 1e-30))
+            warnings.warn(
+                f"export_packed: {name!r} has {s_groups.size} per-group scales "
+                f"spanning {spread:.3g}x; packing with their MEAN is lossy. "
+                "Split the tensor per group for an exact export.",
+                stacklevel=2,
+            )
+            base_scale = float(s_groups.mean())
+        else:
+            base_scale = float(s_groups[0])
         # scale': dequant uses  scale' * q' / (2^{n'} - 1)  ==  scale * q / (2^n - 1)
         scale = (
-            float(jnp.mean(r2.scale))
+            base_scale
             * (2.0**lsb)
             * (2.0**n_bits - 1.0)
             / (2.0**r2.n_denom - 1.0)

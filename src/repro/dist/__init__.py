@@ -1,0 +1,27 @@
+"""Distribution layer: THE single source of truth for sharding.
+
+Every PartitionSpec rule in the system lives in :mod:`repro.dist.sharding`
+(name/shape-driven partition rules for params, BSQ bit-plane state, KV /
+recurrent caches, and data batches).  :mod:`repro.dist.collectives` holds
+the compressed (int8 + error-feedback) gradient all-reduce used by the
+compressed-DP train step, and :mod:`repro.dist.elastic` the mesh-to-mesh
+migration path used by elastic checkpoint resume.
+
+launch/, train/, serve/ and ckpt/ consume these — none of them define
+partition rules of their own.
+"""
+from . import collectives, elastic, sharding  # noqa: F401
+from .collectives import (  # noqa: F401
+    dequantize_int8,
+    init_residuals,
+    quantize_int8,
+    tree_compressed_psum_ef,
+)
+from .elastic import reshard_tree, validate_batch_divisibility  # noqa: F401
+from .sharding import (  # noqa: F401
+    cache_spec,
+    cache_tree_specs,
+    data_batch_spec,
+    param_spec,
+    tree_param_specs,
+)

@@ -1,0 +1,34 @@
+"""Elastic mesh migration: move a train state between device meshes.
+
+Checkpoints store logically-unsharded arrays, so "elastic resume" is just
+re-placement: compute the target specs for the NEW mesh from the same
+name/shape rules (:mod:`repro.dist.sharding`) and ``device_put`` each
+leaf.  jax moves the shards; values are untouched — resharding
+mesh A -> mesh B -> mesh A round-trips bit-exactly.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+
+from .sharding import dp_axes, tree_param_specs, tree_shardings
+
+PyTree = Any
+
+
+def reshard_tree(tree: PyTree, mesh, spec_tree: Optional[PyTree] = None) -> PyTree:
+    """Place every leaf of ``tree`` onto ``mesh`` under the dist rules.
+
+    ``spec_tree`` overrides the derived specs (must mirror ``tree``; specs
+    are leaves).  Accepts device arrays and host numpy arrays alike.
+    """
+    if spec_tree is None:
+        spec_tree = tree_param_specs(tree, mesh)
+    return jax.tree.map(jax.device_put, tree, tree_shardings(mesh, spec_tree))
+
+
+def validate_batch_divisibility(global_batch: int, mesh) -> bool:
+    """True iff the global batch splits evenly over the mesh's DP axes —
+    the precondition for migrating a run onto this mesh."""
+    return dp_axes(mesh, global_batch) is not None

@@ -1,0 +1,287 @@
+"""Partition rules: name/shape-driven PartitionSpecs for every tensor.
+
+This module is the ONLY place in the system that decides how a tensor is
+laid out over the ``("data", "model")`` (optionally ``("pod", "data",
+"model")``) mesh.  Rules are keyed on the "/"-joined pytree path and the
+shape — never on concrete values — so the same rules drive real arrays,
+ShapeDtypeStructs (dry-run lowering) and checkpoint restore targets.
+
+Rule summary (2x4 mesh shown as data=2, model=4):
+
+==========================================  =================================
+tensor                                      spec
+==========================================  =================================
+col-parallel matmul  ``wq`` (L, in, out)    ``P(None, "data", "model")``
+row-parallel ``wo``/``w_down`` (L, in, out) ``P(None, "model", "data")``
+BSQ planes ``.../wq/wp`` (nb, L, in, out)   base rule + leading ``None``
+embedding ``embed`` (V, d)                  ``P("model", "data")``
+stacked MoE experts (L, E, in, out)         experts -> ``"model"``
+norm scales / biases / BSQ scales / masks   replicated
+KV cache (B, S, KV, hd)                     ``P("data", None, "model", None)``
+KV cache, KV-heads % model != 0             seq -> ``"model"`` instead
+KV cache, batch 1 (long context)            seq -> ``("data", "model")``
+any other dim not divisible by its axis     that dim replicated
+==========================================  =================================
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+PyTree = Any
+
+# Pytree wrapper segments that may prefix a model-param path inside a
+# train-state tree (state dicts, optimizer moments, BSQ containers).
+_WRAPPERS = frozenset(
+    {"trainable", "opt", "masks", "reps", "float", "params", "mu", "nu", "residual"}
+)
+
+# Leaf names whose matmul convention is row-parallel (input dim is the
+# sharded contraction axis): attention output and down projections.
+_ROW_PARALLEL = frozenset({"wo", "out_proj", "w_out", "w_down"})
+
+# Stacked-expert MoE weights (leading expert axis under /moe/).
+_MOE_EXPERT = frozenset({"w_gate", "w_up", "w_down"})
+
+# Name fragments that force replication: norms, biases, per-group scales,
+# recurrence scalars, depthwise convs — all tiny and/or value-coupled.
+_REPLICATED_FRAGMENTS = (
+    "norm", "scale", "bias", "lambda", "a_log", "d_skip", "conv",
+    "step", "count", "rope", "pact", "pos_emb",
+)
+
+
+def replicated() -> P:
+    """The fully-replicated spec (scalars, tiny tensors)."""
+    return P()
+
+
+# ---------------------------------------------------------------------------
+# Mesh helpers
+# ---------------------------------------------------------------------------
+
+
+def _axis_size(mesh, axis: str) -> int:
+    return int(mesh.shape[axis]) if axis in mesh.shape else 0
+
+
+def _fits(mesh, axis: str, dim: int) -> bool:
+    n = _axis_size(mesh, axis)
+    return n > 0 and dim % n == 0
+
+
+def dp_axes(mesh, dim: int):
+    """Data-parallel assignment for a batch-like dim: ("pod", "data") when
+    both exist and divide, else "data", else None (replicated)."""
+    axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    for cand in (axes, axes[-1:]):
+        if not cand:
+            continue
+        total = 1
+        for a in cand:
+            total *= _axis_size(mesh, a)
+        if total > 0 and dim % total == 0:
+            return cand[0] if len(cand) == 1 else cand
+    return None
+
+
+def _path_name(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        elif hasattr(p, "name"):
+            parts.append(str(p.name))
+        else:
+            parts.append(str(p).strip("."))
+    return "/".join(parts)
+
+
+def _canonical(name: str) -> Tuple[str, ...]:
+    """Strip state-tree wrapper segments so ``opt/mu/reps/blocks/...`` and
+    ``blocks/...`` resolve to the same rule."""
+    segs = [s for s in name.split("/") if s]
+    while segs and segs[0] in _WRAPPERS:
+        segs.pop(0)
+    return tuple(segs)
+
+
+# ---------------------------------------------------------------------------
+# Parameter rules
+# ---------------------------------------------------------------------------
+
+
+def param_spec(name: str, shape: Tuple[int, ...], mesh) -> P:
+    """PartitionSpec for one (possibly stacked) parameter tensor.
+
+    ``name`` is the "/"-joined pytree path; wrapper segments from train
+    state (``trainable/reps/...``, ``opt/mu/...``, ``masks/...``) are
+    stripped, so the same rules cover params, optimizer moments and BSQ
+    bit-plane state.
+    """
+    segs = _canonical(name)
+    ndim = len(shape)
+    if not segs or ndim == 0:
+        return replicated()
+    leaf = segs[-1].lower()
+
+    # BSQ bit-plane tensors (wp / wn) carry a leading plane axis and
+    # inherit the base weight's layout (the planes of one weight must live
+    # with that weight for reconstruct/regularise to stay local).
+    if leaf in ("wp", "wn") and ndim >= 1:
+        base = "/".join(segs[:-1])
+        return P(None, *param_spec(base, shape[1:], mesh))
+
+    # Packed serving weights (magnitude/sign bitplanes) stay REPLICATED:
+    # the Pallas bitserial kernel is a custom call GSPMD cannot partition,
+    # so sharding its operands would force replication/remat at the call
+    # anyway.  Packed serving parallelises over "data" only for now;
+    # per-shard packing is the ROADMAP follow-up.
+    if leaf in ("planes", "sign"):
+        return replicated()
+
+    if ndim < 2 or any(f in leaf for f in _REPLICATED_FRAGMENTS):
+        return replicated()
+
+    # Embedding table: vocab -> model (the softmax/logit contraction axis),
+    # d_model -> data.  (cross_entropy keeps the vocab-sharded layout.)
+    if leaf == "embed" and ndim == 2:
+        return P(
+            "model" if _fits(mesh, "model", shape[0]) else None,
+            "data" if _fits(mesh, "data", shape[1]) else None,
+        )
+
+    # Stacked MoE expert weights (L?, E, d_in, d_out): experts -> model
+    # (expert parallelism; the dispatch einsum induces the all-to-all).
+    # The freed mesh axis goes to the dim "model" would otherwise take.
+    if leaf in _MOE_EXPERT and "moe" in segs and "shared" not in segs and ndim >= 3:
+        spec = [None] * ndim
+        e_ax = ndim - 3
+        if _fits(mesh, "model", shape[e_ax]):
+            spec[e_ax] = "model"
+        d_ax = ndim - 2 if leaf == "w_down" else ndim - 1  # row- vs col-parallel
+        if _fits(mesh, "data", shape[d_ax]):
+            spec[d_ax] = "data"
+        return P(*spec)
+
+    # Dense matmul weights (..., d_in, d_out); leading axes (scan-stacked
+    # layers, tail indices) stay replicated.
+    spec = [None] * ndim
+    if leaf in _ROW_PARALLEL:
+        in_ax, out_ax = ("model", "data")
+    else:  # col-parallel: wq/wk/wv, w_gate/w_up, in_proj, lm_head, ...
+        in_ax, out_ax = ("data", "model")
+    if _fits(mesh, in_ax, shape[-2]):
+        spec[-2] = in_ax
+    if _fits(mesh, out_ax, shape[-1]):
+        spec[-1] = out_ax
+    return P(*spec)
+
+
+def tree_param_specs(tree: PyTree, mesh) -> PyTree:
+    """Map :func:`param_spec` over a whole pytree (params or train state).
+
+    Works on concrete arrays and ShapeDtypeStructs alike; PackedWeight
+    dataclasses are descended into (their planes/sign/scale fields get
+    their own rules).
+    """
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    specs = [param_spec(_path_name(path), tuple(leaf.shape), mesh) for path, leaf in flat]
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+# ---------------------------------------------------------------------------
+# Cache rules
+# ---------------------------------------------------------------------------
+
+
+def cache_spec(name: str, shape: Tuple[int, ...], mesh) -> P:
+    """PartitionSpec for one decode-cache tensor (no leading stack axis).
+
+    KV tensors are (B, S, KV, hd): batch -> data, kv-heads -> model, with
+    two fallbacks — a kv-head count the model axis doesn't divide (MQA's
+    1, or small GQA counts) moves "model" to the sequence axis (decode
+    writes stay shard-local: each token's update lands on one seq shard;
+    the attention read becomes a psum, same pattern as row-parallel), and
+    a batch of exactly 1 (long context) additionally spreads the sequence
+    over the data axes.  Any other indivisible dim is replicated.
+    Recurrent state/conv tensors shard batch only (their channel math is
+    value-coupled across features).
+    """
+    leaf = name.split("/")[-1].lower()
+    ndim = len(shape)
+    if leaf in ("k", "v", "kv") and ndim == 4:
+        B, S, KV, _ = shape
+        spec: list = [None] * 4
+        spec[0] = dp_axes(mesh, B)
+        if KV > 1 and _fits(mesh, "model", KV):
+            spec[2] = "model"
+        elif _fits(mesh, "model", S):
+            spec[1] = "model"
+        if B == 1:
+            # batch-1 long context: the sequence is the only big axis left.
+            # (Indivisible B > 1 keeps the batch axis replicated instead —
+            # the rule-table default — so small uneven buckets don't pay
+            # per-token scatter traffic on a sequence-sharded cache.)
+            dm = _axis_size(mesh, "data") * max(_axis_size(mesh, "model"), 1)
+            if spec[1] == "model" and _axis_size(mesh, "data") > 0 and S % dm == 0:
+                spec[1] = ("data", "model")
+            elif spec[1] is None:
+                spec[1] = dp_axes(mesh, S)
+        return P(*spec)
+    # Recurrent caches (ssm/rglru state, conv tails): batch-sharded only.
+    spec = [None] * ndim
+    if ndim >= 1:
+        spec[0] = dp_axes(mesh, shape[0])
+    return P(*spec)
+
+
+def cache_tree_specs(cache: PyTree, mesh) -> PyTree:
+    """:func:`cache_spec` over a whole decode cache; entries under
+    ``blocks`` carry a leading superblock axis (replicated)."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache)
+    specs = []
+    for path, leaf in flat:
+        name = _path_name(path)
+        segs = name.split("/")
+        if segs and segs[0] == "blocks":
+            specs.append(P(None, *cache_spec(segs[-1], tuple(leaf.shape)[1:], mesh)))
+        else:
+            specs.append(cache_spec(segs[-1], tuple(leaf.shape), mesh))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+# ---------------------------------------------------------------------------
+# Batch rules + NamedSharding convenience wrappers
+# ---------------------------------------------------------------------------
+
+
+def data_batch_spec(mesh, batch_dim: int, ndim: int) -> P:
+    """Input batches: leading dim over the DP axes, rest replicated."""
+    spec = [None] * ndim
+    if ndim >= 1:
+        spec[0] = dp_axes(mesh, batch_dim)
+    return P(*spec)
+
+
+def tree_shardings(mesh, spec_tree: PyTree) -> PyTree:
+    """PartitionSpec tree -> NamedSharding tree (specs are leaves)."""
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree, is_leaf=lambda x: isinstance(x, P)
+    )
+
+
+def batch_shardings(mesh, batch_tree: PyTree) -> PyTree:
+    """NamedShardings for a batch pytree (arrays or ShapeDtypeStructs)."""
+    return jax.tree.map(
+        lambda x: NamedSharding(mesh, data_batch_spec(mesh, x.shape[0], len(x.shape))),
+        batch_tree,
+    )
+
+
+def scalar_sharding(mesh) -> NamedSharding:
+    return NamedSharding(mesh, replicated())

@@ -22,14 +22,15 @@ import traceback
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as P
 
 from ..configs import ARCH_IDS, SHAPES, get_config, shape_applicable
 from ..core.bsq import BSQConfig
 from ..dist.sharding import (
+    batch_shardings,
     cache_tree_specs,
-    data_batch_spec,
+    scalar_sharding,
     tree_param_specs,
+    tree_shardings,
 )
 from ..models import transformer
 from ..models.frontends import batch_specs
@@ -38,18 +39,6 @@ from ..roofline import analysis
 from ..train.step import abstract_bsq_state, abstract_plain_state, make_bsq_train_step, \
     make_plain_train_step
 from .mesh import make_production_mesh
-
-
-def _shardings(mesh, spec_tree):
-    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
-                        is_leaf=lambda x: isinstance(x, P))
-
-
-def _batch_shardings(mesh, batch_sds):
-    return jax.tree.map(
-        lambda s: NamedSharding(mesh, data_batch_spec(mesh, s.shape[0], len(s.shape))),
-        batch_sds,
-    )
 
 
 def _active_params(cfg, params_sds) -> float:
@@ -87,9 +76,8 @@ def build_train_cell(cfg, shape, mesh, technique="bsq", optimizer="sgdm",
         fn = make_plain_train_step(cfg, opt, lr_fn)
         params_sds = state_sds["params"]
     batch_sds = batch_specs(cfg, shape)
-    state_specs = tree_param_specs(state_sds, mesh)
-    state_sh = _shardings(mesh, state_specs)
-    batch_sh = _batch_shardings(mesh, batch_sds)
+    state_sh = tree_shardings(mesh, tree_param_specs(state_sds, mesh))
+    batch_sh = batch_shardings(mesh, batch_sds)
     n_active = _active_params(cfg, params_sds)
     tokens = shape.seq_len * shape.global_batch
     mf = 6.0 * n_active * tokens / math.prod(mesh.devices.shape)
@@ -120,14 +108,12 @@ def build_decode_cell(cfg, shape, mesh, packed_bits: int = 0):
     def fn(params, cache, tok, pos, cross):
         return transformer.decode_step(params, cache, tok, pos, cfg, cross_embeds=cross)
 
-    params_sh = _shardings(mesh, tree_param_specs(params_sds, mesh))
-    cache_sh = _shardings(mesh, cache_tree_specs(cache_sds, mesh))
-    tok_sh = NamedSharding(mesh, data_batch_spec(mesh, B, len(tok_sds.shape)))
+    params_sh = tree_shardings(mesh, tree_param_specs(params_sds, mesh))
+    cache_sh = tree_shardings(mesh, cache_tree_specs(cache_sds, mesh))
+    tok_sh = batch_shardings(mesh, tok_sds)
     pos_sds = jax.ShapeDtypeStruct((), jnp.int32)
-    pos_sh = NamedSharding(mesh, P())
-    cross_sh = (
-        NamedSharding(mesh, data_batch_spec(mesh, B, 3)) if cross_sds is not None else None
-    )
+    pos_sh = scalar_sharding(mesh)
+    cross_sh = batch_shardings(mesh, cross_sds) if cross_sds is not None else None
     args = (params_sds, cache_sds, tok_sds, pos_sds, cross_sds)
     in_sh = (params_sh, cache_sh, tok_sh, pos_sh, cross_sh)
     out_sh = (None, cache_sh)
@@ -149,8 +135,8 @@ def build_prefill_cell(cfg, shape, mesh):
     params_sds = jax.eval_shape(
         lambda k: transformer.init_params(k, cfg), jax.random.PRNGKey(0)
     )
-    params_sh = _shardings(mesh, tree_param_specs(params_sds, mesh))
-    batch_sh = _batch_shardings(mesh, batch_sds)
+    params_sh = tree_shardings(mesh, tree_param_specs(params_sds, mesh))
+    batch_sh = batch_shardings(mesh, batch_sds)
     n_active = _active_params(cfg, params_sds)
     tokens = shape.seq_len * shape.global_batch
     mf = 2.0 * n_active * tokens / math.prod(mesh.devices.shape)

@@ -1,7 +1,13 @@
 """Serving launcher: load (or train-and-quantise) a model, serve batches.
 
     PYTHONPATH=src python -m repro.launch.serve --arch granite-3-2b \
-        --requests 8 --max-new 32 [--scheme /path/scheme.json]
+        --requests 8 --max-new 32 [--scheme /path/scheme.json] \
+        [--data-parallel N --model-parallel M]
+
+With --data-parallel/--model-parallel the engine serves on a real
+("data", "model") mesh: params and the KV cache are sharded under the
+repro.dist rules (requires N*M local devices, e.g. via XLA_FLAGS
+--xla_force_host_platform_device_count).
 """
 import argparse
 
@@ -18,16 +24,33 @@ def main():
     ap.add_argument("--max-new", type=int, default=32)
     ap.add_argument("--max-len", type=int, default=256)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--data-parallel", type=int, default=0)
+    ap.add_argument("--model-parallel", type=int, default=0)
     args = ap.parse_args()
 
     from ..configs import reduced_config
     from ..data import MarkovLM
+    from ..dist import elastic
     from ..models import init_params
     from ..serve import Request, ServeEngine
 
     cfg = reduced_config(args.arch)
+    mesh = None
+    if bool(args.data_parallel) != bool(args.model_parallel):
+        raise SystemExit("--data-parallel and --model-parallel must be given together "
+                         "(use 1 for an unsharded axis)")
+    if args.data_parallel and args.model_parallel:
+        mesh = jax.make_mesh((args.data_parallel, args.model_parallel), ("data", "model"))
+        # Advisory only: the engine tolerates indivisible buckets (batch
+        # axis replicated), it just loses the data-parallel speedup.
+        if not elastic.validate_batch_divisibility(args.requests, mesh):
+            print(
+                f"[serve] note: --requests {args.requests} does not divide over "
+                f"the data axis ({dict(mesh.shape)}); buckets will run with a "
+                "replicated batch axis"
+            )
     params = init_params(jax.random.PRNGKey(0), cfg)
-    engine = ServeEngine(params, cfg, max_len=args.max_len)
+    engine = ServeEngine(params, cfg, max_len=args.max_len, mesh=mesh)
     task = MarkovLM(vocab=cfg.vocab_size, seed=3)
     reqs = [
         Request(

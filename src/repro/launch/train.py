@@ -42,6 +42,7 @@ def main():
     from ..configs import get_config, reduced_config
     from ..core import BSQConfig
     from ..data import MarkovLM, sharded_lm_iterator
+    from ..dist import elastic, sharding as dist_sharding
     from ..optim import SGDM, AdamW, step_decay
     from ..train.step import (
         init_bsq_state,
@@ -56,13 +57,22 @@ def main():
     opt = SGDM() if args.optimizer == "sgdm" else AdamW()
     lr_fn = step_decay(args.lr, [int(args.steps * 0.7), int(args.steps * 0.9)])
 
-    # optional explicit mesh + sharded state placement
+    # optional explicit mesh + sharded state placement (rules: repro.dist)
     mesh = None
+    batch_sharding = None
     if args.data_parallel and args.model_parallel:
         mesh = jax.make_mesh((args.data_parallel, args.model_parallel), ("data", "model"))
+        if not elastic.validate_batch_divisibility(args.batch, mesh):
+            raise SystemExit(
+                f"--batch {args.batch} does not divide over the mesh's data axes "
+                f"({dict(mesh.shape)}); pick a batch the DP axes divide"
+            )
+        batch_sharding = dist_sharding.tree_shardings(
+            mesh, dist_sharding.data_batch_spec(mesh, args.batch, 2)
+        )
 
     task = MarkovLM(vocab=cfg.vocab_size, seed=13)
-    data = sharded_lm_iterator(task, args.batch, args.seq, seed=0)
+    data = sharded_lm_iterator(task, args.batch, args.seq, seed=0, sharding=batch_sharding)
     tcfg = TrainerConfig(
         total_steps=args.steps, requant_interval=args.requant_interval,
         ckpt_interval=args.ckpt_interval, log_interval=10, workdir=args.workdir,
@@ -73,20 +83,16 @@ def main():
                             compute_dtype=jnp.float32 if args.reduced else jnp.bfloat16)
         state, ctx = init_bsq_state(jax.random.PRNGKey(0), cfg, bsq_cfg, opt)
         if mesh is not None:
-            from jax.sharding import NamedSharding
-
-            from ..dist.sharding import tree_param_specs
-
-            sh = jax.tree.map(lambda s: NamedSharding(mesh, s),
-                              tree_param_specs(state, mesh))
-            state = jax.tree.map(jax.device_put, state, sh)
+            state = elastic.reshard_tree(state, mesh)
         step = jax.jit(make_bsq_train_step(ctx, opt, lr_fn), donate_argnums=0)
         requant = jax.jit(make_requant_step(ctx))
-        out = train_bsq(state, ctx, step, requant, data, tcfg)
+        out = train_bsq(state, ctx, step, requant, data, tcfg, mesh=mesh)
         s = out["scheme"]
         print(f"done: bits/para={s.bits_per_param:.2f} comp={s.compression:.2f}x")
     else:
         state = init_plain_state(jax.random.PRNGKey(0), cfg, opt)
+        if mesh is not None:
+            state = elastic.reshard_tree(state, mesh)
         step = jax.jit(make_plain_train_step(cfg, opt, lr_fn), donate_argnums=0)
         state, history = simple_train_loop(state, step, data, args.steps)
         print(f"done: final={history[-1]}")

@@ -25,7 +25,9 @@ def dense_apply(x: jax.Array, w) -> jax.Array:
     from ..kernels import ops
 
     if isinstance(w, PackedWeight):
-        return ops.bitserial_matmul(x, w, use_pallas=False)
+        # use_pallas=None -> ops dispatches by backend (Pallas kernel on
+        # TPU, fused-unpack XLA ref elsewhere).
+        return ops.bitserial_matmul(x, w, use_pallas=None)
     return x @ w.astype(x.dtype)
 
 
@@ -70,15 +72,27 @@ def rope_freqs(head_dim: int, theta: float) -> jax.Array:
 
 
 def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
-    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    """x: (..., S, H, hd); positions: broadcastable to (..., S).
+
+    Rotation pairs are INTERLEAVED (2j, 2j+1), not half-split (j, j+hd/2):
+    the pair then lives in a (hd/2, 2) minor axis after a shard-aligned
+    reshape, so the op stays elementwise-local when hd derives from a
+    model-sharded projection.  The half-split form slices/concats across
+    the sharded axis, which XLA's CPU SPMD partitioner handles via
+    "involuntary full rematerialization" — and miscompiles (wrong values,
+    observed on jax 0.4.37 with hd sharded and batch replicated).  Both
+    conventions are valid RoPE; all call sites (train/prefill/decode)
+    share this one, so caches stay consistent.
+    """
     hd = x.shape[-1]
     freqs = rope_freqs(hd, theta)  # (hd/2,)
     ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, hd/2)
     sin = jnp.sin(ang)[..., None, :]  # (..., S, 1, hd/2)
     cos = jnp.cos(ang)[..., None, :]
-    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
-    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
-    return out.astype(x.dtype)
+    xr = x.astype(jnp.float32).reshape(*x.shape[:-1], hd // 2, 2)
+    a, b = xr[..., 0], xr[..., 1]
+    out = jnp.stack([a * cos - b * sin, b * cos + a * sin], axis=-1)
+    return out.reshape(x.shape).astype(x.dtype)
 
 
 # ---------------------------------------------------------------------------

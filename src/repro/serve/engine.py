@@ -1,13 +1,20 @@
 """Batched serving engine over BSQ-quantised (packed) weights.
 
 Pipeline: requests -> length-bucketed batches -> jitted prefill ->
-jitted decode loop (token-at-a-time, greedy or temperature sampling).
+jitted decode loop (token-at-a-time, per-request greedy or temperature
+sampling).
 
 Weights arrive either as plain float params or as a BSQ export
 (``core.export_packed``): packed weights are dequantised on the fly by
 ``kernels.ops.bitserial_matmul`` (Pallas on TPU, fused-unpack XLA ref
 path elsewhere), so HBM reads scale with the *mixed-precision* bit count
 — the serving-side payoff of the paper's compression (DESIGN.md §3.2).
+
+Sharding: with a ``mesh``, params and the decode cache are placed under
+the dist-layer rules (``dist.sharding.tree_param_specs`` /
+``cache_tree_specs``) — the engine then runs as a real ("data", "model")
+SPMD program instead of single-device.  All layout decisions live in
+:mod:`repro.dist`; this module only asks for shardings.
 
 Bucketing: one compiled program per (prompt_len_bucket, batch) shape;
 requests inside a bucket share positions, so the per-request position
@@ -18,13 +25,14 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Dict, List, Optional
+from typing import Callable, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from ..configs.base import ModelConfig
+from ..dist import sharding as dist_sharding
 from ..models import transformer
 
 
@@ -45,25 +53,64 @@ class Result:
 
 
 class ServeEngine:
-    def __init__(self, params, cfg: ModelConfig, max_len: int = 4096, seed: int = 0):
-        self.params = params
+    def __init__(self, params, cfg: ModelConfig, max_len: int = 4096, seed: int = 0,
+                 mesh=None):
         self.cfg = cfg
         self.max_len = max_len
         self.key = jax.random.PRNGKey(seed)
-        self._prefill = jax.jit(
-            lambda p, batch: transformer.prefill(p, batch, cfg, max_len),
-        )
+        self.mesh = mesh
+        if mesh is not None:
+            from ..dist.elastic import reshard_tree
+
+            params = reshard_tree(params, mesh)
+        self.params = params
+        self._prefill_cache: Dict[int, Callable] = {}
         self._decode = jax.jit(
             lambda p, cache, tok, pos: transformer.decode_step(p, cache, tok, pos, cfg)
         )
 
+    # -- sharding ---------------------------------------------------------
+    def _prefill_fn(self, batch: int):
+        """Jitted prefill for one batch size.  With a mesh, the cache's
+        OUTPUT sharding is constrained to the dist rules, so XLA emits it
+        directly in the serving layout (no post-hoc reshard copy); the
+        decode loop then just propagates it."""
+        fn = self._prefill_cache.get(batch)
+        if fn is None:
+            out_sh = None
+            if self.mesh is not None:
+                cache_sds = jax.eval_shape(
+                    lambda: transformer.init_cache(self.cfg, batch, self.max_len)
+                )
+                out_sh = (
+                    None,
+                    dist_sharding.tree_shardings(
+                        self.mesh, dist_sharding.cache_tree_specs(cache_sds, self.mesh)
+                    ),
+                )
+            fn = jax.jit(
+                lambda p, b: transformer.prefill(p, b, self.cfg, self.max_len),
+                out_shardings=out_sh,
+            )
+            self._prefill_cache[batch] = fn
+        return fn
+
+    def _place_batch(self, arr: jax.Array) -> jax.Array:
+        if self.mesh is None:
+            return arr
+        return jax.device_put(arr, dist_sharding.batch_shardings(self.mesh, arr))
+
     # -- sampling ---------------------------------------------------------
-    def _sample(self, logits: jax.Array, temperature: float) -> jax.Array:
+    def _sample(self, logits: jax.Array, temperatures: jax.Array, any_hot: bool) -> jax.Array:
+        """Per-request sampling: row i uses temperatures[i]; 0 => greedy."""
         logits = logits[:, : self.cfg.vocab_size]  # mask padded vocab rows
-        if temperature <= 0.0:
-            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        if not any_hot:
+            return greedy
         self.key, sub = jax.random.split(self.key)
-        return jax.random.categorical(sub, logits / temperature, axis=-1).astype(jnp.int32)
+        safe_t = jnp.where(temperatures > 0, temperatures, 1.0)[:, None]
+        sampled = jax.random.categorical(sub, logits / safe_t, axis=-1).astype(jnp.int32)
+        return jnp.where(temperatures > 0, sampled, greedy)
 
     # -- batching ---------------------------------------------------------
     @staticmethod
@@ -81,19 +128,20 @@ class ServeEngine:
 
     def _run_bucket(self, plen: int, bucket: List[Request]) -> List[Result]:
         B = len(bucket)
-        prompts = jnp.asarray(np.stack([r.tokens for r in bucket]))
+        prompts = self._place_batch(jnp.asarray(np.stack([r.tokens for r in bucket])))
+        temps = jnp.asarray([r.temperature for r in bucket], jnp.float32)
+        any_hot = any(r.temperature > 0 for r in bucket)
         max_new = max(r.max_new for r in bucket)
         t0 = time.perf_counter()
-        logits, cache = self._prefill(self.params, {"tokens": prompts})
+        logits, cache = self._prefill_fn(B)(self.params, {"tokens": prompts})
         jax.block_until_ready(logits)
         prefill_ms = (time.perf_counter() - t0) * 1e3
-        temp = bucket[0].temperature
-        tok = self._sample(logits, temp)
+        tok = self._sample(logits, temps, any_hot)
         out_toks = [tok]
         t1 = time.perf_counter()
         for t in range(max_new - 1):
             logits, cache = self._decode(self.params, cache, tok[:, None], jnp.int32(plen + t))
-            tok = self._sample(logits, temp)
+            tok = self._sample(logits, temps, any_hot)
             out_toks.append(tok)
         jax.block_until_ready(tok)
         decode_ms = (time.perf_counter() - t1) * 1e3 / max(max_new - 1, 1)

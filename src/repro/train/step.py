@@ -343,11 +343,7 @@ def make_compressed_dp_step(cfg: ModelConfig, optimizer, lr_fn, mesh, axis="data
     "residual" tree (error feedback).  Used by tests and as the §Perf
     lever for collective-bound cells.
     """
-    from functools import partial
-
-    from jax.sharding import PartitionSpec as P
-
-    from ..dist.collectives import init_residuals, tree_compressed_psum_ef
+    from ..dist.collectives import dp_shard_map, init_residuals, tree_compressed_psum_ef
 
     n_dp = mesh.shape[axis]
 
@@ -355,9 +351,7 @@ def make_compressed_dp_step(cfg: ModelConfig, optimizer, lr_fn, mesh, axis="data
         params = transformer.init_params(key, cfg)
         # error-feedback residual is genuinely per-DP-shard state: leading
         # shard axis, sharded over `axis`.
-        residual = jax.tree.map(
-            lambda x: jnp.zeros((n_dp,) + x.shape, jnp.float32), params
-        )
+        residual = init_residuals(params, n_shards=n_dp)
         return {
             "params": params,
             "opt": optimizer.init(params),
@@ -377,13 +371,7 @@ def make_compressed_dp_step(cfg: ModelConfig, optimizer, lr_fn, mesh, axis="data
         new_residual = jax.tree.map(lambda r: r[None], new_residual)
         return l, metrics, grads, new_residual
 
-    sharded = jax.shard_map(
-        per_shard,
-        mesh=mesh,
-        in_specs=(P(), P(axis), P(axis)),
-        out_specs=(P(), P(), P(), P(axis)),
-        check_vma=False,
-    )
+    sharded = dp_shard_map(per_shard, mesh, axis)
 
     def train_step(state, batch):
         l, metrics, grads, new_residual = sharded(state["params"], state["residual"], batch)

@@ -64,17 +64,22 @@ def train_bsq(
     data_iter: Iterator,
     tcfg: TrainerConfig,
     eval_fn: Optional[Callable] = None,
+    mesh=None,
 ) -> Dict:
-    """Run the BSQ phase. Returns dict(state=, history=, scheme=)."""
+    """Run the BSQ phase. Returns dict(state=, history=, scheme=).
+
+    With ``mesh``, checkpoint resume is elastic: restored leaves are
+    placed under the dist-layer rules for THIS mesh, so a run can resume
+    on a different device count/topology than it checkpointed on."""
     history = []
     monitor = StragglerMonitor(tcfg.straggler_ema, tcfg.straggler_factor)
     start_step = int(jax.device_get(state["step"]))
     if tcfg.workdir:
         os.makedirs(tcfg.workdir, exist_ok=True)
 
-    # --- auto-resume -------------------------------------------------------
+    # --- auto-resume (elastic when a mesh is given) ------------------------
     if tcfg.workdir:
-        restored, step_found = ckpt.restore_latest(state, tcfg.workdir)
+        restored, step_found = ckpt.restore_latest(state, tcfg.workdir, mesh=mesh)
         if restored is not None:
             state = restored
             start_step = step_found

@@ -51,7 +51,12 @@ def test_alpha_controls_compression():
 
 
 def test_requant_preserves_loss():
-    """Paper §3.3: sW_q unchanged by requantisation => same CE loss."""
+    """Paper §3.3: sW_q unchanged by requantisation => same CE loss.
+
+    The CE is the §3.3 invariant and must match tightly.  The regulariser
+    is NOT requant-invariant (binarising continuous planes moves the
+    bit-group norms), so the total loss only gets tolerance proportional
+    to the expected alpha * reg movement."""
     cfg = reduced_config("granite-3-2b")
     bsq_cfg = BSQConfig(n_init=8, alpha=5e-3, mode="static", compute_dtype=jnp.float32)
     opt = SGDM()
@@ -61,10 +66,11 @@ def test_requant_preserves_loss():
     batch = synthetic_batch(cfg, 4, 16)
     for _ in range(5):
         state, _ = step(state, batch)
-    l_before, _ = bsq_loss(state["trainable"], state["masks"], batch, ctx)
+    l_before, m_before = bsq_loss(state["trainable"], state["masks"], batch, ctx)
     state2 = requant(state)
-    l_after, _ = bsq_loss(state2["trainable"], state2["masks"], batch, ctx)
-    np.testing.assert_allclose(float(l_before), float(l_after), rtol=1e-4)
+    l_after, m_after = bsq_loss(state2["trainable"], state2["masks"], batch, ctx)
+    np.testing.assert_allclose(float(m_before["ce"]), float(m_after["ce"]), rtol=1e-5)
+    np.testing.assert_allclose(float(l_before), float(l_after), rtol=1e-3)
 
 
 def test_training_reduces_ce():

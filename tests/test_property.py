@@ -4,6 +4,9 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="optional dep: property tests need hypothesis")
 from hypothesis import HealthCheck, given, settings
 from hypothesis import strategies as st
 
