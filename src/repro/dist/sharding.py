@@ -240,6 +240,23 @@ def cache_spec(name: str, shape: Tuple[int, ...], mesh) -> P:
     return P(*spec)
 
 
+def slot_pool_specs(pool_state: PyTree, mesh) -> PyTree:
+    """Specs for a continuous-batching slot pool (serve/slots.py).
+
+    The pool's decode cache (batch axis = n_slots) shards under the cache
+    rules — slots spread over the data axes, KV heads over model.  The
+    per-slot control vectors (``pos``, ``temps``, any other (n_slots,)
+    leaf outside "cache") stay replicated: they are tiny, participate in
+    every lane's masking, and the admission scatter updates single
+    elements — sharding them would turn each admission into a
+    one-element collective.
+    """
+    return {
+        k: cache_tree_specs(v, mesh) if k == "cache" else jax.tree.map(lambda _: replicated(), v)
+        for k, v in pool_state.items()
+    }
+
+
 def cache_tree_specs(cache: PyTree, mesh) -> PyTree:
     """:func:`cache_spec` over a whole decode cache; entries under
     ``blocks`` carry a leading superblock axis (replicated)."""

@@ -1,19 +1,45 @@
-"""Serving launcher: load (or train-and-quantise) a model, serve batches.
+"""Serving launcher: load (or train-and-quantise) a model, serve requests.
 
     PYTHONPATH=src python -m repro.launch.serve --arch granite-3-2b \
         --requests 8 --max-new 32 [--scheme /path/scheme.json] \
-        [--data-parallel N --model-parallel M]
+        [--data-parallel N --model-parallel M] \
+        [--continuous --slots 8 --arrival-rate 0.5 --mixed-lens]
+
+Scheduling modes:
+
+* default (bucketed): offline batching — requests grouped by prompt
+  length, one compiled program per (length, batch) bucket.  Arrival
+  times are ignored; every request must be present up front.
+* ``--continuous``: the slot-pool scheduler (repro.serve.scheduler).
+  ``--slots N`` persistent decode lanes are allocated once; requests are
+  admitted FIFO into free lanes as they arrive and evicted lanes are
+  refilled mid-flight, so mixed prompt lengths and staggered arrivals
+  share one compiled decode program.  ``--arrival-rate R`` simulates a
+  Poisson request stream (mean R arrivals per decode step, seeded);
+  ``--mixed-lens`` cycles prompt lengths through {1/2, 1, 3/2, 2} x
+  --prompt-len to exercise the mixed-length path.
 
 With --data-parallel/--model-parallel the engine serves on a real
-("data", "model") mesh: params and the KV cache are sharded under the
-repro.dist rules (requires N*M local devices, e.g. via XLA_FLAGS
---xla_force_host_platform_device_count).
+("data", "model") mesh: params, the KV cache and the slot pool are
+sharded under the repro.dist rules (requires N*M local devices, e.g. via
+XLA_FLAGS --xla_force_host_platform_device_count).
 """
 import argparse
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+
+def poisson_arrivals(n: int, rate: float, seed: int = 0):
+    """Arrival steps for a simulated Poisson stream: exponential
+    inter-arrival gaps with mean 1/rate decode steps, cumulated and
+    floored onto the scheduler's integer step clock."""
+    if rate <= 0:
+        return [0] * n
+    rng = np.random.default_rng(seed)
+    gaps = rng.exponential(scale=1.0 / rate, size=n)
+    return np.floor(np.cumsum(gaps)).astype(int).tolist()
 
 
 def main():
@@ -26,6 +52,15 @@ def main():
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--data-parallel", type=int, default=0)
     ap.add_argument("--model-parallel", type=int, default=0)
+    ap.add_argument("--continuous", action="store_true",
+                    help="serve through the slot-pool continuous-batching scheduler")
+    ap.add_argument("--slots", type=int, default=8,
+                    help="slot-pool lanes (continuous mode)")
+    ap.add_argument("--arrival-rate", type=float, default=0.0,
+                    help="simulate Poisson arrivals at this mean rate per decode "
+                         "step (continuous mode; 0 = all requests at step 0)")
+    ap.add_argument("--mixed-lens", action="store_true",
+                    help="cycle prompt lengths around --prompt-len")
     args = ap.parse_args()
 
     from ..configs import reduced_config
@@ -50,24 +85,37 @@ def main():
                 "replicated batch axis"
             )
     params = init_params(jax.random.PRNGKey(0), cfg)
-    engine = ServeEngine(params, cfg, max_len=args.max_len, mesh=mesh)
+    engine = ServeEngine(params, cfg, max_len=args.max_len, mesh=mesh,
+                         continuous=args.continuous, n_slots=args.slots)
     task = MarkovLM(vocab=cfg.vocab_size, seed=3)
+    if args.mixed_lens:
+        lens = [max(2, args.prompt_len * m // 2) for m in (1, 2, 3, 4)]
+    else:
+        lens = [args.prompt_len]
     reqs = [
         Request(
             uid=i,
-            tokens=task.sample(np.random.default_rng(i), 1, args.prompt_len)[0,
-                   : args.prompt_len].astype(np.int32),
+            tokens=task.sample(np.random.default_rng(i), 1, max(lens))[0,
+                   : lens[i % len(lens)]].astype(np.int32),
             max_new=args.max_new,
             temperature=args.temperature,
         )
         for i in range(args.requests)
     ]
-    results = engine.generate(reqs)
-    for r in results:
+    arrivals = poisson_arrivals(args.requests, args.arrival_rate) if args.continuous else None
+    results = engine.generate(reqs, arrival_steps=arrivals) if args.continuous \
+        else engine.generate(reqs)
+    for r in sorted(results, key=lambda r: r.uid):
         print(f"req {r.uid}: prefill {r.prefill_ms:.1f} ms, "
               f"{r.decode_ms_per_tok:.2f} ms/tok, tokens={r.tokens[:8]}...")
     total = sum(len(r.tokens) for r in results)
     print(f"{total} tokens generated")
+    if args.continuous:
+        sched = engine.scheduler
+        print(f"[continuous] slots={args.slots} "
+              f"occupancy={sched.mean_occupancy():.2f} "
+              f"decode_steps={sched.decode_steps} "
+              f"decode_programs={sched.compiled_decode_programs()}")
 
 
 if __name__ == "__main__":

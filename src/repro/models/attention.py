@@ -126,22 +126,34 @@ def decode_attention(
     window: Optional[int] = None,
 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """One-token decode.  x: (B, 1, D); cache_[kv]: (B, Smax, K, d);
-    pos: scalar int32 current position.  Returns (out, new_k, new_v)."""
+    pos: scalar int32 current position, or a (B,) int32 vector of
+    per-slot positions (continuous batching: each lane of the batch is an
+    independent request at its own depth — RoPE, the causal mask and the
+    cache write all use that lane's position).  Returns (out, new_k, new_v)."""
     B = x.shape[0]
     G = n_heads // n_kv
     q, k, v = _qkv(p, x, n_heads, n_kv, head_dim)
-    posb = jnp.full((B, 1), pos)
+    per_slot = jnp.ndim(pos) == 1
+    posb = pos[:, None] if per_slot else jnp.full((B, 1), pos)
     q = apply_rope(q, posb, rope_theta)
     k = apply_rope(k, posb, rope_theta)
-    cache_k = jax.lax.dynamic_update_slice_in_dim(cache_k, k.astype(cache_k.dtype), pos, axis=1)
-    cache_v = jax.lax.dynamic_update_slice_in_dim(cache_v, v.astype(cache_v.dtype), pos, axis=1)
+    if per_slot:
+        bidx = jnp.arange(B)
+        cache_k = cache_k.at[bidx, pos].set(k[:, 0].astype(cache_k.dtype))
+        cache_v = cache_v.at[bidx, pos].set(v[:, 0].astype(cache_v.dtype))
+    else:
+        cache_k = jax.lax.dynamic_update_slice_in_dim(
+            cache_k, k.astype(cache_k.dtype), pos, axis=1)
+        cache_v = jax.lax.dynamic_update_slice_in_dim(
+            cache_v, v.astype(cache_v.dtype), pos, axis=1)
     q = q.reshape(B, 1, n_kv, G, head_dim) * (head_dim**-0.5)
     s = _gqa_scores(q, cache_k.astype(x.dtype))  # (B, K, G, 1, Smax)
     kpos = jnp.arange(cache_k.shape[1])
-    valid = kpos <= pos
+    valid = kpos[None, :] <= posb  # (B, Smax) or (B-broadcast, Smax)
     if window is not None:
-        valid &= (pos - kpos) < window
-    s = jnp.where(valid[None, None, None, None, :], s, NEG_INF)
+        valid &= (posb - kpos[None, :]) < window
+    valid = jnp.broadcast_to(valid, (B, cache_k.shape[1]))
+    s = jnp.where(valid[:, None, None, None, :], s, NEG_INF)
     w = jax.nn.softmax(s, axis=-1)
     out = _gqa_combine(w, cache_v.astype(x.dtype), x.dtype)
     return dense_apply(out, p["wo"]), cache_k, cache_v
@@ -169,6 +181,10 @@ def decode_attention_cache(
     matter, which slot ``s`` encodes as ``p_s = pos - ((pos - s) mod Wc)``.
     This caps the long-context cache of local layers at the window size —
     the difference between 16 GB and 64 MB per local layer at 500k.
+
+    ``pos`` may be a scalar or a (B,) per-slot vector (continuous
+    batching) — with a vector, each lane writes its own ring slot and
+    masks against its own absolute positions.
     """
     if not ring:
         return decode_attention(
@@ -179,20 +195,30 @@ def decode_attention_cache(
     Wc = cache_k.shape[1]
     G = n_heads // n_kv
     q, k, v = _qkv(p, x, n_heads, n_kv, head_dim)
-    posb = jnp.full((B, 1), pos)
+    per_slot = jnp.ndim(pos) == 1
+    posb = pos[:, None] if per_slot else jnp.full((B, 1), pos)
     q = apply_rope(q, posb, rope_theta)
     k = apply_rope(k, posb, rope_theta)
-    slot = jnp.mod(pos, Wc)
-    cache_k = jax.lax.dynamic_update_slice_in_dim(cache_k, k.astype(cache_k.dtype), slot, axis=1)
-    cache_v = jax.lax.dynamic_update_slice_in_dim(cache_v, v.astype(cache_v.dtype), slot, axis=1)
+    if per_slot:
+        bidx = jnp.arange(B)
+        lane_slot = jnp.mod(pos, Wc)  # (B,)
+        cache_k = cache_k.at[bidx, lane_slot].set(k[:, 0].astype(cache_k.dtype))
+        cache_v = cache_v.at[bidx, lane_slot].set(v[:, 0].astype(cache_v.dtype))
+    else:
+        slot = jnp.mod(pos, Wc)
+        cache_k = jax.lax.dynamic_update_slice_in_dim(
+            cache_k, k.astype(cache_k.dtype), slot, axis=1)
+        cache_v = jax.lax.dynamic_update_slice_in_dim(
+            cache_v, v.astype(cache_v.dtype), slot, axis=1)
     q = q.reshape(B, 1, n_kv, G, head_dim) * (head_dim**-0.5)
     s = _gqa_scores(q, cache_k.astype(x.dtype))  # (B, K, G, 1, Wc)
     slots = jnp.arange(Wc)
-    abs_pos = pos - jnp.mod(pos - slots, Wc)
+    abs_pos = posb - jnp.mod(posb - slots[None, :], Wc)  # (B, Wc) / (1, Wc)
     valid = abs_pos >= 0
     if window is not None and window < Wc:
-        valid &= (pos - abs_pos) < window
-    s = jnp.where(valid[None, None, None, None, :], s, NEG_INF)
+        valid &= (posb - abs_pos) < window
+    valid = jnp.broadcast_to(valid, (B, Wc))
+    s = jnp.where(valid[:, None, None, None, :], s, NEG_INF)
     w = jax.nn.softmax(s, axis=-1)
     out = _gqa_combine(w, cache_v.astype(x.dtype), x.dtype)
     return dense_apply(out, p["wo"]), cache_k, cache_v

@@ -321,11 +321,17 @@ def decode_step(
     params: Params,
     cache,
     tokens: jax.Array,  # (B, 1) int32 or embeds (B, 1, D)
-    pos: jax.Array,  # scalar int32
+    pos: jax.Array,  # scalar int32, or (B,) int32 per-slot positions
     cfg: ModelConfig,
     cross_embeds: Optional[jax.Array] = None,
 ):
-    """One decode step for the whole model. Returns (logits (B,V), cache)."""
+    """One decode step for the whole model. Returns (logits (B,V), cache).
+
+    ``pos`` is either a scalar (all lanes at the same depth — the
+    bucketed serving path) or a (B,) vector of per-slot positions (the
+    continuous-batching slot pool: each lane is an independent request;
+    attention layers apply per-lane RoPE/causal masking, recurrent layers
+    are position-free so the vector passes through untouched)."""
     dt = cfg.compute_dtype
     if tokens.ndim == 3:
         x = tokens.astype(dt)

@@ -1,31 +1,43 @@
-"""Batched serving engine over BSQ-quantised (packed) weights.
+"""Serving engine over BSQ-quantised (packed) weights.
 
-Pipeline: requests -> length-bucketed batches -> jitted prefill ->
-jitted decode loop (token-at-a-time, per-request greedy or temperature
-sampling).
+Two scheduling modes share one engine:
+
+* **Continuous batching** (``continuous=True``): requests stream through
+  a fixed-capacity slot pool (:mod:`repro.serve.scheduler` /
+  :mod:`repro.serve.slots`).  The decode cache is allocated once per
+  engine as ``n_slots`` persistent lanes; admission prefills a request
+  directly into a free lane (jit-stable scatter) and eviction frees the
+  lane mid-flight for the next request.  A per-slot position vector
+  drives ONE compiled decode program regardless of prompt lengths or
+  arrival pattern — the per-slot positions this module's docstring once
+  deferred to "production continuous batching" are now the
+  implementation.
+* **Length-bucketing** (default, the fallback mode): requests ->
+  length-bucketed batches -> jitted prefill -> jitted decode loop with a
+  single scalar position shared by the bucket.  One compiled program per
+  (prompt_len, batch) shape; kept for offline batch jobs where every
+  request is present up front and uniform.
 
 Weights arrive either as plain float params or as a BSQ export
 (``core.export_packed``): packed weights are dequantised on the fly by
 ``kernels.ops.bitserial_matmul`` (Pallas on TPU, fused-unpack XLA ref
 path elsewhere), so HBM reads scale with the *mixed-precision* bit count
 — the serving-side payoff of the paper's compression (DESIGN.md §3.2).
+Mixed workloads only realise that payoff when lanes stay busy, which is
+exactly what the slot pool buys over bucketing.
 
-Sharding: with a ``mesh``, params and the decode cache are placed under
-the dist-layer rules (``dist.sharding.tree_param_specs`` /
-``cache_tree_specs``) — the engine then runs as a real ("data", "model")
-SPMD program instead of single-device.  All layout decisions live in
-:mod:`repro.dist`; this module only asks for shardings.
-
-Bucketing: one compiled program per (prompt_len_bucket, batch) shape;
-requests inside a bucket share positions, so the per-request position
-bookkeeping stays scalar.  (Production continuous batching would add
-per-slot positions; bucketing keeps this engine compact and jit-clean.)
+Sharding: with a ``mesh``, params, the decode cache and the slot pool
+are placed under the dist-layer rules (``dist.sharding``:
+``tree_param_specs`` / ``cache_tree_specs`` / ``slot_pool_specs``) — the
+engine then runs as a real ("data", "model") SPMD program instead of
+single-device.  All layout decisions live in :mod:`repro.dist`; this
+module only asks for shardings.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Callable, Dict, List, Optional
+from typing import Callable, Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -54,7 +66,8 @@ class Result:
 
 class ServeEngine:
     def __init__(self, params, cfg: ModelConfig, max_len: int = 4096, seed: int = 0,
-                 mesh=None):
+                 mesh=None, continuous: bool = False, n_slots: int = 8,
+                 policy: Optional["SchedulerPolicy"] = None):
         self.cfg = cfg
         self.max_len = max_len
         self.key = jax.random.PRNGKey(seed)
@@ -68,6 +81,13 @@ class ServeEngine:
         self._decode = jax.jit(
             lambda p, cache, tok, pos: transformer.decode_step(p, cache, tok, pos, cfg)
         )
+        self.scheduler = None
+        if continuous:
+            from .scheduler import ContinuousScheduler, SchedulerPolicy
+
+            if policy is None:
+                policy = SchedulerPolicy(n_slots=n_slots)
+            self.scheduler = ContinuousScheduler(self, policy)
 
     # -- sharding ---------------------------------------------------------
     def _prefill_fn(self, batch: int):
@@ -120,11 +140,26 @@ class ServeEngine:
             out.setdefault(len(r.tokens), []).append(r)
         return out
 
-    def generate(self, requests: List[Request]) -> List[Result]:
+    def generate(self, requests: List[Request],
+                 arrival_steps: Optional[Sequence[int]] = None) -> List[Result]:
+        """Serve a request set.  Continuous engines route through the
+        slot-pool scheduler (``arrival_steps`` simulates staggered
+        arrivals on the scheduler's step clock); bucketed engines batch
+        by prompt length and ignore arrivals (offline semantics)."""
+        if self.scheduler is not None:
+            return self.scheduler.run(requests, arrival_steps)
         results = []
         for plen, bucket in self._buckets(requests).items():
             results.extend(self._run_bucket(plen, bucket))
         return results
+
+    def stream(self, requests: List[Request],
+               arrival_steps: Optional[Sequence[int]] = None):
+        """Streaming completion: yield each Result as its lane finishes
+        (continuous mode only)."""
+        if self.scheduler is None:
+            raise ValueError("stream() requires ServeEngine(continuous=True)")
+        return self.scheduler.stream(requests, arrival_steps)
 
     def _run_bucket(self, plen: int, bucket: List[Request]) -> List[Result]:
         B = len(bucket)

@@ -1,0 +1,268 @@
+"""Continuous-batching scheduler: admission queue + slot-pool decode loop.
+
+The scheduler turns the serve engine's request stream into a single
+jit-stable decode program.  One :class:`~repro.serve.slots.SlotPool`
+holds ``n_slots`` persistent lanes; the loop is::
+
+    while queue or active lanes:
+        admit:  FIFO — prefill each request (batch-1, jitted per prompt
+                length) and scatter its cache into a free lane
+        decode: ONE pooled decode step over all n_slots lanes, driven by
+                the per-slot position vector (inactive lanes compute too;
+                that is what keeps the program unique)
+        sample: per-lane greedy/temperature on the pooled logits
+        evict:  lanes that hit max_new stream a Result out and free up —
+                the next admission joins mid-flight
+
+Because the decode step's shapes never depend on the arrival pattern
+(always ``tok (n_slots, 1)``, ``pos (n_slots,)``), exactly one decode
+program is compiled no matter how requests arrive; prefill compiles once
+per distinct prompt length (the "warmup" set).
+
+Admission policy (:class:`SchedulerPolicy`): FIFO order, with optional
+max-wait batching — hold admissions until ``min_admit`` requests can be
+placed together or the oldest has waited ``max_wait`` scheduler steps,
+amortising prefill dispatches under bursty arrivals.  Per-request
+``temperature`` / ``max_new`` ride in the Request, as in the bucketed
+engine.
+
+Time is measured in scheduler steps (one pooled decode = one step);
+arrival times for simulated workloads are expressed on that clock.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Callable, Deque, Dict, Iterator, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models import transformer
+from .slots import SlotPool, scatter_slot
+
+
+@dataclasses.dataclass
+class SchedulerPolicy:
+    """Admission knobs.  Defaults: admit greedily, one at a time (FIFO)."""
+
+    n_slots: int = 8
+    min_admit: int = 1  # batch admissions until this many can go together
+    max_wait: int = 0  # ...but never hold the oldest more than this many steps
+
+    def __post_init__(self):
+        if self.min_admit > 1 and self.max_wait <= 0:
+            raise ValueError(
+                "min_admit > 1 requires max_wait > 0 — with max_wait=0 the "
+                "hold window is empty and min_admit would be silently inert"
+            )
+
+
+@dataclasses.dataclass
+class _Pending:
+    request: "repro.serve.engine.Request"  # noqa: F821 — engine imports us
+    arrival: int
+    enqueued_at: Optional[int] = None  # step it became visible to admission
+
+
+class ContinuousScheduler:
+    """Drives a ServeEngine's params/config through a slot-pool decode loop.
+
+    The engine owns params, sampling and placement; the scheduler owns the
+    pool, the queue and the jitted programs.  ``stream()`` yields Results
+    as lanes finish (streaming completion); ``run()`` collects them.
+    """
+
+    def __init__(self, engine, policy: SchedulerPolicy):
+        self.engine = engine
+        self.policy = policy
+        self.pool = SlotPool(
+            engine.cfg, policy.n_slots, engine.max_len, mesh=engine.mesh
+        )
+        cfg = engine.cfg
+        # ONE pooled decode program: pos is a (n_slots,) vector, so the
+        # compiled shape is independent of which lanes are live.  With a
+        # mesh, the output cache sharding is constrained to the pool's
+        # shardings so the program's signature is a fixed point — no
+        # sharding drift, no second compile.
+        out_sh = None
+        if engine.mesh is not None:
+            out_sh = (None, self.pool.shardings["cache"])
+        self._decode = jax.jit(
+            lambda p, cache, tok, pos: transformer.decode_step(p, cache, tok, pos, cfg),
+            out_shardings=out_sh,
+        )
+        self._prefill_cache: Dict[int, Callable] = {}
+        # bench/telemetry: occupancy per step, decode-step wall times
+        self.occupancy_trace: List[int] = []
+        self.decode_ms_total = 0.0
+        self.decode_steps = 0
+
+    # -- jitted programs ---------------------------------------------------
+    def _prefill_fn(self, plen: int) -> Callable:
+        """Batch-1 prefill + scatter-into-lane, jitted per prompt length.
+        The lane index is a traced operand, so all lanes share the program."""
+        fn = self._prefill_cache.get(plen)
+        if fn is None:
+            engine = self.engine
+
+            def prefill_into_slot(params, pool_cache, tokens, slot):
+                logits, part = transformer.prefill(
+                    params, {"tokens": tokens}, engine.cfg, engine.max_len,
+                    cache_dtype=self.pool.cache_dtype,
+                )
+                return logits, scatter_slot(pool_cache, part, slot)
+
+            out_sh = None
+            if engine.mesh is not None:
+                out_sh = (None, self.pool.shardings["cache"])
+            fn = jax.jit(prefill_into_slot, out_shardings=out_sh)
+            self._prefill_cache[plen] = fn
+        return fn
+
+    def compiled_decode_programs(self) -> int:
+        return int(self._decode._cache_size())
+
+    # -- admission ---------------------------------------------------------
+    def _admit(self, queue: Deque[_Pending], now: int):
+        free = self.pool.free_slots()
+        if not queue or not free:
+            return
+        placeable = min(len(queue), len(free))
+        oldest_wait = now - (queue[0].enqueued_at if queue[0].enqueued_at is not None else now)
+        if placeable < self.policy.min_admit and oldest_wait < self.policy.max_wait:
+            return  # max-wait batching: hold for a fuller admission burst
+        for _ in range(placeable):
+            pend = queue.popleft()
+            req = pend.request
+            slot = self.pool.free_slots()[0]
+            plen = len(req.tokens)
+            toks = self.engine._place_batch(
+                jnp.asarray(np.asarray(req.tokens, np.int32)[None, :])
+            )
+            t0 = time.perf_counter()
+            logits, self.pool.cache = self._prefill_fn(plen)(
+                self.engine.params, self.pool.cache, toks, jnp.int32(slot)
+            )
+            jax.block_until_ready(logits)
+            prefill_ms = (time.perf_counter() - t0) * 1e3
+            first = self.engine._sample(
+                logits,
+                jnp.asarray([req.temperature], jnp.float32),
+                req.temperature > 0,
+            )
+            self.pool.occupy(
+                slot, req.uid, int(first[0]), plen, req.max_new,
+                req.temperature, prefill_ms, now,
+            )
+
+    # -- main loop ---------------------------------------------------------
+    def stream(
+        self,
+        requests: Sequence["repro.serve.engine.Request"],  # noqa: F821
+        arrival_steps: Optional[Sequence[int]] = None,
+    ) -> Iterator["repro.serve.engine.Result"]:  # noqa: F821
+        """Run the workload; yield each Result the step its lane finishes.
+
+        ``arrival_steps[i]`` is the scheduler step at which requests[i]
+        becomes visible (default: all at step 0).  FIFO by arrival then
+        submission order.
+        """
+        from .engine import Result  # deferred: engine imports this module
+
+        if arrival_steps is None:
+            arrival_steps = [0] * len(requests)
+        if len(arrival_steps) != len(requests):
+            raise ValueError(
+                f"arrival_steps has {len(arrival_steps)} entries for "
+                f"{len(requests)} requests — zip would silently drop the excess"
+            )
+        for r in requests:
+            # last cache row written: prompt rows 0..plen-1, then max_new-1
+            # decode writes at plen..plen+max_new-2
+            need = len(r.tokens) + r.max_new - 1
+            if need > self.engine.max_len:
+                raise ValueError(
+                    f"request {r.uid}: prompt {len(r.tokens)} + {r.max_new - 1} "
+                    f"decode writes need {need} cache rows > max_len "
+                    f"{self.engine.max_len} — out-of-range cache writes would "
+                    "be silently dropped and the output would be garbage"
+                )
+        incoming = sorted(
+            (_Pending(r, int(t)) for r, t in zip(requests, arrival_steps)),
+            key=lambda p: p.arrival,
+        )
+        incoming = deque(incoming)
+        queue: Deque[_Pending] = deque()
+        pool = self.pool
+        now = 0
+        try:
+            while incoming or queue or pool.n_active:
+                while incoming and incoming[0].arrival <= now:
+                    pend = incoming.popleft()
+                    pend.enqueued_at = now
+                    queue.append(pend)
+                self._admit(queue, now)
+                # Evict lanes whose request finished at admission (max_new == 1).
+                for ev in self._finished():
+                    yield ev
+                if pool.n_active:
+                    t0 = time.perf_counter()
+                    logits, pool.cache = self._decode(
+                        self.engine.params, pool.cache, pool.tok, pool.pos
+                    )
+                    sampled = self.engine._sample(logits, pool.temps, pool.any_hot)
+                    sampled_host = np.asarray(sampled)  # one host sync per step (streaming)
+                    self.decode_ms_total += (time.perf_counter() - t0) * 1e3
+                    self.decode_steps += 1
+                    active = pool.active_mask  # lanes live during this decode step
+                    pool.tok = pool._pin("tok", sampled[:, None])
+                    pool.advance(sampled_host, active)
+                    self.occupancy_trace.append(int(active.sum()))
+                    for ev in self._finished():
+                        yield ev
+                elif incoming and not queue:
+                    # idle gap before the next arrival: fast-forward the
+                    # clock.  Only when the queue is empty — a HELD queue
+                    # (max-wait batching) must age step by step so the
+                    # max_wait deadline fires on time, not at next arrival.
+                    now = max(now, incoming[0].arrival - 1)
+                now += 1
+        finally:
+            # An abandoned generator (client disconnect mid-stream) must not
+            # leave ghost lanes decoding into the next workload: free every
+            # live lane so the shared pool is clean for the next call.
+            for i, s in enumerate(pool.slots):
+                if s.uid is not None:
+                    pool.evict(i)
+
+    def _finished(self):
+        from .engine import Result
+
+        pool = self.pool
+        per_tok = self.decode_ms_total / max(self.decode_steps, 1)
+        for i, s in enumerate(pool.slots):
+            if s.uid is not None and s.remaining <= 0:
+                done = pool.evict(i)
+                yield Result(
+                    uid=done.uid,
+                    tokens=np.asarray(done.tokens, np.int32),
+                    prefill_ms=done.prefill_ms,
+                    decode_ms_per_tok=per_tok,
+                )
+
+    def run(
+        self,
+        requests: Sequence["repro.serve.engine.Request"],  # noqa: F821
+        arrival_steps: Optional[Sequence[int]] = None,
+    ) -> List["repro.serve.engine.Result"]:  # noqa: F821
+        return list(self.stream(requests, arrival_steps))
+
+    # -- telemetry ---------------------------------------------------------
+    def mean_occupancy(self) -> float:
+        """Mean fraction of lanes live per decode step (bench metric)."""
+        if not self.occupancy_trace:
+            return 0.0
+        return float(np.mean(self.occupancy_trace)) / self.pool.n_slots

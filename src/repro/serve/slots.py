@@ -1,0 +1,173 @@
+"""Fixed-capacity slot pool for continuous batching.
+
+A :class:`SlotPool` owns the persistent decode state of ``n_slots``
+lanes: ONE preallocated cache pytree whose batch axis is the slot index
+(allocated once per engine and sharded under
+``dist.sharding.slot_pool_specs``), a per-slot position vector and
+per-slot temperature vector that ride through the jitted decode step,
+and host-side bookkeeping (which request occupies each lane, tokens
+generated so far, tokens remaining).
+
+Requests are admitted by *scatter*: a batch-1 prefill produces a cache
+fragment with the same structure as the pool, and
+:func:`scatter_slot` writes it into lane ``slot`` with a traced index —
+so admission is jit-stable (one compiled prefill program per prompt
+length, regardless of which lane it lands in).  Eviction is free: a
+finished lane is simply marked inactive on the host; its stale cache
+rows are dead weight until the next admission overwrites the whole lane.
+
+Inactive lanes keep computing inside the decode step (that is what makes
+the loop a single compiled program), but their positions are pinned to 0
+and their outputs never reach a result — the garbage they write to their
+own lane is erased by the next admission's full-lane scatter.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ModelConfig
+from ..dist import sharding as dist_sharding
+from ..models import transformer
+
+PyTree = Any
+
+
+def _is_blocks_leaf(path) -> bool:
+    """True when the leaf lives under the scanned ``blocks`` subtree and
+    therefore carries a leading superblock axis before the slot axis."""
+    seg0 = path[0]
+    name = str(getattr(seg0, "key", getattr(seg0, "idx", seg0))).strip(".'\"")
+    return name == "blocks"
+
+
+def scatter_slot(pool_cache: PyTree, part_cache: PyTree, slot) -> PyTree:
+    """Write a batch-1 cache fragment into lane ``slot`` of the pool.
+
+    ``slot`` may be a traced scalar — the scatter lowers to
+    ``dynamic_update_slice``, so one compiled program covers every lane.
+    ``blocks`` leaves scatter on axis 1 (axis 0 is the superblock stack);
+    everything else (tail caches) scatters on axis 0.
+    """
+    flat_pool, treedef = jax.tree_util.tree_flatten_with_path(pool_cache)
+    flat_part = treedef.flatten_up_to(part_cache)
+    out = []
+    for (path, pl), pt in zip(flat_pool, flat_part):
+        axis = 1 if _is_blocks_leaf(path) else 0
+        start = [0] * pl.ndim
+        start[axis] = slot
+        out.append(jax.lax.dynamic_update_slice(pl, pt.astype(pl.dtype), tuple(start)))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+@dataclasses.dataclass
+class SlotState:
+    """Host-side view of one lane."""
+
+    uid: Optional[int] = None
+    remaining: int = 0  # tokens still to generate; 0 => free
+    tokens: Optional[List[int]] = None  # generated tokens so far
+    prefill_ms: float = 0.0
+    admitted_at: int = 0  # scheduler step of admission
+    temperature: float = 0.0  # host mirror of the device temps lane
+
+
+class SlotPool:
+    """Device state + host bookkeeping for ``n_slots`` decode lanes."""
+
+    def __init__(self, cfg: ModelConfig, n_slots: int, max_len: int, mesh=None,
+                 cache_dtype=jnp.bfloat16):
+        self.cfg = cfg
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self.mesh = mesh
+        self.cache_dtype = cache_dtype
+        # Device state (enters the jitted decode step every iteration).
+        self.cache = transformer.init_cache(cfg, n_slots, max_len, cache_dtype)
+        self.pos = jnp.zeros((n_slots,), jnp.int32)
+        self.temps = jnp.zeros((n_slots,), jnp.float32)
+        self.tok = jnp.zeros((n_slots, 1), jnp.int32)  # last sampled token per lane
+        self.shardings = None
+        if mesh is not None:
+            specs = dist_sharding.slot_pool_specs(
+                {"cache": self.cache, "pos": self.pos, "temps": self.temps, "tok": self.tok},
+                mesh,
+            )
+            self.shardings = {
+                k: dist_sharding.tree_shardings(mesh, v) for k, v in specs.items()
+            }
+            self.cache = jax.tree.map(jax.device_put, self.cache, self.shardings["cache"])
+            self.pos = jax.device_put(self.pos, self.shardings["pos"])
+            self.temps = jax.device_put(self.temps, self.shardings["temps"])
+            self.tok = jax.device_put(self.tok, self.shardings["tok"])
+        # Host bookkeeping.
+        self.slots = [SlotState() for _ in range(n_slots)]
+
+    def _pin(self, name: str, arr: jax.Array) -> jax.Array:
+        """Re-place a control vector under its pool sharding after an eager
+        update — eager ops can drop the replicated layout, and a changed
+        input sharding would fork a second compiled decode program."""
+        if self.shardings is None:
+            return arr
+        return jax.device_put(arr, self.shardings[name])
+
+    # -- host-side lane management ----------------------------------------
+    def free_slots(self) -> List[int]:
+        return [i for i, s in enumerate(self.slots) if s.uid is None]
+
+    @property
+    def active_mask(self) -> np.ndarray:
+        return np.asarray([s.uid is not None for s in self.slots])
+
+    @property
+    def n_active(self) -> int:
+        return int(self.active_mask.sum())
+
+    @property
+    def any_hot(self) -> bool:
+        """True if any live lane samples with temperature > 0 — host-side,
+        so the decode loop never syncs the device temps vector."""
+        return any(s.uid is not None and s.temperature > 0 for s in self.slots)
+
+    def occupy(self, slot: int, uid: int, first_token: int, prompt_len: int,
+               max_new: int, temperature: float, prefill_ms: float, now: int):
+        """Mark lane ``slot`` as owned by request ``uid`` (device-side cache
+        scatter has already happened); seed pos/temps/tok vectors."""
+        self.slots[slot] = SlotState(
+            uid=uid, remaining=max_new - 1, tokens=[first_token],
+            prefill_ms=prefill_ms, admitted_at=now, temperature=temperature,
+        )
+        self.pos = self._pin("pos", self.pos.at[slot].set(prompt_len))
+        self.temps = self._pin("temps", self.temps.at[slot].set(temperature))
+        self.tok = self._pin("tok", self.tok.at[slot, 0].set(first_token))
+
+    def evict(self, slot: int) -> SlotState:
+        """Free lane ``slot``; returns its final host state.  The device
+        cache is left stale — the next admission overwrites the lane."""
+        done = self.slots[slot]
+        self.slots[slot] = SlotState()
+        self.pos = self._pin("pos", self.pos.at[slot].set(0))
+        self.temps = self._pin("temps", self.temps.at[slot].set(0.0))
+        return done
+
+    def advance(self, sampled: np.ndarray, active: np.ndarray):
+        """After one pool decode step: record each active lane's token and
+        advance its position.  ``sampled``: (n_slots,) host int array."""
+        self.pos = self._pin("pos", self.pos + jnp.asarray(active, jnp.int32))
+        for i, s in enumerate(self.slots):
+            if active[i] and s.uid is not None:
+                s.tokens.append(int(sampled[i]))
+                s.remaining -= 1
+
+    def reset(self):
+        """Return every lane to free (bench warmup); cache left stale."""
+        self.slots = [SlotState() for _ in range(self.n_slots)]
+        self.pos = jnp.zeros_like(self.pos)
+        self.temps = jnp.zeros_like(self.temps)
+        if self.shardings is not None:
+            self.pos = jax.device_put(self.pos, self.shardings["pos"])
+            self.temps = jax.device_put(self.temps, self.shardings["temps"])
