@@ -24,6 +24,16 @@ def main():
             f"hbm_bytes={pw.hbm_bytes()};bf16_bytes={bf16_bytes};"
             f"byte_ratio={pw.hbm_bytes()/bf16_bytes:.3f}",
         )
+    # Per-group scale rows (the exact-export epilogue): same packed bytes
+    # plus a G-float row; the epilogue multiply should be timing-neutral
+    # vs the per-tensor scale.
+    for groups in (16, N):
+        pwg = pack_from_float(w, 4, group_cols=groups)
+        us, _ = time_call(lambda: ops.bitserial_matmul(x, pwg, use_pallas=False))
+        emit(
+            f"kernels/bitserial_4b_g{groups}", us,
+            f"hbm_bytes={pwg.hbm_bytes()};scale_row={pwg.scale.size}",
+        )
     us, _ = time_call(lambda: x @ w)
     emit("kernels/dense_matmul_f32", us, f"hbm_bytes={K*N*4}")
 

@@ -20,10 +20,21 @@ no-recompile check: ``programs`` must not grow between the runs.
 ``--smoke`` shrinks the workload for CI (the scheduler hot path is then
 exercised on every PR) and asserts the invariants instead of just
 printing them.
+
+Packed-sharded mode: ``--packed-bits N`` serves the same workload over a
+bit-plane-packed model (``core.packing.pack_model_params``); adding
+``--data-parallel D --model-parallel M`` runs it on a (D, M) host-device
+mesh with the packed bytes sharded per the dist rules, checks token
+identity against the single-device packed engine, and emits a
+``serve_packed_hbm`` row showing per-device packed memory dropping by
+the model-axis factor::
+
+    serve_packed_hbm,<us>,global_bytes=...;per_dev_bytes=...;shrink_x=...
 """
 from __future__ import annotations
 
 import argparse
+import os
 import sys
 import time
 
@@ -54,7 +65,23 @@ def build_workload(cfg, n_requests: int, max_new: int, rate: float, seed: int = 
     return reqs, poisson_arrivals(n_requests, rate, seed=seed)
 
 
+def packed_hbm_stats(engine):
+    """(global_bytes, per_device_bytes) of the engine's packed weights."""
+    from repro.core.packing import packed_leaves
+
+    glob = per_dev = 0
+    for pw in packed_leaves(engine.params):
+        for arr in (pw.planes, pw.sign, pw.scale):
+            glob += arr.nbytes
+            shards = getattr(arr, "addressable_shards", None)
+            per_dev += shards[0].data.nbytes if shards else arr.nbytes
+    return glob, per_dev
+
+
 def run_bucketed(params, cfg, reqs, max_len: int):
+    # Always single-device: the bucketed run is the token-identity
+    # reference the continuous (possibly mesh-sharded) run is checked
+    # against.
     from repro.serve import ServeEngine
 
     engine = ServeEngine(params, cfg, max_len=max_len)
@@ -69,10 +96,11 @@ def run_bucketed(params, cfg, reqs, max_len: int):
     return results, wall, toks, programs
 
 
-def run_continuous(params, cfg, reqs, arrivals, max_len: int, n_slots: int):
+def run_continuous(params, cfg, reqs, arrivals, max_len: int, n_slots: int, mesh=None):
     from repro.serve import ServeEngine
 
-    engine = ServeEngine(params, cfg, max_len=max_len, continuous=True, n_slots=n_slots)
+    engine = ServeEngine(params, cfg, max_len=max_len, continuous=True, n_slots=n_slots,
+                         mesh=mesh)
     sched = engine.scheduler
     engine.generate(reqs(), arrival_steps=arrivals)  # warmup
     programs_after_warmup = sched.compiled_decode_programs()
@@ -99,9 +127,26 @@ def main(argv=None):
     ap.add_argument("--arrival-rate", type=float, default=1.0)
     ap.add_argument("--smoke", action="store_true",
                     help="tiny CI workload + hard asserts")
+    ap.add_argument("--packed-bits", type=int, default=0,
+                    help="serve a bit-plane-packed model at this precision "
+                         "(0 = float weights)")
+    ap.add_argument("--data-parallel", type=int, default=0)
+    ap.add_argument("--model-parallel", type=int, default=0,
+                    help="with --data-parallel: serve on a (D, M) mesh of "
+                         "host devices (forces XLA host platform devices); "
+                         "with --packed-bits the packed bytes are sharded "
+                         "per-device and the HBM shrink factor is emitted")
     args = ap.parse_args(argv)
     if args.smoke:
         args.requests, args.max_new, args.slots = 6, 4, 4
+    if bool(args.data_parallel) != bool(args.model_parallel):
+        raise SystemExit("--data-parallel and --model-parallel must be given together")
+    n_dev = args.data_parallel * args.model_parallel
+    if n_dev > 1:  # must happen before jax initialises
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "")
+            + f" --xla_force_host_platform_device_count={n_dev}"
+        )
 
     import jax  # noqa: F401  (defer platform init past argparse)
 
@@ -111,11 +156,19 @@ def main(argv=None):
 
     cfg = reduced_config(args.arch)
     params = init_params(jax.random.PRNGKey(0), cfg)
+    if args.packed_bits:
+        from repro.core.packing import pack_model_params
+
+        params = pack_model_params(params, args.packed_bits)
+    mesh = None
+    if n_dev > 1:
+        mesh = jax.make_mesh((args.data_parallel, args.model_parallel),
+                             ("data", "model"))
     reqs, arrivals = build_workload(cfg, args.requests, args.max_new, args.arrival_rate)
 
     b_results, b_wall, b_toks, b_programs = run_bucketed(params, cfg, reqs, args.max_len)
     c_results, c_wall, c_toks, sched = run_continuous(
-        params, cfg, reqs, arrivals, args.max_len, args.slots
+        params, cfg, reqs, arrivals, args.max_len, args.slots, mesh=mesh
     )
 
     # Same requests, greedy: outputs must agree token-for-token.
@@ -131,6 +184,22 @@ def main(argv=None):
          f"toks_per_s={c_tps:.1f};occupancy={sched.mean_occupancy():.2f};"
          f"decode_programs={sched.compiled_decode_programs()};"
          f"speedup_x={c_tps / b_tps:.2f}")
+    if args.packed_bits:
+        glob, per_dev = packed_hbm_stats(sched.engine)
+        shrink = glob / max(per_dev, 1)
+        emit("serve_packed_hbm", c_wall * 1e6,
+             f"bits={args.packed_bits};global_bytes={glob};"
+             f"per_dev_bytes={per_dev};shrink_x={shrink:.2f}")
+        if mesh is not None and shrink <= n_dev * 0.75:
+            # per-device packed HBM should drop by ~the mesh factor (the
+            # scale rows are tiny; planes/sign dominate) — hard-fail only
+            # under --smoke (CI), warn on exploratory mesh shapes whose
+            # dims legitimately don't divide
+            msg = (f"packed HBM shrink {shrink:.2f}x < mesh factor {n_dev} "
+                   f"(global={glob}, per_dev={per_dev})")
+            if args.smoke:
+                raise AssertionError(msg)
+            print(f"WARNING: {msg}", file=sys.stderr)
     if args.smoke:
         assert sched.compiled_decode_programs() == 1, "must be ONE decode program"
         assert c_toks == b_toks
@@ -142,8 +211,6 @@ def main(argv=None):
 
 if __name__ == "__main__":
     # allow `python benchmarks/bench_serve.py` from an uninstalled checkout
-    import os
-
     _root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
     sys.path.insert(0, os.path.join(_root, "src"))
     sys.path.insert(0, _root)

@@ -13,6 +13,7 @@ from .bsq import (  # noqa: F401
     BSQConfig,
     default_quant_predicate,
     export_packed,
+    export_packed_sharded,
     extract_scheme,
     init_bitreps,
     merge_params,

@@ -164,61 +164,181 @@ def total_quantized_params(reps: Dict[str, BitRep]) -> int:
 # --------------------------------------------------------------------------
 
 
-def export_packed(reps: Dict[str, BitRep]) -> Dict[str, packing.PackedWeight]:
-    """Freeze each rep to a PackedWeight.
+def _export_codes(r: BitRep):
+    """Host-side export arithmetic shared by the exporters.
 
-    Per-tensor the packed layout uses the whole-tensor [lsb, msb] window
-    (ragged per-group layouts are honoured at the *accounting* level; a
-    production exporter would split tensors per group).  The code is
-    shifted by ``lsb`` and the scale updated exactly as in the dynamic
-    precision adjustment, so the dequantised values are bit-exact —
-    PROVIDED the rep has one scale (or all per-group scales agree).  When
-    per-group scales disagree the export cannot be exact with a single
-    packed scale: we warn and fall back to the mean scale (lossy; a
-    per-group exporter is the documented follow-up, see ROADMAP).
+    Returns ``(q_shift, n_bits, scale)``: the integer codes shifted into
+    the whole-tensor ``[lsb, msb]`` window, the packed precision, and the
+    PER-GROUP scale array (group-broadcast shape) updated exactly as in
+    the dynamic precision adjustment:
+
+        scale'_g * q' / (2^{n'} - 1)  ==  s_g * q / (2^{n_denom} - 1)
+
+    The window is global (so every group — and every shard of a sharded
+    export — shares one static ``n_bits``) but the scale stays per
+    group, which makes the export exact by construction: the shift only
+    discards bits that are zero across the whole tensor, and each
+    group's scale absorbs its own dynamic range.
     """
-    import warnings
-
     import numpy as np
 
     from .bitrep import planes_to_int
 
+    r2 = requantize_static(r)  # ensure binary planes / fresh mask
+    m = r2.mask.astype(r2.wp.dtype)
+    q = np.asarray(
+        planes_to_int(r2.wp * m) - planes_to_int(r2.wn * m)
+    )  # codes under denom 2^n_denom - 1
+    mag = np.abs(q)
+    nz = [b for b in range(r2.n_bits) if ((mag >> b) & 1).any()]
+    if not nz:
+        lsb, msb = 0, 0
+    else:
+        lsb, msb = min(nz), max(nz)
+    n_bits = msb - lsb + 1
+    q_shift = ((mag >> lsb) * np.sign(q)).astype(np.int32)
+    s = np.asarray(jax.device_get(r2.scale), np.float64)
+    scale = s * (2.0**lsb) * (2.0**n_bits - 1.0) / (2.0**r2.n_denom - 1.0)
+    if scale.shape[-2] != 1:
+        raise NotImplementedError(
+            f"per-K-row scale groups (shape {scale.shape}) have no packed row "
+            "form; regroup over leading/output axes"
+        )
+    return q_shift, n_bits, scale.astype(np.float32)
+
+
+def _pack_grouped(q, scale, n_bits: int) -> packing.PackedWeight:
+    """Pack codes ``q`` (..., K, N) with a per-group ``scale`` array
+    (group-broadcast shape, same ndim as q) into one PackedWeight.
+
+    2D tensors pack directly (scale becomes a ``(1, G)`` row); stacked
+    tensors keep the leading axes so lax.scan / per-shard slicing
+    recover exact 2D PackedWeights.  Byte-aligned stacks (K % 8 == 0,
+    the packable() precondition) pack all slices in one vectorised pass
+    — slice byte boundaries coincide with stack boundaries, so this
+    equals per-slice packing; ragged K falls back to the slice loop.
+    """
+    import numpy as np
+
+    if q.ndim == 2:
+        return packing.pack_quantized(jnp.asarray(q), jnp.asarray(scale), n_bits)
+    lead = q.shape[:-2]
+    K, N = q.shape[-2:]
+    sc = jnp.asarray(
+        np.ascontiguousarray(np.broadcast_to(scale, lead + scale.shape[-2:]))
+    )
+    if K % 8 == 0:
+        flat = packing.pack_quantized(jnp.asarray(q.reshape(-1, N)), jnp.float32(1), n_bits)
+        planes = jnp.moveaxis(
+            flat.planes.reshape((n_bits,) + lead + (K // 8, N)), 0, -3
+        )
+        sign = flat.sign.reshape(lead + (K // 8, N))
+        return packing.PackedWeight(
+            planes=planes, sign=sign, scale=sc, n_bits=n_bits, k=K
+        )
+    sf = np.asarray(sc).reshape((-1,) + scale.shape[-2:])
+    qf = q.reshape((-1, K, N))
+    packs = [
+        packing.pack_quantized(jnp.asarray(qf[i]), jnp.asarray(sf[i]), n_bits)
+        for i in range(qf.shape[0])
+    ]
+    planes = jnp.stack([p.planes for p in packs]).reshape(lead + packs[0].planes.shape)
+    sign = jnp.stack([p.sign for p in packs]).reshape(lead + packs[0].sign.shape)
+    return packing.PackedWeight(planes=planes, sign=sign, scale=sc, n_bits=n_bits, k=K)
+
+
+def export_packed(reps: Dict[str, BitRep]) -> Dict[str, packing.PackedWeight]:
+    """Freeze each rep to a PackedWeight — exact by construction.
+
+    The packed layout uses the whole-tensor ``[lsb, msb]`` window (one
+    static precision per tensor), and the per-group scales ride along as
+    a scale array on the PackedWeight (a ``(1, G)`` row for output-axis
+    groups; ``lead + (1, G)`` per-slice rows for stacked tensors), each
+    updated by the same ``2^lsb (2^{n'}-1)/(2^n-1)`` factor.  Disagreeing
+    group scales therefore dequantise exactly — there is no mean-scale
+    fallback.  The on-disk/in-memory layout is specified in
+    ``docs/packed_format.md``.
+    """
     out = {}
     for name, r in reps.items():
-        r2 = requantize_static(r)  # ensure binary planes / fresh mask
-        m = r2.mask.astype(r2.wp.dtype)
-        q = np.asarray(
-            planes_to_int(r2.wp * m) - planes_to_int(r2.wn * m)
-        )  # codes under denom 2^n_denom - 1
-        mag = np.abs(q)
-        nz = [b for b in range(r2.n_bits) if ((mag >> b) & 1).any()]
-        if not nz:
-            lsb, msb = 0, 0
-        else:
-            lsb, msb = min(nz), max(nz)
-        n_bits = msb - lsb + 1
-        q_shift = ((mag >> lsb) * np.sign(q)).astype(np.int32)
-        s_groups = np.asarray(jax.device_get(r2.scale)).reshape(-1)
-        if s_groups.size > 1 and not np.allclose(
-            s_groups, s_groups[0], rtol=1e-6, atol=0.0
-        ):
-            spread = float(s_groups.max() / max(float(s_groups.min()), 1e-30))
-            warnings.warn(
-                f"export_packed: {name!r} has {s_groups.size} per-group scales "
-                f"spanning {spread:.3g}x; packing with their MEAN is lossy. "
-                "Split the tensor per group for an exact export.",
-                stacklevel=2,
+        q_shift, n_bits, scale = _export_codes(r)
+        out[name] = _pack_grouped(q_shift, scale, n_bits)
+    return out
+
+
+def export_packed_sharded(
+    reps: Dict[str, BitRep], mesh
+) -> Dict[str, packing.PackedWeight]:
+    """Shard-aware packed export: pack each model-axis slice locally.
+
+    For every rep the planes/sign/scale layouts are derived from the
+    dist-layer rules (:func:`repro.dist.sharding.param_spec` on the
+    ``.../planes`` etc. leaf names), and each device shard's bytes are
+    produced by packing ONLY that slice of the integer codes
+    (``jax.make_array_from_callback``) — no host ever materialises a
+    foreign shard's packed bytes.  Because the ``[lsb, msb]`` window is
+    global per tensor and packing is elementwise along byte-aligned K
+    rows, slice-then-pack equals pack-then-slice, so the assembled
+    global array is identical to :func:`export_packed`'s — but already
+    laid out on the ("data", "model") mesh with per-shard PackedWeights
+    underneath, ready for the shard_map'd bitserial matmul.
+
+    Returns a dict of PackedWeights whose arrays are mesh-sharded global
+    jax Arrays, with ``kn_spec`` pre-annotated.
+    """
+    import numpy as np
+    from jax.sharding import NamedSharding
+
+    from ..dist import sharding as dist_sharding
+    from .packing import np_pack_bits as _np_pack_bits
+
+    out = {}
+    for name, r in reps.items():
+        q_shift, n_bits, scale = _export_codes(r)
+        lead = q_shift.shape[:-2]
+        K, N = q_shift.shape[-2:]
+        pad = (-K) % 8
+        qp = np.pad(q_shift, [(0, 0)] * len(lead) + [(0, pad), (0, 0)])
+        K8 = qp.shape[-2] // 8
+        scale = np.broadcast_to(scale, lead + scale.shape[-2:])
+        planes_shape = lead + (n_bits, K8, N)
+        sign_shape = lead + (K8, N)
+        p_spec = dist_sharding.param_spec(f"{name}/planes", planes_shape, mesh)
+        s_spec = dist_sharding.param_spec(f"{name}/sign", sign_shape, mesh)
+        sc_spec = dist_sharding.param_spec(f"{name}/scale", scale.shape, mesh)
+
+        def _rows(sl, k8):  # byte-row slice -> code-row slice
+            lo = 0 if sl.start is None else sl.start
+            hi = k8 if sl.stop is None else sl.stop
+            return slice(lo * 8, hi * 8)
+
+        def planes_cb(idx, qp=qp, n_bits=n_bits, K8=K8):
+            *li, bi, ki, ni = idx
+            qs = qp[tuple(li) + (_rows(ki, K8), ni)]
+            mag = np.abs(qs)
+            bs = range(n_bits)[bi]
+            return np.stack(
+                [_np_pack_bits((mag >> b) & 1) for b in bs], axis=len(li)
             )
-            base_scale = float(s_groups.mean())
-        else:
-            base_scale = float(s_groups[0])
-        # scale': dequant uses  scale' * q' / (2^{n'} - 1)  ==  scale * q / (2^n - 1)
-        scale = (
-            base_scale
-            * (2.0**lsb)
-            * (2.0**n_bits - 1.0)
-            / (2.0**r2.n_denom - 1.0)
+
+        def sign_cb(idx, qp=qp, K8=K8):
+            *li, ki, ni = idx
+            return _np_pack_bits(qp[tuple(li) + (_rows(ki, K8), ni)] < 0)
+
+        def scale_cb(idx, scale=scale):
+            return np.ascontiguousarray(scale[idx])
+
+        planes = jax.make_array_from_callback(
+            planes_shape, NamedSharding(mesh, p_spec), planes_cb
         )
-        w2 = jnp.asarray(q_shift).reshape(-1, q.shape[-1])
-        out[name] = packing.pack_quantized(w2, jnp.float32(scale), n_bits)
+        sign = jax.make_array_from_callback(
+            sign_shape, NamedSharding(mesh, s_spec), sign_cb
+        )
+        sc = jax.make_array_from_callback(
+            scale.shape, NamedSharding(mesh, sc_spec), scale_cb
+        )
+        kn = (tuple(s_spec)[-2], tuple(s_spec)[-1]) if len(tuple(s_spec)) >= 2 else (None, None)
+        out[name] = packing.PackedWeight(
+            planes=planes, sign=sign, scale=sc, n_bits=n_bits, k=K, kn_spec=kn
+        )
     return out

@@ -2,12 +2,18 @@
 
 A BSQ-quantised layer with per-layer precision ``n`` is exported as:
 
-* ``planes``: ``(n, K//8, N) uint8`` — magnitude bit-planes of the
+* ``planes``: ``(..., n, K//8, N) uint8`` — magnitude bit-planes of the
   integer code ``q = |Round[(2^n-1) W/s]|``, packed 8 codes/byte along
   the *reduction* (K) axis so the bitserial-matmul kernel can unpack a
   contiguous VMEM tile with shifts.
-* ``sign``:  ``(K//8, N) uint8`` — packed sign bits (1 = negative).
-* ``scale``: per-group float — ``W ~= (1-2*sign) * scale * q / (2^n-1)``.
+* ``sign``:  ``(..., K//8, N) uint8`` — packed sign bits (1 = negative).
+* ``scale``: per-group scale row — ``W ~= (1-2*sign) * scale * q /
+  (2^n-1)``.  Canonical shapes: ``()`` (per-tensor), ``(1, G)`` with
+  ``N % G == 0`` (per-output-group row, each group covering ``N//G``
+  consecutive columns — applied as a free epilogue multiply after the
+  matmul), or ``lead + (1, G)`` for stacked tensors (per-slice rows;
+  the scan slice recovers the 2D form).  The full format, including the
+  per-shard slicing convention, is specified in ``docs/packed_format.md``.
 
 HBM bytes per weight element: ``(n+1)/8`` vs 2 for bf16 — this is where
 the paper's compression becomes decode-time memory bandwidth on TPU.
@@ -15,7 +21,7 @@ the paper's compression becomes decode-time memory bandwidth on TPU.
 from __future__ import annotations
 
 import dataclasses
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -25,18 +31,63 @@ import numpy as np
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass
 class PackedWeight:
-    planes: jax.Array  # (n_bits, K//8, N) uint8
-    sign: jax.Array  # (K//8, N) uint8
-    scale: jax.Array  # broadcastable to (K, N) — typically scalar or (1, N)
+    planes: jax.Array  # (..., n_bits, K//8, N) uint8
+    sign: jax.Array  # (..., K//8, N) uint8
+    scale: jax.Array  # per-group scale: (), (1, G), or lead + (1, G)
     n_bits: int = dataclasses.field(metadata=dict(static=True))
     k: int = dataclasses.field(metadata=dict(static=True))  # unpadded K
+    # Partition of the trailing (K, N) axes over a device mesh, e.g.
+    # ("data", "model") for a col-parallel weight.  None = unannotated
+    # (single-device / GSPMD-managed).  Set by
+    # dist.sharding.annotate_packed_specs; consumed by
+    # kernels.ops.bitserial_matmul_sharded (shard_map dispatch).
+    kn_spec: Optional[Tuple] = dataclasses.field(
+        default=None, metadata=dict(static=True)
+    )
 
     @property
-    def shape(self) -> Tuple[int, int]:
-        return (self.k, self.planes.shape[-1])
+    def shape(self) -> Tuple[int, ...]:
+        return self.planes.shape[:-3] + (self.k, self.planes.shape[-1])
 
     def hbm_bytes(self) -> int:
         return int(self.planes.size + self.sign.size + self.scale.size * 4)
+
+
+def packed_leaves(tree):
+    """All PackedWeight leaves of a pytree (params trees mix packed and
+    float leaves; every consumer — engine annotation, HBM accounting,
+    benchmarks — filters through here so the detection lives once)."""
+    return [
+        leaf
+        for leaf in jax.tree_util.tree_leaves(
+            tree, is_leaf=lambda x: isinstance(x, PackedWeight)
+        )
+        if isinstance(leaf, PackedWeight)
+    ]
+
+
+def scale_row(scale, n: int) -> jax.Array:
+    """Expand a 2D PackedWeight's scale to a ``(1, N)`` per-column row (f32).
+
+    Accepts the canonical scale shapes (scalar, ``(1, 1)``, ``(1, G)``
+    with ``N % G == 0``) — the form the bitserial kernel's epilogue
+    consumes.  K-varying scales have no row form and are rejected.
+    """
+    s = jnp.asarray(scale, jnp.float32)
+    if s.ndim == 0:
+        return jnp.full((1, n), s)
+    if s.ndim != 2 or s.shape[0] != 1:
+        raise ValueError(
+            f"per-group scale must be scalar or a (1, G) row, got shape {s.shape}"
+        )
+    g = s.shape[1]
+    if g == n:
+        return s
+    if g == 1:
+        return jnp.broadcast_to(s, (1, n))
+    if n % g:
+        raise ValueError(f"scale groups G={g} do not divide N={n}")
+    return jnp.repeat(s, n // g, axis=1)
 
 
 def _pack_bits_axis0_groups_of_8(bits: jax.Array) -> jax.Array:
@@ -47,12 +98,32 @@ def _pack_bits_axis0_groups_of_8(bits: jax.Array) -> jax.Array:
     return jnp.sum(b << shifts, axis=1).astype(jnp.uint8)
 
 
+def np_pack_bits(bits: "np.ndarray") -> "np.ndarray":
+    """Host-side twin of the jnp packer: (..., K, N) {0,1} -> (..., K//8, N).
+
+    Byte layout is identical (LSB-first along K, see docs/packed_format.md)
+    — the sharded exporter packs device slices with this so slice bytes
+    match the jnp path bit-for-bit.
+    """
+    return np.packbits(bits.astype(np.uint8), axis=-2, bitorder="little")
+
+
 def unpack_bits_axis0(packed: jax.Array, k: int) -> jax.Array:
-    """Inverse of the packer: (K//8, N) bytes -> (K, N) {0,1} uint8."""
-    kb, n = packed.shape
-    shifts = jnp.arange(8, dtype=jnp.uint8).reshape(1, 8, 1)
-    bits = (packed[:, None, :] >> shifts) & 1
-    return bits.reshape(kb * 8, n)[:k]
+    """Inverse of the packer: (..., K//8, N) bytes -> (..., K, N) {0,1} uint8."""
+    *lead, kb, n = packed.shape
+    shifts = jnp.arange(8, dtype=jnp.uint8).reshape(8, 1)
+    bits = (packed[..., :, None, :] >> shifts) & 1
+    return bits.reshape(*lead, kb * 8, n)[..., :k, :]
+
+
+def _check_scale(scale: jax.Array, n: int):
+    if scale.ndim == 0:
+        return
+    if scale.ndim != 2 or scale.shape[0] != 1 or (scale.shape[1] > 1 and n % scale.shape[1]):
+        raise ValueError(
+            f"scale must be scalar or a (1, G) row with N % G == 0; "
+            f"got shape {scale.shape} for N={n}"
+        )
 
 
 def pack_quantized(q: jax.Array, scale: jax.Array, n_bits: int) -> PackedWeight:
@@ -60,6 +131,8 @@ def pack_quantized(q: jax.Array, scale: jax.Array, n_bits: int) -> PackedWeight:
     if q.ndim != 2:
         raise ValueError(f"pack_quantized expects a 2D (K, N) matrix, got {q.shape}")
     k, n = q.shape
+    scale = jnp.asarray(scale)
+    _check_scale(scale, n)
     pad = (-k) % 8
     if pad:
         q = jnp.pad(q, ((0, pad), (0, 0)))
@@ -69,26 +142,51 @@ def pack_quantized(q: jax.Array, scale: jax.Array, n_bits: int) -> PackedWeight:
         planes.append(_pack_bits_axis0_groups_of_8(((mag >> b) & 1).astype(jnp.uint8)))
     sign = _pack_bits_axis0_groups_of_8((q < 0).astype(jnp.uint8))
     return PackedWeight(
-        planes=jnp.stack(planes), sign=sign, scale=jnp.asarray(scale), n_bits=max(n_bits, 1), k=k
+        planes=jnp.stack(planes), sign=sign, scale=scale, n_bits=max(n_bits, 1), k=k
     )
 
 
 def unpack_to_float(pw: PackedWeight, dtype=jnp.float32) -> jax.Array:
-    """Dequantise back to float (the ref path / oracle for the kernel)."""
+    """Dequantise back to float (the ref path / oracle for the kernel).
+
+    Handles stacked packed weights (leading slice axes before the bit
+    axis) and every canonical scale form (scalar, per-slice, per-group
+    column row — group rows are expanded to per-column before the
+    broadcast multiply).
+    """
     k = pw.k
     mag = sum(
-        unpack_bits_axis0(pw.planes[b], k).astype(jnp.int32) * (2**b) for b in range(pw.n_bits)
+        unpack_bits_axis0(pw.planes[..., b, :, :], k).astype(jnp.int32) * (2**b)
+        for b in range(pw.n_bits)
     )
     sgn = 1 - 2 * unpack_bits_axis0(pw.sign, k).astype(jnp.int32)
     denom = 2.0**pw.n_bits - 1.0
-    return (sgn * mag).astype(dtype) * (pw.scale.astype(dtype) / denom)
+    s = jnp.asarray(pw.scale, dtype)
+    n = mag.shape[-1]
+    if s.ndim and s.shape[-1] not in (1, n):
+        s = jnp.repeat(s, n // s.shape[-1], axis=-1)
+    return (sgn * mag).astype(dtype) * (s / denom)
 
 
-def pack_from_float(w: jax.Array, n_bits: int) -> PackedWeight:
-    """One-shot float -> packed path (per-tensor scale)."""
+def pack_from_float(w: jax.Array, n_bits: int, group_cols: int | None = None) -> PackedWeight:
+    """One-shot float -> packed path.
+
+    ``group_cols=G`` quantises with ``G`` per-output-column-group scales
+    (a ``(1, G)`` scale row, each group covering ``N//G`` columns);
+    ``None`` keeps the per-tensor scale.
+    """
+    levels = 2**n_bits - 1
+    if group_cols:
+        k, n = w.shape
+        if n % group_cols:
+            raise ValueError(f"group_cols={group_cols} does not divide N={n}")
+        s = jnp.max(jnp.abs(w.reshape(k, group_cols, n // group_cols)), axis=(0, 2))
+        s = jnp.where(s == 0, 1.0, s).reshape(1, group_cols)
+        s_cols = jnp.repeat(s, n // group_cols, axis=1)
+        q = jnp.round(w / s_cols * levels).astype(jnp.int32)
+        return pack_quantized(q, s, n_bits)
     s = jnp.max(jnp.abs(w))
     s = jnp.where(s == 0, 1.0, s)
-    levels = 2**n_bits - 1
     q = jnp.round(w / s * levels).astype(jnp.int32)
     return pack_quantized(q, s, n_bits)
 
@@ -110,7 +208,9 @@ def expected_max_error(scale: float, n_bits: int) -> float:
 
 def pack_stacked_from_float(w: jax.Array, n_bits: int) -> PackedWeight:
     """Pack a stacked weight (L..., K, N): per-slice scale + codes, shared
-    n_bits, fields carry the leading dims so lax.scan can slice them."""
+    n_bits, fields carry the leading dims so lax.scan can slice them.
+    The per-slice scale is stored as ``lead + (1, 1)`` so it broadcasts
+    against the dequantised ``lead + (K, N)`` tensor."""
     if w.ndim == 2:
         return pack_from_float(w, n_bits)
     lead = w.shape[:-2]
@@ -119,7 +219,7 @@ def pack_stacked_from_float(w: jax.Array, n_bits: int) -> PackedWeight:
     packs = [pack_from_float(flat[i], n_bits) for i in range(flat.shape[0])]
     planes = jnp.stack([p.planes for p in packs]).reshape(lead + packs[0].planes.shape)
     sign = jnp.stack([p.sign for p in packs]).reshape(lead + packs[0].sign.shape)
-    scale = jnp.stack([p.scale for p in packs]).reshape(lead)
+    scale = jnp.stack([p.scale for p in packs]).reshape(lead + (1, 1))
     return PackedWeight(planes=planes, sign=sign, scale=scale, n_bits=n_bits, k=K)
 
 
@@ -127,22 +227,23 @@ def abstract_packed(shape, n_bits: int) -> PackedWeight:
     """ShapeDtypeStruct twin of pack_stacked_from_float (dry-run, no data)."""
     lead, (K, N) = tuple(shape[:-2]), shape[-2:]
     K8 = (K + 7) // 8
+    scale_shape = lead + (1, 1) if lead else ()
     return PackedWeight(
         planes=jax.ShapeDtypeStruct(lead + (n_bits, K8, N), jnp.uint8),
         sign=jax.ShapeDtypeStruct(lead + (K8, N), jnp.uint8),
-        scale=jax.ShapeDtypeStruct(lead, jnp.float32),
+        scale=jax.ShapeDtypeStruct(scale_shape, jnp.float32),
         n_bits=n_bits,
         k=K,
     )
 
 
-_PACKABLE_SUFFIXES = ("wq", "wk", "wv", "wo", "w_gate", "w_up", "w_down", "lm_head")
+PACKABLE_SUFFIXES = ("wq", "wk", "wv", "wo", "w_gate", "w_up", "w_down", "lm_head")
 
 
 def packable(name: str, shape) -> bool:
     leaf = name.lower().rsplit("/", 1)[-1]
     return (
-        leaf in _PACKABLE_SUFFIXES
+        leaf in PACKABLE_SUFFIXES
         and len(shape) >= 2
         and shape[-2] % 8 == 0
         and min(shape[-2:]) >= 64

@@ -14,6 +14,9 @@ tensor                                      spec
 col-parallel matmul  ``wq`` (L, in, out)    ``P(None, "data", "model")``
 row-parallel ``wo``/``w_down`` (L, in, out) ``P(None, "model", "data")``
 BSQ planes ``.../wq/wp`` (nb, L, in, out)   base rule + leading ``None``
+packed ``.../wq/planes`` (L, nb, K/8, out)  base rule + ``None`` bit axis
+packed ``.../wq/sign`` (L, K/8, out)        base rule (K/8 on the K axis)
+packed scale row ``.../wq/scale`` (.., 1, G) group axis follows base out axis
 embedding ``embed`` (V, d)                  ``P("model", "data")``
 stacked MoE experts (L, E, in, out)         experts -> ``"model"``
 norm scales / biases / BSQ scales / masks   replicated
@@ -30,6 +33,8 @@ from typing import Any, Tuple
 import jax
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from ..core.packing import PACKABLE_SUFFIXES
+
 PyTree = Any
 
 # Pytree wrapper segments that may prefix a model-param path inside a
@@ -44,6 +49,11 @@ _ROW_PARALLEL = frozenset({"wo", "out_proj", "w_out", "w_down"})
 
 # Stacked-expert MoE weights (leading expert axis under /moe/).
 _MOE_EXPERT = frozenset({"w_gate", "w_up", "w_down"})
+
+# Matmul leaf names that may be replaced by a PackedWeight (used to tell
+# a packed scale row ".../wq/scale" apart from a norm gain
+# ".../norm1/scale").
+_PACKED_PARENTS = frozenset(PACKABLE_SUFFIXES)
 
 # Name fragments that force replication: norms, biases, per-group scales,
 # recurrence scalars, depthwise convs — all tiny and/or value-coupled.
@@ -136,13 +146,42 @@ def param_spec(name: str, shape: Tuple[int, ...], mesh) -> P:
         base = "/".join(segs[:-1])
         return P(None, *param_spec(base, shape[1:], mesh))
 
-    # Packed serving weights (magnitude/sign bitplanes) stay REPLICATED:
-    # the Pallas bitserial kernel is a custom call GSPMD cannot partition,
-    # so sharding its operands would force replication/remat at the call
-    # anyway.  Packed serving parallelises over "data" only for now;
-    # per-shard packing is the ROADMAP follow-up.
-    if leaf in ("planes", "sign"):
-        return replicated()
+    # Packed serving weights follow the BASE weight's layout: sign
+    # (..., K/8, N) takes the base rule directly (byte-packed K rows and
+    # the output dim land on the base's in/out axes), planes
+    # (..., n_bits, K/8, N) add a replicated bit axis in front of the
+    # trailing two.  The Pallas bitserial kernel is still a custom call
+    # GSPMD cannot partition — the serve path wraps it in shard_map
+    # (kernels.ops.bitserial_matmul_sharded) so each shard runs the
+    # kernel on its LOCAL packed bytes and a psum stitches the
+    # contraction; per-shard packing comes from
+    # core.bsq.export_packed_sharded.
+    if leaf in ("planes", "sign") and ndim >= 2:
+        base = "/".join(segs[:-1])
+        if leaf == "planes":
+            if ndim < 3:
+                return replicated()
+            bspec = tuple(param_spec(base, shape[:-3] + shape[-2:], mesh))
+            return P(*bspec[:-2], None, *bspec[-2:])
+        return param_spec(base, shape, mesh)
+
+    # Per-group packed scale rows (..., 1, G) live on the shard that owns
+    # their output columns: recurse into the BASE weight's rule with the
+    # row's own shape — the 1-sized K slot never fits a mesh axis, and
+    # the G slot shards onto the base's out axis iff it divides — so the
+    # scale can never drift from the planes/sign layout (a tiny row, but
+    # a shard_map'd epilogue needs its local groups resident).  Everything
+    # else named "scale" (norm gains, BSQ training scales with trivial
+    # rows) falls through to the replicated rule below.
+    if (
+        leaf == "scale"
+        and len(segs) >= 2
+        and segs[-2].lower() in _PACKED_PARENTS
+        and ndim >= 2
+        and shape[-2] == 1
+        and shape[-1] > 1
+    ):
+        return param_spec("/".join(segs[:-1]), shape, mesh)
 
     if ndim < 2 or any(f in leaf for f in _REPLICATED_FRAGMENTS):
         return replicated()
@@ -192,6 +231,39 @@ def tree_param_specs(tree: PyTree, mesh) -> PyTree:
     flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
     specs = [param_spec(_path_name(path), tuple(leaf.shape), mesh) for path, leaf in flat]
     return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def annotate_packed_specs(params: PyTree, mesh) -> PyTree:
+    """Stamp every PackedWeight in ``params`` with its ``kn_spec``.
+
+    ``kn_spec`` is the (K-axis, N-axis) mesh-axis pair of the weight's
+    trailing two logical dims — the static annotation
+    ``kernels.ops.bitserial_matmul_sharded`` needs to shard_map the
+    Pallas kernel over per-shard packed bytes (the byte tensors
+    themselves are placed by :func:`tree_param_specs`; this records
+    *which* axes they landed on, since a traced value's sharding cannot
+    be inspected at trace time).  Derived from the ``sign`` leaf's rule
+    so annotation and placement cannot drift.
+    """
+    import dataclasses
+
+    from ..core.packing import PackedWeight
+
+    def is_pw(x):
+        return isinstance(x, PackedWeight)
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params, is_leaf=is_pw)
+    out = []
+    for path, leaf in flat:
+        if is_pw(leaf):
+            spec = tuple(
+                param_spec(_path_name(path) + "/sign", tuple(leaf.sign.shape), mesh)
+            )
+            kn = (spec[-2], spec[-1]) if len(spec) >= 2 else (None, None)
+            out.append(dataclasses.replace(leaf, kn_spec=kn))
+        else:
+            out.append(leaf)
+    return jax.tree_util.tree_unflatten(treedef, out)
 
 
 # ---------------------------------------------------------------------------

@@ -2,8 +2,9 @@
 bit-plane-packed weights (the serving hot path of BSQ, DESIGN.md §3.2).
 
 Weights live in HBM as ``planes (n_bits, K/8, N) uint8`` + ``sign
-(K/8, N) uint8`` + scalar scale (sign-magnitude layout from
-core/packing.py).  Per (m, n, k) grid step the kernel:
+(K/8, N) uint8`` + a per-output-column scale row ``(1, N) f32``
+(sign-magnitude layout from core/packing.py; per-group scale rows are
+expanded to per-column by ops.py).  Per (m, n, k) grid step the kernel:
 
   1. DMAs an x tile (bm, bk) and the packed tiles (n_bits, bk/8, bn),
      (bk/8, bn) into VMEM  — HBM traffic for weights is (n_bits+1)/16 of
@@ -13,12 +14,13 @@ core/packing.py).  Per (m, n, k) grid step the kernel:
   2. unpacks bits with shifts (VPU), builds the bf16 weight tile
      ``(1-2*sign) * sum_b bits_b 2^b`` — small VPU cost, MXU-aligned
      (bk, bn multiples of 128 for lane, 8 for sublane);
-  3. accumulates ``x_tile @ w_tile`` into an f32 VMEM scratch, applying
-     ``1 / (2^n - 1)`` once at the final k step (the per-tensor scale is
-     a free fused multiply outside the kernel, see ops.py).
+  3. accumulates ``x_tile @ w_tile`` into an f32 VMEM scratch; the final
+     k step applies the epilogue ``acc * scale_row / (2^n - 1)`` — the
+     per-group scales ride in the (1, bn) scale tile, so dequantisation
+     stays exact even when groups disagree (no global mean scale).
 
 Validated against ref.bitserial_matmul_ref in interpret mode (tests
-sweep shapes/dtypes/n_bits).
+sweep shapes/dtypes/n_bits/scale groupings).
 """
 from __future__ import annotations
 
@@ -30,8 +32,8 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 
-def _kernel(x_ref, planes_ref, sign_ref, out_ref, acc_ref, *, n_bits: int, nsteps_k: int,
-            out_dtype):
+def _kernel(x_ref, planes_ref, sign_ref, scale_ref, out_ref, acc_ref, *, n_bits: int,
+            nsteps_k: int, out_dtype):
     k = pl.program_id(2)
 
     @pl.when(k == 0)
@@ -39,7 +41,6 @@ def _kernel(x_ref, planes_ref, sign_ref, out_ref, acc_ref, *, n_bits: int, nstep
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
     x = x_ref[...]  # (bm, bk)
-    packed = planes_ref[...]  # (n_bits, bk/8, bn) uint8
     sign = sign_ref[...]  # (bk/8, bn) uint8
     bk8, bn = sign.shape
 
@@ -62,7 +63,8 @@ def _kernel(x_ref, planes_ref, sign_ref, out_ref, acc_ref, *, n_bits: int, nstep
     @pl.when(k == nsteps_k - 1)
     def _finish():
         denom = 2.0**n_bits - 1.0
-        out_ref[...] = (acc_ref[...] * (1.0 / denom)).astype(out_dtype)
+        s = scale_ref[...] * (1.0 / denom)  # (1, bn) f32 epilogue row
+        out_ref[...] = (acc_ref[...] * s).astype(out_dtype)
 
 
 @functools.partial(
@@ -72,6 +74,7 @@ def bitserial_matmul_pallas(
     x: jax.Array,  # (M, K)
     planes: jax.Array,  # (n_bits, K/8, N) uint8
     sign: jax.Array,  # (K/8, N) uint8
+    scale: jax.Array,  # (1, N) f32 per-output-column scale row
     *,
     n_bits: int,
     block_m: int = 128,
@@ -86,6 +89,7 @@ def bitserial_matmul_pallas(
     block_k = min(block_k, K)
     assert K % block_k == 0 and block_k % 8 == 0, (K, block_k)
     assert M % block_m == 0 and N % block_n == 0, (M, N, block_m, block_n)
+    assert scale.shape == (1, N), (scale.shape, N)
     nk = K // block_k
     grid = (M // block_m, N // block_n, nk)
     kern = functools.partial(
@@ -101,9 +105,10 @@ def bitserial_matmul_pallas(
             pl.BlockSpec((block_m, block_k), lambda i, j, k: (i, k)),
             pl.BlockSpec((planes.shape[0], block_k // 8, block_n), lambda i, j, k: (0, k, j)),
             pl.BlockSpec((block_k // 8, block_n), lambda i, j, k: (k, j)),
+            pl.BlockSpec((1, block_n), lambda i, j, k: (0, j)),
         ],
         out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, k: (i, j)),
         out_shape=jax.ShapeDtypeStruct((M, N), x.dtype),
         scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32)],
         interpret=interpret,
-    )(x, planes, sign)
+    )(x, planes, sign, scale.astype(jnp.float32))

@@ -4,12 +4,14 @@ system calls (serve engine, regularizer fast path, prefill attention).
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
 
-from ..core.packing import PackedWeight
+from ..core.packing import PackedWeight, scale_row
 from . import ref
 from .bgl_norm import bgl_sumsq_pallas
 from .bitserial_matmul import bitserial_matmul_pallas
@@ -23,7 +25,12 @@ def _on_tpu() -> bool:
 def bitserial_matmul(
     x: jax.Array, pw: PackedWeight, *, use_pallas: bool | None = None, interpret: bool | None = None
 ) -> jax.Array:
-    """x (..., K) @ packed weight (K, N) with on-the-fly dequantisation."""
+    """x (..., K) @ packed weight (K, N) with on-the-fly dequantisation.
+
+    The per-group scale row is applied as an output-column epilogue
+    (inside the Pallas kernel's final k step; same formula on the ref
+    path), so per-group exports dequantise exactly on both backends.
+    """
     lead = x.shape[:-1]
     x2 = x.reshape(-1, x.shape[-1])
     use_pallas = _on_tpu() if use_pallas is None else use_pallas
@@ -35,13 +42,105 @@ def bitserial_matmul(
         bn = 128 if N % 128 == 0 else N
         bk = 512 if K % 512 == 0 else (128 if K % 128 == 0 else K)
         out = bitserial_matmul_pallas(
-            x2, pw.planes, pw.sign, n_bits=pw.n_bits,
+            x2, pw.planes, pw.sign, scale_row(pw.scale, N), n_bits=pw.n_bits,
             block_m=bm, block_n=bn, block_k=bk, interpret=interpret,
         )
-        out = out * jnp.asarray(pw.scale, out.dtype)
     else:
         out = ref.bitserial_matmul_ref(x2, pw.planes, pw.sign, pw.scale, pw.n_bits)
     return out.reshape(*lead, -1)
+
+
+def _axis_size(mesh, ax) -> int:
+    if ax is None:
+        return 1
+    axes = ax if isinstance(ax, tuple) else (ax,)
+    size = 1
+    for a in axes:
+        size *= int(mesh.shape[a])
+    return size
+
+
+def bitserial_matmul_sharded(
+    x: jax.Array,
+    pw: PackedWeight,
+    mesh,
+    *,
+    use_pallas: bool | None = None,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """shard_map-wrapped packed matmul: each shard runs the bitserial
+    kernel on its LOCAL planes/sign/scale block and a psum over the
+    contraction axis stitches the result.
+
+    The Pallas bitserial kernel lowers to a custom call GSPMD cannot
+    partition — without this wrapper a sharded ``planes`` operand would
+    be all-gathered at the call.  ``pw.kn_spec`` (set by
+    ``dist.sharding.annotate_packed_specs``) names the mesh axes of the
+    trailing (K, N) weight axes; ``x`` is resharded so its contraction
+    axis lines up with the weight's K shards, partial products are
+    psum'd over the K axis, and the output comes back sharded over the
+    weight's N axis (col-parallel) or the data axis (row-parallel) —
+    the usual Megatron stitching, with packed bytes staying local.
+
+    Falls back to the unsharded call when the annotation or the shapes
+    make local blocks ill-defined (no K/N sharding, K not byte-aligned
+    across shards, or a group-scale row that does not divide over the N
+    shards).
+    """
+    k_ax, n_ax = pw.kn_spec if pw.kn_spec is not None else (None, None)
+    K8, N = pw.sign.shape[-2:]
+    dk, dn = _axis_size(mesh, k_ax), _axis_size(mesh, n_ax)
+    s = jnp.asarray(pw.scale)
+    shardable = (
+        pw.planes.ndim == 3  # 2D weight (scan has already sliced any stack)
+        and (dk > 1 or dn > 1)
+        and pw.k == K8 * 8  # pad rows would straddle the shard boundary
+        and K8 % dk == 0
+        and N % dn == 0
+        and (s.ndim == 0 or s.shape[-1] == 1 or s.shape[-1] % dn == 0)
+    )
+    if not shardable:
+        # The byte tensors may well BE mesh-sharded (dist.sharding no
+        # longer replicates them) — falling back to the plain call hands
+        # them to GSPMD, which must all-gather them at the opaque Pallas
+        # custom call, forfeiting the per-device packed HBM win.  Warn
+        # loudly (once per trace) instead of regressing silently.
+        import warnings
+
+        warnings.warn(
+            f"bitserial_matmul_sharded: falling back to the unsharded packed "
+            f"matmul (kn_spec={pw.kn_spec}, sign shape {pw.sign.shape}, "
+            f"scale shape {tuple(s.shape)}, k={pw.k}) — local shard blocks "
+            "are ill-defined (indivisible K8/N/scale groups or padded K); "
+            "packed bytes will be gathered at the kernel call",
+            stacklevel=2,
+        )
+        return bitserial_matmul(x, pw, use_pallas=use_pallas, interpret=interpret)
+
+    from ..dist.collectives import shard_map_compat
+
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    if s.ndim == 0:
+        s_spec = P()
+    elif s.shape[-1] > 1 and dn > 1:  # group row splits evenly (checked above)
+        s_spec = P(None, n_ax)
+    else:
+        s_spec = P(None, None)
+    spec_pw = dataclasses.replace(
+        pw, planes=P(None, k_ax, n_ax), sign=P(k_ax, n_ax), scale=s_spec
+    )
+
+    def local(xl, pwl):
+        y = bitserial_matmul(xl, pwl, use_pallas=use_pallas, interpret=interpret)
+        if k_ax is not None:
+            y = jax.lax.psum(y, k_ax)
+        return y
+
+    f = shard_map_compat(
+        local, mesh, in_specs=(P(None, k_ax), spec_pw), out_specs=P(None, n_ax)
+    )
+    return f(x2, pw).reshape(*lead, -1)
 
 
 def bgl_sumsq(x: jax.Array, *, use_pallas: bool | None = None, interpret: bool | None = None):

@@ -4,11 +4,16 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from ..core.packing import unpack_bits_axis0
+from ..core.packing import scale_row, unpack_bits_axis0
 
 
 def bitserial_matmul_ref(x, planes, sign, scale, n_bits: int):
-    """x (M,K) @ dequant(planes, sign) * scale / (2^n - 1)."""
+    """x (M,K) @ dequant(planes, sign) * scale_row / (2^n - 1).
+
+    ``scale`` may be a scalar or a per-group ``(1, G)`` row (G dividing
+    N); either way it is applied as an output-column epilogue, matching
+    the Pallas kernel's final-k step exactly.
+    """
     K = x.shape[1]
     mag = sum(
         unpack_bits_axis0(planes[b], K).astype(jnp.float32) * (2.0**b) for b in range(n_bits)
@@ -16,7 +21,8 @@ def bitserial_matmul_ref(x, planes, sign, scale, n_bits: int):
     sgn = 1.0 - 2.0 * unpack_bits_axis0(sign, K).astype(jnp.float32)
     w = (sgn * mag).astype(x.dtype)
     denom = 2.0**n_bits - 1.0
-    return (x @ w) * jnp.asarray(scale / denom, x.dtype)
+    s = scale_row(scale, w.shape[-1]) / denom
+    return (x @ w) * s.astype(x.dtype)
 
 
 def bgl_sumsq_ref(x: jax.Array) -> jax.Array:

@@ -22,7 +22,10 @@ Scheduling modes:
 With --data-parallel/--model-parallel the engine serves on a real
 ("data", "model") mesh: params, the KV cache and the slot pool are
 sharded under the repro.dist rules (requires N*M local devices, e.g. via
-XLA_FLAGS --xla_force_host_platform_device_count).
+XLA_FLAGS --xla_force_host_platform_device_count).  --packed-bits N
+serves bit-plane-packed weights (per-shard PackedWeights on a mesh: the
+bitserial matmul runs shard_map'd on local packed bytes; see
+docs/packed_format.md).
 """
 import argparse
 
@@ -61,6 +64,10 @@ def main():
                          "step (continuous mode; 0 = all requests at step 0)")
     ap.add_argument("--mixed-lens", action="store_true",
                     help="cycle prompt lengths around --prompt-len")
+    ap.add_argument("--packed-bits", type=int, default=0,
+                    help="serve bit-plane-packed weights at this precision "
+                         "(0 = float); with a mesh the packed bytes shard "
+                         "per-device (docs/packed_format.md)")
     args = ap.parse_args()
 
     from ..configs import reduced_config
@@ -85,6 +92,13 @@ def main():
                 "replicated batch axis"
             )
     params = init_params(jax.random.PRNGKey(0), cfg)
+    if args.packed_bits:
+        from ..core.packing import pack_model_params, packed_leaves
+
+        params = pack_model_params(params, args.packed_bits)
+        packed_bytes = sum(pw.hbm_bytes() for pw in packed_leaves(params))
+        print(f"[serve] packed weights at {args.packed_bits}b: "
+              f"{packed_bytes / 1e6:.2f} MB global")
     engine = ServeEngine(params, cfg, max_len=args.max_len, mesh=mesh,
                          continuous=args.continuous, n_slots=args.slots)
     task = MarkovLM(vocab=cfg.vocab_size, seed=3)

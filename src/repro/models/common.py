@@ -6,6 +6,8 @@ PackedWeight (K, N) maps 1:1.
 """
 from __future__ import annotations
 
+import contextlib
+import contextvars
 import math
 from typing import Dict
 
@@ -16,15 +18,52 @@ from ..core.ste import relu6_act_quantize
 
 Params = Dict[str, jax.Array]
 
+# Mesh over which packed matmuls are shard_map'd (None = GSPMD-managed).
+# Set for the duration of a trace by the serve engine via
+# packed_shard_mesh(); read by dense_apply at trace time.  A ContextVar,
+# not a module global: concurrent traces (e.g. a sharded engine and a
+# single-device reference engine in one process) must not see each
+# other's mesh.
+_packed_mesh_var: contextvars.ContextVar = contextvars.ContextVar(
+    "packed_shard_mesh", default=None
+)
+
+
+@contextlib.contextmanager
+def packed_shard_mesh(mesh):
+    """Trace the enclosed computation with packed matmuls shard_map'd.
+
+    Inside this context, dense_apply routes annotated PackedWeights
+    (``kn_spec`` set by ``dist.sharding.annotate_packed_specs``) through
+    ``kernels.ops.bitserial_matmul_sharded``: each shard runs the
+    bitserial kernel on its local packed bytes and a psum stitches the
+    contraction — required on TPU because the Pallas kernel is a custom
+    call GSPMD cannot partition.  ``mesh=None`` is a no-op (unsharded /
+    single-device serving)."""
+    token = _packed_mesh_var.set(mesh)
+    try:
+        yield
+    finally:
+        _packed_mesh_var.reset(token)
+
 
 def dense_apply(x: jax.Array, w) -> jax.Array:
     """x @ w, dispatching on representation: plain array, or a BSQ
     PackedWeight (sign+magnitude bit-planes) dequantised on the fly —
-    HBM weight traffic becomes (n_bits+1)/16 of bf16 (§Perf serving)."""
+    HBM weight traffic becomes (n_bits+1)/16 of bf16 (§Perf serving).
+    Under packed_shard_mesh(), annotated PackedWeights run per-shard
+    (shard_map + psum) instead of relying on GSPMD."""
     from ..core.packing import PackedWeight
     from ..kernels import ops
 
     if isinstance(w, PackedWeight):
+        mesh = _packed_mesh_var.get()
+        if (
+            mesh is not None
+            and w.kn_spec is not None
+            and any(a is not None for a in w.kn_spec)
+        ):
+            return ops.bitserial_matmul_sharded(x, w, mesh)
         # use_pallas=None -> ops dispatches by backend (Pallas kernel on
         # TPU, fused-unpack XLA ref elsewhere).
         return ops.bitserial_matmul(x, w, use_pallas=None)

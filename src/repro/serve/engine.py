@@ -19,9 +19,11 @@ Two scheduling modes share one engine:
   request is present up front and uniform.
 
 Weights arrive either as plain float params or as a BSQ export
-(``core.export_packed``): packed weights are dequantised on the fly by
-``kernels.ops.bitserial_matmul`` (Pallas on TPU, fused-unpack XLA ref
-path elsewhere), so HBM reads scale with the *mixed-precision* bit count
+(``core.export_packed`` / ``core.export_packed_sharded``, or
+``core.packing.pack_model_params``): packed weights are dequantised on
+the fly by ``kernels.ops.bitserial_matmul`` (Pallas on TPU, fused-unpack
+XLA ref path elsewhere), with the per-group scale row applied in the
+kernel epilogue, so HBM reads scale with the *mixed-precision* bit count
 — the serving-side payoff of the paper's compression (DESIGN.md §3.2).
 Mixed workloads only realise that payoff when lanes stay busy, which is
 exactly what the slot pool buys over bucketing.
@@ -30,8 +32,15 @@ Sharding: with a ``mesh``, params, the decode cache and the slot pool
 are placed under the dist-layer rules (``dist.sharding``:
 ``tree_param_specs`` / ``cache_tree_specs`` / ``slot_pool_specs``) — the
 engine then runs as a real ("data", "model") SPMD program instead of
-single-device.  All layout decisions live in :mod:`repro.dist`; this
-module only asks for shardings.
+single-device.  Packed weights are model-parallel too: their
+planes/sign/scale leaves follow the base weight's layout, each
+PackedWeight is stamped with its mesh axes
+(``dist.sharding.annotate_packed_specs``), and every jitted program
+traces under ``models.common.packed_shard_mesh`` so the bitserial
+matmul runs shard_map'd — per-shard packed bytes, psum-stitched
+contraction (per-device packed HBM drops by the model-axis factor).
+All layout decisions live in :mod:`repro.dist`; this module only asks
+for shardings.
 """
 from __future__ import annotations
 
@@ -46,6 +55,7 @@ import numpy as np
 from ..configs.base import ModelConfig
 from ..dist import sharding as dist_sharding
 from ..models import transformer
+from ..models.common import packed_shard_mesh
 
 
 @dataclasses.dataclass
@@ -72,15 +82,28 @@ class ServeEngine:
         self.max_len = max_len
         self.key = jax.random.PRNGKey(seed)
         self.mesh = mesh
+        # Model-parallel packed serving: annotate PackedWeights with their
+        # mesh axes BEFORE placement, and trace every program under
+        # packed_shard_mesh so the bitserial matmul runs shard_map'd on
+        # per-shard packed bytes (see module docstring).
+        from ..core.packing import packed_leaves
+
+        has_packed = bool(packed_leaves(params))
+        self._packed_mesh = mesh if has_packed else None
         if mesh is not None:
             from ..dist.elastic import reshard_tree
 
+            if has_packed:
+                params = dist_sharding.annotate_packed_specs(params, mesh)
             params = reshard_tree(params, mesh)
         self.params = params
         self._prefill_cache: Dict[int, Callable] = {}
-        self._decode = jax.jit(
-            lambda p, cache, tok, pos: transformer.decode_step(p, cache, tok, pos, cfg)
-        )
+
+        def _decode_fn(p, cache, tok, pos):
+            with packed_shard_mesh(self._packed_mesh):
+                return transformer.decode_step(p, cache, tok, pos, cfg)
+
+        self._decode = jax.jit(_decode_fn)
         self.scheduler = None
         if continuous:
             from .scheduler import ContinuousScheduler, SchedulerPolicy
@@ -108,10 +131,11 @@ class ServeEngine:
                         self.mesh, dist_sharding.cache_tree_specs(cache_sds, self.mesh)
                     ),
                 )
-            fn = jax.jit(
-                lambda p, b: transformer.prefill(p, b, self.cfg, self.max_len),
-                out_shardings=out_sh,
-            )
+            def _prefill(p, b):
+                with packed_shard_mesh(self._packed_mesh):
+                    return transformer.prefill(p, b, self.cfg, self.max_len)
+
+            fn = jax.jit(_prefill, out_shardings=out_sh)
             self._prefill_cache[batch] = fn
         return fn
 

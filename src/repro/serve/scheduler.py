@@ -41,6 +41,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..models import transformer
+from ..models.common import packed_shard_mesh
 from .slots import SlotPool, scatter_slot
 
 
@@ -90,10 +91,12 @@ class ContinuousScheduler:
         out_sh = None
         if engine.mesh is not None:
             out_sh = (None, self.pool.shardings["cache"])
-        self._decode = jax.jit(
-            lambda p, cache, tok, pos: transformer.decode_step(p, cache, tok, pos, cfg),
-            out_shardings=out_sh,
-        )
+
+        def _decode_fn(p, cache, tok, pos):
+            with packed_shard_mesh(engine._packed_mesh):
+                return transformer.decode_step(p, cache, tok, pos, cfg)
+
+        self._decode = jax.jit(_decode_fn, out_shardings=out_sh)
         self._prefill_cache: Dict[int, Callable] = {}
         # bench/telemetry: occupancy per step, decode-step wall times
         self.occupancy_trace: List[int] = []
@@ -109,10 +112,11 @@ class ContinuousScheduler:
             engine = self.engine
 
             def prefill_into_slot(params, pool_cache, tokens, slot):
-                logits, part = transformer.prefill(
-                    params, {"tokens": tokens}, engine.cfg, engine.max_len,
-                    cache_dtype=self.pool.cache_dtype,
-                )
+                with packed_shard_mesh(engine._packed_mesh):
+                    logits, part = transformer.prefill(
+                        params, {"tokens": tokens}, engine.cfg, engine.max_len,
+                        cache_dtype=self.pool.cache_dtype,
+                    )
                 return logits, scatter_slot(pool_cache, part, slot)
 
             out_sh = None
@@ -180,6 +184,13 @@ class ContinuousScheduler:
                 f"{len(requests)} requests — zip would silently drop the excess"
             )
         for r in requests:
+            if r.max_new < 1:
+                raise ValueError(
+                    f"request {r.uid}: max_new={r.max_new} — the slot pool "
+                    "always emits the prefill-sampled token, so max_new < 1 "
+                    "would silently diverge from the bucketed engine's "
+                    "zero-token output (and break the capacity check below)"
+                )
             # last cache row written: prompt rows 0..plen-1, then max_new-1
             # decode writes at plen..plen+max_new-2
             need = len(r.tokens) + r.max_new - 1

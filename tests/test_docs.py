@@ -1,0 +1,14 @@
+"""Docs cannot rot silently: the CI docs job's checker (relative-link
+validation + doctests over README.md and docs/) also runs in tier-1."""
+import pathlib
+import subprocess
+import sys
+
+
+def test_docs_links_and_doctests():
+    root = pathlib.Path(__file__).resolve().parent.parent
+    out = subprocess.run(
+        [sys.executable, str(root / "tools" / "check_docs.py")],
+        capture_output=True, text=True, timeout=120,
+    )
+    assert out.returncode == 0, out.stdout + out.stderr

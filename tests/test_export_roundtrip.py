@@ -1,13 +1,19 @@
-"""export_packed -> bitserial matmul vs float reconstruct matmul."""
+"""export_packed -> bitserial matmul vs float reconstruct matmul.
+
+The exporter is exact BY CONSTRUCTION: per-group scales ride on the
+PackedWeight as a scale row / per-slice scale array, so there is no
+mean-scale fallback (and no lossy-scale warning) even when groups
+disagree wildly.
+"""
 import warnings
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
-from repro.core import BSQConfig, export_packed, reconstruct
+from repro.core import BSQConfig, export_packed, reconstruct, reconstruct_exact
 from repro.core.bitrep import decompose
+from repro.core.packing import unpack_to_float
 from repro.kernels import ops
 
 
@@ -22,7 +28,7 @@ def test_export_roundtrip_matches_reconstruct_matmul():
     key = jax.random.PRNGKey(0)
     w, rep = _rep(key, (64, 32), n_bits=4)
     with warnings.catch_warnings():
-        warnings.simplefilter("error")  # single scale -> no fallback warning
+        warnings.simplefilter("error")
         packed = export_packed({"w": rep})["w"]
     w_hat = reconstruct({"w": rep}, BSQConfig(n_init=4, compute_dtype=jnp.float32))["w"]
     x = jax.random.normal(jax.random.PRNGKey(1), (8, 64), jnp.float32)
@@ -33,15 +39,51 @@ def test_export_roundtrip_matches_reconstruct_matmul():
     )
 
 
-def test_export_packed_warns_on_disagreeing_group_scales():
-    """Stacked tensor with wildly different per-group magnitudes: the
-    single-scale export is lossy -> documented warning, finite output."""
+def test_export_exact_with_disagreeing_group_scales():
+    """Stacked tensor whose per-group scales disagree by >10x: the
+    per-slice scale array keeps the export exact — no warning, and the
+    dequantised weights match the rep's exact reconstruction to f32
+    rounding of the scale factor (the old exporter warned and fell back
+    to the lossy mean scale here)."""
     key = jax.random.PRNGKey(2)
     w = jax.random.normal(key, (2, 16, 8), jnp.float32)
     w = w.at[1].mul(100.0)  # second group 100x larger scale
     rep = decompose(w, 4, group_axes=(0,))
-    with pytest.warns(UserWarning, match="per-group scales"):
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")  # ANY warning fails the test
         packed = export_packed({"w": rep})["w"]
-    x = jnp.ones((2, packed.shape[0]), jnp.float32)
+    assert packed.scale.shape == (2, 1, 1)
+    s = np.asarray(packed.scale).reshape(-1)
+    assert s.max() / s.min() > 10.0  # groups genuinely disagree
+    deq = unpack_to_float(packed)
+    exact = reconstruct_exact(rep)
+    np.testing.assert_allclose(
+        np.asarray(deq), np.asarray(exact), rtol=1e-6, atol=1e-6 * float(s.max())
+    )
+    # the per-slice 2D views feed the bitserial matmul exactly, too
+    for i in range(2):
+        pw_i = jax.tree.map(lambda a: a[i], packed)
+        x = jnp.eye(pw_i.shape[0], dtype=jnp.float32)
+        y = ops.bitserial_matmul(x, pw_i, use_pallas=False)
+        np.testing.assert_allclose(
+            np.asarray(y), np.asarray(exact[i]), rtol=1e-5, atol=1e-5 * float(s.max())
+        )
+
+
+def test_export_exact_with_per_column_groups():
+    """Output-axis groups become a (1, G) scale row applied in the kernel
+    epilogue: packed matmul == exact reconstruction matmul."""
+    w = jax.random.normal(jax.random.PRNGKey(3), (16, 8), jnp.float32)
+    w = w.at[:, 4:].mul(30.0)  # right half 30x hotter
+    rep = decompose(w, 4, group_axes=(1,))
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        packed = export_packed({"w": rep})["w"]
+    assert packed.scale.shape == (1, 8)
+    x = jax.random.normal(jax.random.PRNGKey(4), (4, 16), jnp.float32)
     y = ops.bitserial_matmul(x, packed, use_pallas=False)
-    assert np.isfinite(np.asarray(y)).all()
+    y_ref = x @ reconstruct_exact(rep)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), rtol=1e-4, atol=1e-3)
+    # interpret-mode Pallas epilogue agrees with the ref epilogue
+    y_pl = ops.bitserial_matmul(x, packed, use_pallas=True, interpret=True)
+    np.testing.assert_allclose(np.asarray(y_pl), np.asarray(y), rtol=1e-5, atol=1e-5)

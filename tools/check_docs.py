@@ -1,0 +1,83 @@
+#!/usr/bin/env python
+"""Docs health check: broken relative links + doctested snippets.
+
+Scans README.md and docs/**/*.md for markdown links, verifies every
+relative target exists in the repo (anchors and external URLs are
+skipped), and runs ``doctest`` on any file containing ``>>>`` snippets.
+CI runs this so the docs cannot rot silently; it needs nothing beyond
+the standard library (doctest snippets in docs/ may import numpy).
+
+    python tools/check_docs.py
+"""
+from __future__ import annotations
+
+import doctest
+import pathlib
+import re
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+# [text](target) — excluding images is unnecessary; image targets must
+# exist too. Inline code spans are stripped first so `[a](b)` examples
+# inside backticks don't trip the scanner.
+_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+_CODE_SPAN = re.compile(r"`[^`]*`")
+_FENCE = re.compile(r"^(```|~~~)")
+
+
+def md_files():
+    files = [ROOT / "README.md"]
+    files += sorted((ROOT / "docs").rglob("*.md")) if (ROOT / "docs").is_dir() else []
+    return [f for f in files if f.is_file()]
+
+
+def iter_links(path: pathlib.Path):
+    in_fence = False
+    for lineno, line in enumerate(path.read_text().splitlines(), 1):
+        if _FENCE.match(line.strip()):
+            in_fence = not in_fence
+            continue
+        if in_fence:
+            continue
+        for m in _LINK.finditer(_CODE_SPAN.sub("", line)):
+            yield lineno, m.group(1)
+
+
+def check_links() -> list[str]:
+    errors = []
+    for f in md_files():
+        for lineno, target in iter_links(f):
+            if target.startswith(("http://", "https://", "mailto:")):
+                continue
+            rel = target.split("#", 1)[0]
+            if not rel:  # pure in-page anchor
+                continue
+            resolved = (f.parent / rel).resolve()
+            if not resolved.exists():
+                errors.append(f"{f.relative_to(ROOT)}:{lineno}: broken link -> {target}")
+    return errors
+
+
+def run_doctests() -> list[str]:
+    errors = []
+    for f in md_files():
+        if ">>>" not in f.read_text():
+            continue
+        fails, tests = doctest.testfile(str(f), module_relative=False)
+        print(f"doctest {f.relative_to(ROOT)}: {tests} tests, {fails} failures")
+        if fails:
+            errors.append(f"{f.relative_to(ROOT)}: {fails} doctest failure(s)")
+    return errors
+
+
+def main() -> int:
+    errors = check_links() + run_doctests()
+    for e in errors:
+        print(e, file=sys.stderr)
+    if not errors:
+        print(f"docs OK: {len(md_files())} markdown files, links + doctests clean")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
