@@ -30,6 +30,21 @@ identity against the single-device packed engine, and emits a
 the model-axis factor::
 
     serve_packed_hbm,<us>,global_bytes=...;per_dev_bytes=...;shrink_x=...
+
+``--chunked-prefill`` additionally serves the workload through the
+chunked-prefill scheduler (fused multi-admit + interleaved prefill/decode)
+and emits a ``serve_prefill`` row per prefill style — TTFT percentiles
+(admission burst -> first token; the legacy numbers include the
+serialisation behind earlier batch-1 prefills in the same burst, which is
+the cost multi-admit removes) and compiled-program counts (legacy grows
+with the number of distinct prompt lengths; chunked is bounded by the
+chunk-size table)::
+
+    serve_prefill,<us_total>,mode=legacy;ttft_p50_ms=...;ttft_p95_ms=...;prefill_programs=...
+    serve_prefill,<us_total>,mode=chunked;ttft_p50_ms=...;ttft_p95_ms=...;prefill_programs=...
+
+``--json PATH`` dumps every emitted row as structured JSON for harness
+consumption.
 """
 from __future__ import annotations
 
@@ -96,14 +111,16 @@ def run_bucketed(params, cfg, reqs, max_len: int):
     return results, wall, toks, programs
 
 
-def run_continuous(params, cfg, reqs, arrivals, max_len: int, n_slots: int, mesh=None):
+def run_continuous(params, cfg, reqs, arrivals, max_len: int, n_slots: int, mesh=None,
+                   chunked: bool = False):
     from repro.serve import ServeEngine
 
     engine = ServeEngine(params, cfg, max_len=max_len, continuous=True, n_slots=n_slots,
-                         mesh=mesh)
+                         mesh=mesh, chunked_prefill=chunked)
     sched = engine.scheduler
     engine.generate(reqs(), arrival_steps=arrivals)  # warmup
-    programs_after_warmup = sched.compiled_decode_programs()
+    programs_after_warmup = (sched.compiled_decode_programs(),
+                             sched.compiled_prefill_programs())
     sched.pool.reset()
     sched.occupancy_trace.clear()
     sched.decode_ms_total, sched.decode_steps = 0.0, 0
@@ -111,10 +128,17 @@ def run_continuous(params, cfg, reqs, arrivals, max_len: int, n_slots: int, mesh
     results = engine.generate(reqs(), arrival_steps=arrivals)
     wall = time.perf_counter() - t0
     toks = sum(len(r.tokens) for r in results)
-    assert sched.compiled_decode_programs() == programs_after_warmup, (
-        "decode recompiled after warmup"
+    assert (sched.compiled_decode_programs(),
+            sched.compiled_prefill_programs()) == programs_after_warmup, (
+        "decode/prefill recompiled after warmup"
     )
     return results, wall, toks, sched
+
+
+def ttft_stats(results):
+    """(p50, p95) of per-request TTFT in ms (Result.prefill_ms)."""
+    ttfts = np.asarray([r.prefill_ms for r in results])
+    return float(np.percentile(ttfts, 50)), float(np.percentile(ttfts, 95))
 
 
 def main(argv=None):
@@ -127,6 +151,12 @@ def main(argv=None):
     ap.add_argument("--arrival-rate", type=float, default=1.0)
     ap.add_argument("--smoke", action="store_true",
                     help="tiny CI workload + hard asserts")
+    ap.add_argument("--chunked-prefill", action="store_true",
+                    help="also serve through the chunked-prefill scheduler "
+                         "and emit serve_prefill rows (TTFT + compile counts) "
+                         "for legacy vs chunked")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="dump all emitted rows as JSON to PATH")
     ap.add_argument("--packed-bits", type=int, default=0,
                     help="serve a bit-plane-packed model at this precision "
                          "(0 = float weights)")
@@ -184,6 +214,35 @@ def main(argv=None):
          f"toks_per_s={c_tps:.1f};occupancy={sched.mean_occupancy():.2f};"
          f"decode_programs={sched.compiled_decode_programs()};"
          f"speedup_x={c_tps / b_tps:.2f}")
+    if args.chunked_prefill:
+        k_results, k_wall, k_toks, ksched = run_continuous(
+            params, cfg, reqs, arrivals, args.max_len, args.slots, mesh=mesh,
+            chunked=True,
+        )
+        # Chunked prefill must not change a single greedy token.
+        for r in k_results:
+            np.testing.assert_array_equal(ref[r.uid], r.tokens)
+        l_p50, l_p95 = ttft_stats(c_results)
+        k_p50, k_p95 = ttft_stats(k_results)
+        chunk_sizes = ksched.policy.chunk_sizes
+        emit("serve_prefill", c_wall * 1e6,
+             f"mode=legacy;ttft_p50_ms={l_p50:.2f};ttft_p95_ms={l_p95:.2f};"
+             f"prefill_programs={sched.compiled_prefill_programs()}")
+        emit("serve_prefill", k_wall * 1e6,
+             f"mode=chunked;ttft_p50_ms={k_p50:.2f};ttft_p95_ms={k_p95:.2f};"
+             f"prefill_programs={ksched.compiled_prefill_programs()};"
+             f"admit_programs={ksched.compiled_admit_programs()};"
+             f"chunk_sizes={'/'.join(map(str, chunk_sizes))};"
+             f"toks_per_s={k_toks / k_wall:.1f}")
+        if args.smoke:
+            # bounded compile set: independent of the length mix (the
+            # workload has one distinct length per request)
+            assert ksched.compiled_prefill_programs() <= len(chunk_sizes) + 1, (
+                ksched.compiled_prefill_programs(), chunk_sizes)
+            assert ksched.compiled_admit_programs() == 1
+            assert ksched.compiled_decode_programs() == 1
+            assert sched.compiled_prefill_programs() >= len(
+                {len(r.tokens) for r in reqs()})
     if args.packed_bits:
         glob, per_dev = packed_hbm_stats(sched.engine)
         shrink = glob / max(per_dev, 1)
@@ -200,6 +259,17 @@ def main(argv=None):
             if args.smoke:
                 raise AssertionError(msg)
             print(f"WARNING: {msg}", file=sys.stderr)
+    if args.json:
+        import json
+
+        from benchmarks.common import ROWS
+
+        with open(args.json, "w") as f:
+            json.dump(
+                [dict(zip(("name", "us_per_call", "derived"), r.split(",", 2)))
+                 for r in ROWS],
+                f, indent=2,
+            )
     if args.smoke:
         assert sched.compiled_decode_programs() == 1, "must be ONE decode program"
         assert c_toks == b_toks

@@ -68,6 +68,12 @@ def reduced_config(arch: str) -> ModelConfig:
         frontend_tokens=8 if c.frontend_tokens else 0,
         remat=False,
         dtype="float32",
+        # Match the compute dtype: with f32 compute a bf16 cache would make
+        # chunked prefill (which re-reads earlier K/V through the cache)
+        # numerically diverge from the batch-1 prefill oracle (which
+        # attends full-precision K/V) — real configs are bf16/bf16, where
+        # the cache round-trip is the identity anyway.
+        kv_cache_dtype="float32",
         vocab_pad_multiple=8,
     )
 

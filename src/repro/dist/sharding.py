@@ -329,6 +329,19 @@ def slot_pool_specs(pool_state: PyTree, mesh) -> PyTree:
     }
 
 
+def chunk_buffer_specs(buffers: PyTree, mesh) -> PyTree:
+    """Specs for chunked-prefill staging buffers (serve/scheduler.py).
+
+    The per-dispatch control tensors — the (n_slots, C) token block, the
+    per-lane ``start`` / ``n_valid`` vectors and the multi-admit slot
+    vector — are tiny and consumed by every lane's masking math, so they
+    replicate like the pool's ``pos``/``temps`` vectors (sharding the
+    slot axis would turn each chunk dispatch into a collective).  Kept as
+    an explicit rule so the layout decision lives here, not in serve/.
+    """
+    return jax.tree.map(lambda _: replicated(), buffers)
+
+
 def cache_tree_specs(cache: PyTree, mesh) -> PyTree:
     """:func:`cache_spec` over a whole decode cache; entries under
     ``blocks`` carry a leading superblock axis (replicated)."""

@@ -18,6 +18,12 @@ Scheduling modes:
   Poisson request stream (mean R arrivals per decode step, seeded);
   ``--mixed-lens`` cycles prompt lengths through {1/2, 1, 3/2, 2} x
   --prompt-len to exercise the mixed-length path.
+* ``--chunked-prefill`` (with ``--continuous``): admission fuses into one
+  multi-admit dispatch and prompts stream through the pooled program in
+  fixed-size chunks, interleaved with decode steps — the prefill
+  compiled set is bounded by the chunk-size table instead of growing
+  with the number of distinct prompt lengths, and a long prompt no
+  longer stalls live decode lanes.
 
 With --data-parallel/--model-parallel the engine serves on a real
 ("data", "model") mesh: params, the KV cache and the slot pool are
@@ -59,6 +65,10 @@ def main():
                     help="serve through the slot-pool continuous-batching scheduler")
     ap.add_argument("--slots", type=int, default=8,
                     help="slot-pool lanes (continuous mode)")
+    ap.add_argument("--chunked-prefill", action="store_true",
+                    help="stream prompts through the pooled program in "
+                         "fixed-size chunks (continuous mode; bounded "
+                         "compile set + fused multi-admit)")
     ap.add_argument("--arrival-rate", type=float, default=0.0,
                     help="simulate Poisson arrivals at this mean rate per decode "
                          "step (continuous mode; 0 = all requests at step 0)")
@@ -69,6 +79,8 @@ def main():
                          "(0 = float); with a mesh the packed bytes shard "
                          "per-device (docs/packed_format.md)")
     args = ap.parse_args()
+    if args.chunked_prefill and not args.continuous:
+        raise SystemExit("--chunked-prefill requires --continuous")
 
     from ..configs import reduced_config
     from ..data import MarkovLM
@@ -100,7 +112,8 @@ def main():
         print(f"[serve] packed weights at {args.packed_bits}b: "
               f"{packed_bytes / 1e6:.2f} MB global")
     engine = ServeEngine(params, cfg, max_len=args.max_len, mesh=mesh,
-                         continuous=args.continuous, n_slots=args.slots)
+                         continuous=args.continuous, n_slots=args.slots,
+                         chunked_prefill=args.chunked_prefill)
     task = MarkovLM(vocab=cfg.vocab_size, seed=3)
     if args.mixed_lens:
         lens = [max(2, args.prompt_len * m // 2) for m in (1, 2, 3, 4)]
@@ -129,7 +142,12 @@ def main():
         print(f"[continuous] slots={args.slots} "
               f"occupancy={sched.mean_occupancy():.2f} "
               f"decode_steps={sched.decode_steps} "
-              f"decode_programs={sched.compiled_decode_programs()}")
+              f"decode_programs={sched.compiled_decode_programs()} "
+              f"prefill_programs={sched.compiled_prefill_programs()}")
+        if args.chunked_prefill:
+            print(f"[chunked] chunk_dispatches={sched.prefill_chunks} "
+                  f"admit_bursts={len(sched.admit_bursts)} "
+                  f"admit_programs={sched.compiled_admit_programs()}")
 
 
 if __name__ == "__main__":

@@ -8,4 +8,5 @@ from .transformer import (  # noqa: F401
     loss_fn,
     param_count,
     prefill,
+    prefill_chunk,
 )

@@ -124,12 +124,17 @@ def decode_attention(
     head_dim: int,
     rope_theta: float,
     window: Optional[int] = None,
+    active: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """One-token decode.  x: (B, 1, D); cache_[kv]: (B, Smax, K, d);
     pos: scalar int32 current position, or a (B,) int32 vector of
     per-slot positions (continuous batching: each lane of the batch is an
     independent request at its own depth — RoPE, the causal mask and the
-    cache write all use that lane's position).  Returns (out, new_k, new_v)."""
+    cache write all use that lane's position).  ``active`` (per-slot path
+    only): (B,) bool; inactive lanes keep their cache row untouched —
+    required when prefilling lanes interleave with the pooled decode step
+    (their row ``pos`` holds a real prompt key the decode's garbage write
+    would otherwise clobber).  Returns (out, new_k, new_v)."""
     B = x.shape[0]
     G = n_heads // n_kv
     q, k, v = _qkv(p, x, n_heads, n_kv, head_dim)
@@ -139,8 +144,12 @@ def decode_attention(
     k = apply_rope(k, posb, rope_theta)
     if per_slot:
         bidx = jnp.arange(B)
-        cache_k = cache_k.at[bidx, pos].set(k[:, 0].astype(cache_k.dtype))
-        cache_v = cache_v.at[bidx, pos].set(v[:, 0].astype(cache_v.dtype))
+        k_row, v_row = k[:, 0].astype(cache_k.dtype), v[:, 0].astype(cache_v.dtype)
+        if active is not None:
+            k_row = jnp.where(active[:, None, None], k_row, cache_k[bidx, pos])
+            v_row = jnp.where(active[:, None, None], v_row, cache_v[bidx, pos])
+        cache_k = cache_k.at[bidx, pos].set(k_row)
+        cache_v = cache_v.at[bidx, pos].set(v_row)
     else:
         cache_k = jax.lax.dynamic_update_slice_in_dim(
             cache_k, k.astype(cache_k.dtype), pos, axis=1)
@@ -172,6 +181,7 @@ def decode_attention_cache(
     rope_theta: float,
     window: Optional[int] = None,
     ring: bool = False,
+    active: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """One-token decode against either a full-length cache or a ring buffer.
 
@@ -190,6 +200,7 @@ def decode_attention_cache(
         return decode_attention(
             p, x, cache_k, cache_v, pos, n_heads=n_heads, n_kv=n_kv,
             head_dim=head_dim, rope_theta=rope_theta, window=window,
+            active=active,
         )
     B = x.shape[0]
     Wc = cache_k.shape[1]
@@ -202,8 +213,12 @@ def decode_attention_cache(
     if per_slot:
         bidx = jnp.arange(B)
         lane_slot = jnp.mod(pos, Wc)  # (B,)
-        cache_k = cache_k.at[bidx, lane_slot].set(k[:, 0].astype(cache_k.dtype))
-        cache_v = cache_v.at[bidx, lane_slot].set(v[:, 0].astype(cache_v.dtype))
+        k_row, v_row = k[:, 0].astype(cache_k.dtype), v[:, 0].astype(cache_v.dtype)
+        if active is not None:
+            k_row = jnp.where(active[:, None, None], k_row, cache_k[bidx, lane_slot])
+            v_row = jnp.where(active[:, None, None], v_row, cache_v[bidx, lane_slot])
+        cache_k = cache_k.at[bidx, lane_slot].set(k_row)
+        cache_v = cache_v.at[bidx, lane_slot].set(v_row)
     else:
         slot = jnp.mod(pos, Wc)
         cache_k = jax.lax.dynamic_update_slice_in_dim(
@@ -221,6 +236,104 @@ def decode_attention_cache(
     s = jnp.where(valid[:, None, None, None, :], s, NEG_INF)
     w = jax.nn.softmax(s, axis=-1)
     out = _gqa_combine(w, cache_v.astype(x.dtype), x.dtype)
+    return dense_apply(out, p["wo"]), cache_k, cache_v
+
+
+def prefill_chunk_attention(
+    p: Params,
+    x: jax.Array,
+    cache_k: jax.Array,
+    cache_v: jax.Array,
+    start: jax.Array,
+    n_valid: jax.Array,
+    *,
+    n_heads: int,
+    n_kv: int,
+    head_dim: int,
+    rope_theta: float,
+    window: Optional[int] = None,
+    ring: bool = False,
+    scores_dtype=jnp.float32,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Chunked prefill: C prompt-token queries per lane against the lane's
+    own rows of the pooled cache.
+
+    ``x``: (B, C, D) — one fixed-size chunk per lane; ``start``: (B,) the
+    chunk's first absolute position; ``n_valid``: (B,) how many of the C
+    tokens are real.  Trailing pad tokens produce garbage rows/outputs
+    that are never read: pad cache rows sit beyond the lane's position
+    and are overwritten by the next chunk or the first decode write, and
+    the scheduler discards pad logits.  Lanes not prefilling pass
+    ``n_valid = 0`` and (non-ring path) ``start = max_len`` so every one
+    of their writes is out of bounds and drops.
+
+    Full-length caches (``ring=False``) write the chunk's K/V first and
+    attend against the updated cache — rows ``<= start + i`` are exactly
+    the lane's processed prefix, so the causal mask alone confines query
+    ``i`` to real keys.  Ring buffers (``ring=True``): a chunk longer
+    than the ring would overwrite keys its own queries still need, so
+    scores run over [chunk K/V ; pre-chunk ring] instead, and the ring is
+    then rebuilt by gather: slot ``s``'s new content is the *latest* valid
+    chunk position congruent to it, or the old content if the chunk never
+    reached that slot.  Returns (out, new_k, new_v)."""
+    B, C, _ = x.shape
+    G = n_heads // n_kv
+    q, k, v = _qkv(p, x, n_heads, n_kv, head_dim)
+    qpos = start[:, None] + jnp.arange(C)[None, :]  # (B, C)
+    q = apply_rope(q, qpos, rope_theta)
+    k = apply_rope(k, qpos, rope_theta)
+    qs = q.reshape(B, C, n_kv, G, head_dim) * (head_dim**-0.5)
+    neg = jnp.asarray(NEG_INF, scores_dtype)
+    if not ring:
+        bidx = jnp.arange(B)[:, None]
+        cache_k = cache_k.at[bidx, qpos].set(k.astype(cache_k.dtype), mode="drop")
+        cache_v = cache_v.at[bidx, qpos].set(v.astype(cache_v.dtype), mode="drop")
+        s = _gqa_scores(qs, cache_k.astype(x.dtype), scores_dtype)  # (B,K,G,C,Smax)
+        kpos = jnp.arange(cache_k.shape[1])
+        valid = kpos[None, None, :] <= qpos[:, :, None]  # (B, C, Smax)
+        if window is not None:
+            valid &= (qpos[:, :, None] - kpos[None, None, :]) < window
+        s = jnp.where(valid[:, None, None], s, neg)
+        s = s - jax.lax.stop_gradient(jnp.max(s, axis=-1, keepdims=True))
+        w = jax.nn.softmax(s.astype(scores_dtype), axis=-1)
+        out = _gqa_combine(w, cache_v.astype(x.dtype), x.dtype)
+        return dense_apply(out, p["wo"]), cache_k, cache_v
+
+    Wc = cache_k.shape[1]
+    ci = jnp.arange(C)
+    # intra-chunk keys: plain causal (+window) on chunk-relative offsets
+    s1 = _gqa_scores(qs, k, scores_dtype)  # (B,K,G,C,C)
+    m1 = ci[:, None] >= ci[None, :]
+    if window is not None:
+        m1 &= (ci[:, None] - ci[None, :]) < window
+    s1 = jnp.where(m1[None, None, None], s1, neg)
+    # pre-chunk ring keys: slot s holds absolute position
+    # r_s = (start-1) - ((start-1-s) mod Wc) — the latest processed
+    # position congruent to s (continuity invariant of the rebuild below);
+    # r_s < 0 means the lane never reached that slot (stale content).
+    slots = jnp.arange(Wc)
+    r = (start[:, None] - 1) - jnp.mod(start[:, None] - 1 - slots[None, :], Wc)
+    s2 = _gqa_scores(qs, cache_k.astype(x.dtype), scores_dtype)  # (B,K,G,C,Wc)
+    m2 = jnp.broadcast_to((r >= 0)[:, None, :], (B, C, Wc))
+    if window is not None:
+        m2 &= (qpos[:, :, None] - r[:, None, :]) < window
+    s2 = jnp.where(m2[:, None, None], s2, neg)
+    s = jnp.concatenate([s1, s2], axis=-1)  # (B,K,G,C,C+Wc)
+    s = s - jax.lax.stop_gradient(jnp.max(s, axis=-1, keepdims=True))
+    w = jax.nn.softmax(s.astype(scores_dtype), axis=-1)
+    v_all = jnp.concatenate([v, cache_v.astype(x.dtype)], axis=1)
+    out = _gqa_combine(w, v_all, x.dtype)
+    # ring rebuild (gather-select, deterministic where scatter-with-
+    # duplicates is not): slot s's final occupant is the latest valid
+    # chunk position congruent to it, else the old content survives.
+    last = start + n_valid - 1  # (B,)
+    p_s = last[:, None] - jnp.mod(last[:, None] - slots[None, :], Wc)  # (B, Wc)
+    in_chunk = p_s >= start[:, None]  # implies p_s < start + n_valid
+    i_s = jnp.clip(p_s - start[:, None], 0, C - 1)
+    k_sel = jnp.take_along_axis(k.astype(cache_k.dtype), i_s[..., None, None], axis=1)
+    v_sel = jnp.take_along_axis(v.astype(cache_v.dtype), i_s[..., None, None], axis=1)
+    cache_k = jnp.where(in_chunk[..., None, None], k_sel, cache_k)
+    cache_v = jnp.where(in_chunk[..., None, None], v_sel, cache_v)
     return dense_apply(out, p["wo"]), cache_k, cache_v
 
 

@@ -89,6 +89,42 @@ def rglru_apply(p: Params, x: jax.Array) -> Tuple[jax.Array, Tuple[jax.Array, ja
     return y @ p["w_out"].astype(x.dtype), (h[:, -1], conv_tail)
 
 
+def rglru_prefill_chunk(
+    p: Params,
+    x: jax.Array,  # (B, C, D) — one prompt chunk per lane
+    h0: jax.Array,  # (B, R) f32 — state entering the chunk
+    conv_state: jax.Array,  # (B, W-1, R) — pre-conv xr tail
+    n_valid: jax.Array,  # (B,) int32 — real tokens in this chunk
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Chunked prefill with carried state (continuous-batching slot pool).
+
+    Pad positions (``i >= n_valid[b]``) are forced to the recurrence's
+    identity (``a = 1, b = 0``), so the scan's last entry IS the state at
+    each lane's last real token, and a lane with ``n_valid = 0`` passes
+    its state/conv through untouched.  The conv tail (pre-conv ``xr``,
+    as in :func:`rglru_apply`) carries across chunks; the zero tail a
+    fresh lane starts from matches ``_causal_conv``'s zero padding.
+    Returns (y (B,C,D), final state, new conv tail)."""
+    B, C, _ = x.shape
+    gate = jax.nn.gelu(x @ p["w_gate_branch"].astype(x.dtype), approximate=True)
+    xr = x @ p["w_x"].astype(x.dtype)  # (B, C, R)
+    W = p["conv_w"].shape[0]
+    window = jnp.concatenate([conv_state.astype(x.dtype), xr], axis=1)
+    conv_out = sum(
+        window[:, i : i + C, :] * p["conv_w"][i][None, None].astype(x.dtype)
+        for i in range(W)
+    ) + p["conv_b"].astype(x.dtype)
+    a, b = _gates(p, conv_out)
+    valid = (jnp.arange(C)[None, :] < n_valid[:, None])[..., None]  # (B, C, 1)
+    a = jnp.where(valid, a, 1.0)
+    b = jnp.where(valid, b, 0.0)
+    h = rglru_scan(a, b, h0)
+    y = (gate.astype(jnp.float32) * h).astype(x.dtype)
+    tail_idx = n_valid[:, None] + jnp.arange(W - 1)[None, :]  # (B, W-1)
+    new_conv = jnp.take_along_axis(window, tail_idx[..., None], axis=1)
+    return y @ p["w_out"].astype(x.dtype), h[:, -1], new_conv
+
+
 def rglru_decode(
     p: Params,
     x: jax.Array,  # (B, 1, D)

@@ -147,6 +147,55 @@ def ssm_apply(
     return y @ p["out_proj"].astype(x.dtype), hT
 
 
+def ssm_prefill_chunk(
+    p: Params,
+    x: jax.Array,  # (B, C, D) — one prompt chunk per lane
+    ssm_state: jax.Array,  # (B, H, P, N) f32 — state entering the chunk
+    conv_state: jax.Array,  # (B, W-1, conv_dim) — pre-conv xBC tail
+    n_valid: jax.Array,  # (B,) int32 — real tokens in this chunk
+    *,
+    expand: int,
+    head_dim: int,
+    state: int,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Chunked prefill: C tokens per lane with recurrent state and conv
+    tail carried across chunks (continuous-batching slot pool).
+
+    Trailing pad positions (``i >= n_valid[b]``) are neutralised by
+    zeroing their dt: decay ``exp(0·a) = 1`` and input ``dt·x = 0`` make
+    them exact no-ops on the recurrence, so the returned state is the
+    state at each lane's last *real* token — and a lane with
+    ``n_valid = 0`` passes its state/conv through untouched.  Returns
+    (y (B,C,D), final state, new conv tail)."""
+    B, C, d_model = x.shape
+    d_inner, H, conv_dim = ssm_dims(d_model, expand, head_dim, state)
+    z, xBC, dt = _split(p, x, d_inner, state, H)
+    W = p["conv_w"].shape[0]
+    # causal conv with the previous chunk's tail as left context (zeros at
+    # admission == _causal_conv's zero padding, so chunk 0 matches prefill)
+    window = jnp.concatenate([conv_state.astype(x.dtype), xBC], axis=1)
+    conv_out = sum(
+        window[:, i : i + C, :] * p["conv_w"][i][None, None].astype(x.dtype)
+        for i in range(W)
+    )
+    conv_out = jax.nn.silu(conv_out + p["conv_b"].astype(x.dtype))
+    # new tail = last W-1 entries of [old tail ; real tokens] per lane
+    tail_idx = n_valid[:, None] + jnp.arange(W - 1)[None, :]  # (B, W-1)
+    new_conv = jnp.take_along_axis(window, tail_idx[..., None], axis=1)
+    xs = conv_out[..., :d_inner].reshape(B, C, H, head_dim)
+    Bm = conv_out[..., d_inner : d_inner + state]
+    Cm = conv_out[..., d_inner + state :]
+    dtv = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B, C, H)
+    valid = jnp.arange(C)[None, :] < n_valid[:, None]
+    dtv = jnp.where(valid[..., None], dtv, 0.0)
+    a = -jnp.exp(p["a_log"])
+    y, hT = ssd_chunked(xs, dtv, a, Bm, Cm, chunk=C, h0=ssm_state)
+    y = y + xs * p["d_skip"][None, None, :, None].astype(xs.dtype)
+    y = y.reshape(B, C, d_inner)
+    y = rmsnorm(p["norm"], y * jax.nn.silu(z))
+    return y @ p["out_proj"].astype(x.dtype), hT, new_conv
+
+
 def ssm_decode(
     p: Params,
     x: jax.Array,  # (B, 1, D)

@@ -274,7 +274,8 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
     return cache
 
 
-def _apply_layer_decode(p, x, cfg: ModelConfig, kind: str, cache, pos, cross_src):
+def _apply_layer_decode(p, x, cfg: ModelConfig, kind: str, cache, pos, cross_src,
+                        active=None):
     base = _base_kind(kind)
     hd = cfg.resolved_head_dim
     h = rmsnorm(p["norm1"], x, cfg.norm_eps)
@@ -286,6 +287,7 @@ def _apply_layer_decode(p, x, cfg: ModelConfig, kind: str, cache, pos, cross_src
             n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads, head_dim=hd,
             rope_theta=cfg.rope_theta,
             window=cfg.window if base == "local" else None, ring=ring,
+            active=active,
         )
         new_cache = {"k": nk, "v": nv}
     elif base == "ssm":
@@ -293,9 +295,18 @@ def _apply_layer_decode(p, x, cfg: ModelConfig, kind: str, cache, pos, cross_src
             p["mixer"], h, cache["state"], cache["conv"],
             expand=cfg.ssm_expand, head_dim=cfg.ssm_head_dim, state=cfg.ssm_state,
         )
+        if active is not None:
+            # inactive/prefilling lanes must not integrate garbage: the
+            # recurrent state would drift unboundedly on long-idle lanes
+            # and clobber a mid-prefill lane's carried state.
+            hT = jnp.where(active[:, None, None, None], hT, cache["state"])
+            conv = jnp.where(active[:, None, None], conv, cache["conv"])
         new_cache = {"state": hT, "conv": conv}
     elif base == "rglru":
         out, hT, conv = rglru_mod.rglru_decode(p["mixer"], h, cache["state"], cache["conv"])
+        if active is not None:
+            hT = jnp.where(active[:, None], hT, cache["state"])
+            conv = jnp.where(active[:, None, None], conv, cache["conv"])
         new_cache = {"state": hT, "conv": conv}
     x = x + out
     if _has_cross(kind) and cross_src is not None:
@@ -324,6 +335,7 @@ def decode_step(
     pos: jax.Array,  # scalar int32, or (B,) int32 per-slot positions
     cfg: ModelConfig,
     cross_embeds: Optional[jax.Array] = None,
+    active: Optional[jax.Array] = None,
 ):
     """One decode step for the whole model. Returns (logits (B,V), cache).
 
@@ -331,7 +343,16 @@ def decode_step(
     bucketed serving path) or a (B,) vector of per-slot positions (the
     continuous-batching slot pool: each lane is an independent request;
     attention layers apply per-lane RoPE/causal masking, recurrent layers
-    are position-free so the vector passes through untouched)."""
+    are position-free so the vector passes through untouched).
+
+    ``active`` (per-slot pools only): (B,) bool marking the lanes that
+    are actually decoding.  Inactive lanes still flow through the whole
+    computation — that is what keeps this ONE compiled program — but
+    their persistent state (attention cache row, recurrent state/conv)
+    is held fixed instead of absorbing garbage: free lanes stay finite
+    under long idle, and lanes mid-way through a chunked prefill keep
+    the prompt state the interleaved decode step would otherwise
+    clobber."""
     dt = cfg.compute_dtype
     if tokens.ndim == 3:
         x = tokens.astype(dt)
@@ -344,7 +365,7 @@ def decode_step(
         new_cache = {}
         for i, kind in enumerate(cfg.layer_pattern):
             x, new_cache[f"p{i}"] = _apply_layer_decode(
-                blk[f"p{i}"], x, cfg, kind, blk_cache[f"p{i}"], pos, cross_src
+                blk[f"p{i}"], x, cfg, kind, blk_cache[f"p{i}"], pos, cross_src, active
             )
         return x, new_cache
 
@@ -363,7 +384,8 @@ def decode_step(
         new_tail = []
         for i in range(cfg.n_tail_layers):
             x, c = _apply_layer_decode(
-                params["tail"][i], x, cfg, cfg.layer_pattern[i], cache["tail"][i], pos, cross_src
+                params["tail"][i], x, cfg, cfg.layer_pattern[i], cache["tail"][i],
+                pos, cross_src, active
             )
             new_tail.append(c)
         new_cache["tail"] = new_tail
@@ -471,3 +493,121 @@ def _seed_layer_cache(layer_params, cfg: ModelConfig, kind, seed, layer_cache, S
             conv = jnp.pad(conv, ((0, 0), (pad, 0), (0, 0)))
         return {"state": seed["state"], "conv": conv.astype(cache_dtype)}
     return layer_cache
+
+
+# ---------------------------------------------------------------------------
+# Chunked prefill: prompts stream through the pooled decode cache
+# ---------------------------------------------------------------------------
+
+
+def _apply_layer_prefill_chunk(p, x, cfg: ModelConfig, kind: str, cache, start,
+                               n_valid, cross_src, cache_dtype):
+    base = _base_kind(kind)
+    hd = cfg.resolved_head_dim
+    h = rmsnorm(p["norm1"], x, cfg.norm_eps)
+    if base in ("attn", "local"):
+        out, nk, nv = attn_mod.prefill_chunk_attention(
+            p["mixer"], h, cache["k"], cache["v"], start, n_valid,
+            n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads, head_dim=hd,
+            rope_theta=cfg.rope_theta,
+            window=cfg.window if base == "local" else None,
+            ring=base == "local",
+            scores_dtype=jnp.dtype(cfg.attn_scores_dtype),
+        )
+        new_cache = {"k": nk, "v": nv}
+    elif base == "ssm":
+        out, hT, conv = ssm_mod.ssm_prefill_chunk(
+            p["mixer"], h, cache["state"], cache["conv"], n_valid,
+            expand=cfg.ssm_expand, head_dim=cfg.ssm_head_dim, state=cfg.ssm_state,
+        )
+        new_cache = {"state": hT, "conv": conv.astype(cache_dtype)}
+    elif base == "rglru":
+        out, hT, conv = rglru_mod.rglru_prefill_chunk(
+            p["mixer"], h, cache["state"], cache["conv"], n_valid
+        )
+        new_cache = {"state": hT, "conv": conv.astype(cache_dtype)}
+    else:
+        raise ValueError(kind)
+    x = x + out
+    if _has_cross(kind) and cross_src is not None:
+        hc = rmsnorm(p["norm_cross"], x, cfg.norm_eps)
+        x = x + attn_mod.cross_attention(
+            p["cross"], hc, cross_src, n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads, head_dim=hd
+        )
+    if cfg.d_ff > 0:
+        h2 = rmsnorm(p["norm2"], x, cfg.norm_eps)
+        if cfg.n_experts > 0:
+            y, _ = moe_mod.moe_apply(
+                p["moe"], h2, top_k=cfg.top_k, n_experts=cfg.n_experts,
+                capacity_factor=cfg.capacity_factor, mlp_kind=cfg.mlp_type,
+                n_shared=cfg.n_shared_experts,
+            )
+        else:
+            y = mlp_apply(p["mlp"], h2, cfg.mlp_type, cfg.act_bits)
+        x = x + y
+    return x, new_cache
+
+
+def prefill_chunk(
+    params: Params,
+    cache,
+    tokens: jax.Array,  # (B, C) int32 — one fixed-size chunk per lane
+    start: jax.Array,  # (B,) int32 — the chunk's first absolute position
+    n_valid: jax.Array,  # (B,) int32 — real tokens in this chunk (rest pad)
+    cfg: ModelConfig,
+    cache_dtype=jnp.bfloat16,
+    cross_embeds: Optional[jax.Array] = None,
+):
+    """One fixed-size prefill chunk over the whole slot pool.
+
+    The chunked-prefill counterpart of :func:`prefill`: instead of a
+    batch-1 full-prompt forward compiled per prompt length, each call
+    consumes up to C prompt tokens *per lane* and writes the results
+    straight into the pooled decode cache — attention K/V land in the
+    lane's rows [start, start+n_valid), recurrent layers advance their
+    carried state.  The compiled-program set is therefore O(#chunk
+    sizes), independent of the workload's prompt-length distribution.
+
+    Lanes that are not prefilling ride along as no-ops (``n_valid = 0``,
+    ``start = max_len``): their compute is garbage but their cache is
+    provably untouched — that is what lets the scheduler interleave
+    prefill chunks with pooled decode steps without forking programs.
+
+    Returns (last_logits (B, V), new_cache): ``last_logits[b]`` is the
+    logits at lane b's last real token of this chunk — the scheduler
+    samples the first generated token from it when the chunk completes
+    the lane's prompt (rows of lanes that didn't finish are garbage and
+    must be ignored)."""
+    dt = cfg.compute_dtype
+    x = embed_apply(params["embed"], tokens, dt) * jnp.asarray(cfg.d_model**0.5, dt)
+    cross_src = None if cross_embeds is None else cross_embeds.astype(dt)
+
+    new_blocks = []
+    for b in range(cfg.n_superblocks):
+        blk = jax.tree.map(lambda a: a[b], params["blocks"])
+        blk_cache = jax.tree.map(lambda a: a[b], cache["blocks"])
+        ncache = {}
+        for i, kind in enumerate(cfg.layer_pattern):
+            x, ncache[f"p{i}"] = _apply_layer_prefill_chunk(
+                blk[f"p{i}"], x, cfg, kind, blk_cache[f"p{i}"], start, n_valid,
+                cross_src, cache_dtype,
+            )
+        new_blocks.append(ncache)
+    new_cache = {"blocks": jax.tree.map(lambda *xs: jnp.stack(xs), *new_blocks)}
+    if cfg.n_tail_layers:
+        new_tail = []
+        for i in range(cfg.n_tail_layers):
+            x, c = _apply_layer_prefill_chunk(
+                params["tail"][i], x, cfg, cfg.layer_pattern[i], cache["tail"][i],
+                start, n_valid, cross_src, cache_dtype,
+            )
+            new_tail.append(c)
+        new_cache["tail"] = new_tail
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    # logits only at each lane's last real token (same row math as
+    # prefill's x[:, -1:], so greedy stays token-identical to the oracle)
+    last = jnp.clip(n_valid - 1, 0, tokens.shape[1] - 1)
+    x_last = jnp.take_along_axis(x, last[:, None, None], axis=1)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = logits_apply(head, x_last, cfg.logit_softcap)
+    return logits[:, 0], new_cache

@@ -1,3 +1,3 @@
 from .engine import Request, Result, ServeEngine, dequantize_packed_params  # noqa: F401
 from .scheduler import ContinuousScheduler, SchedulerPolicy  # noqa: F401
-from .slots import SlotPool, scatter_slot  # noqa: F401
+from .slots import SlotPool, reset_recurrent_slots, scatter_slot, scatter_slots  # noqa: F401

@@ -11,7 +11,10 @@ Two scheduling modes share one engine:
   drives ONE compiled decode program regardless of prompt lengths or
   arrival pattern — the per-slot positions this module's docstring once
   deferred to "production continuous batching" are now the
-  implementation.
+  implementation.  With ``chunked_prefill=True`` prompts additionally
+  stream through the pooled program in fixed-size chunks (fused
+  multi-admit, prefill interleaved with decode, compiled prefill set
+  bounded by the chunk-size table) — see the scheduler docstring.
 * **Length-bucketing** (default, the fallback mode): requests ->
   length-bucketed batches -> jitted prefill -> jitted decode loop with a
   single scalar position shared by the bucket.  One compiled program per
@@ -77,7 +80,8 @@ class Result:
 class ServeEngine:
     def __init__(self, params, cfg: ModelConfig, max_len: int = 4096, seed: int = 0,
                  mesh=None, continuous: bool = False, n_slots: int = 8,
-                 policy: Optional["SchedulerPolicy"] = None):
+                 policy: Optional["SchedulerPolicy"] = None,
+                 chunked_prefill: bool = False):
         self.cfg = cfg
         self.max_len = max_len
         self.key = jax.random.PRNGKey(seed)
@@ -109,7 +113,10 @@ class ServeEngine:
             from .scheduler import ContinuousScheduler, SchedulerPolicy
 
             if policy is None:
-                policy = SchedulerPolicy(n_slots=n_slots)
+                policy = SchedulerPolicy(n_slots=n_slots,
+                                         chunked_prefill=chunked_prefill)
+            elif chunked_prefill and not policy.chunked_prefill:
+                policy = dataclasses.replace(policy, chunked_prefill=True)
             self.scheduler = ContinuousScheduler(self, policy)
 
     # -- sharding ---------------------------------------------------------
@@ -120,10 +127,12 @@ class ServeEngine:
         decode loop then just propagates it."""
         fn = self._prefill_cache.get(batch)
         if fn is None:
+            cache_dtype = jnp.dtype(self.cfg.kv_cache_dtype)
             out_sh = None
             if self.mesh is not None:
                 cache_sds = jax.eval_shape(
-                    lambda: transformer.init_cache(self.cfg, batch, self.max_len)
+                    lambda: transformer.init_cache(self.cfg, batch, self.max_len,
+                                                   cache_dtype)
                 )
                 out_sh = (
                     None,
@@ -133,7 +142,8 @@ class ServeEngine:
                 )
             def _prefill(p, b):
                 with packed_shard_mesh(self._packed_mesh):
-                    return transformer.prefill(p, b, self.cfg, self.max_len)
+                    return transformer.prefill(p, b, self.cfg, self.max_len,
+                                               cache_dtype=cache_dtype)
 
             fn = jax.jit(_prefill, out_shardings=out_sh)
             self._prefill_cache[batch] = fn

@@ -1,23 +1,40 @@
 """Continuous-batching scheduler: admission queue + slot-pool decode loop.
 
-The scheduler turns the serve engine's request stream into a single
-jit-stable decode program.  One :class:`~repro.serve.slots.SlotPool`
+The scheduler turns the serve engine's request stream into a small,
+fixed set of jit-stable programs.  One :class:`~repro.serve.slots.SlotPool`
 holds ``n_slots`` persistent lanes; the loop is::
 
     while queue or active lanes:
-        admit:  FIFO — prefill each request (batch-1, jitted per prompt
-                length) and scatter its cache into a free lane
-        decode: ONE pooled decode step over all n_slots lanes, driven by
-                the per-slot position vector (inactive lanes compute too;
-                that is what keeps the program unique)
-        sample: per-lane greedy/temperature on the pooled logits
-        evict:  lanes that hit max_new stream a Result out and free up —
-                the next admission joins mid-flight
+        admit:   every placeable queued request claims a lane
+        prefill: (chunked mode) ONE prefill_chunk dispatch advances every
+                 prefilling lane by up to C prompt tokens
+        decode:  ONE pooled decode step over all n_slots lanes, driven by
+                 the per-slot position vector and the ``act`` phase mask
+        sample:  per-lane greedy/temperature on the pooled logits
+        evict:   lanes that hit max_new stream a Result out and free up —
+                 the next admission joins mid-flight
+
+Two prefill styles:
+
+* **Legacy (default)**: admission runs a batch-1 prefill jitted per
+  prompt length and scatters the fragment into the lane — simple, exact,
+  but the compiled set grows with the number of distinct prompt lengths
+  and every admission stalls the live decode lanes behind it.  Kept as
+  the reference oracle.
+* **Chunked** (``SchedulerPolicy(chunked_prefill=True)``): admission is a
+  fused multi-admit — every placeable request claims a lane in one
+  dispatch (one ``reset_recurrent_slots`` program; attention rows need
+  no reset) — and prompts then stream through
+  ``transformer.prefill_chunk`` in fixed-size chunks (pad-to-chunk, per
+  lane ``start``/``n_valid``), interleaved with pooled decode steps: a
+  per-lane phase keeps decoding lanes emitting tokens while prefilling
+  lanes advance through their prompts, so a long prompt never
+  head-of-line blocks live lanes.  The prefill compiled set is O(#chunk
+  sizes), independent of the workload's prompt-length mix.
 
 Because the decode step's shapes never depend on the arrival pattern
-(always ``tok (n_slots, 1)``, ``pos (n_slots,)``), exactly one decode
-program is compiled no matter how requests arrive; prefill compiles once
-per distinct prompt length (the "warmup" set).
+(always ``tok (n_slots, 1)``, ``pos (n_slots,)``, ``act (n_slots,)``),
+exactly one decode program is compiled no matter how requests arrive.
 
 Admission policy (:class:`SchedulerPolicy`): FIFO order, with optional
 max-wait batching — hold admissions until ``min_admit`` requests can be
@@ -28,36 +45,52 @@ engine.
 
 Time is measured in scheduler steps (one pooled decode = one step);
 arrival times for simulated workloads are expressed on that clock.
+``Result.prefill_ms`` reports TTFT: wall time from the admission burst
+that dequeued the request to its first sampled token (for legacy
+admission that includes the serialisation behind earlier batch-1
+prefills in the same burst — exactly the cost multi-admit removes).
 """
 from __future__ import annotations
 
 import dataclasses
 import time
 from collections import deque
-from typing import Callable, Deque, Dict, Iterator, List, Optional, Sequence
+from typing import Callable, Deque, Dict, Iterator, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..dist import sharding as dist_sharding
 from ..models import transformer
 from ..models.common import packed_shard_mesh
-from .slots import SlotPool, scatter_slot
+from .slots import SlotPool, reset_recurrent_slots, scatter_slot
 
 
 @dataclasses.dataclass
 class SchedulerPolicy:
-    """Admission knobs.  Defaults: admit greedily, one at a time (FIFO)."""
+    """Admission knobs.  Defaults: admit greedily, legacy batch-1 prefill."""
 
     n_slots: int = 8
     min_admit: int = 1  # batch admissions until this many can go together
     max_wait: int = 0  # ...but never hold the oldest more than this many steps
+    chunked_prefill: bool = False  # prompts stream through the pooled program
+    # Fixed chunk sizes (pad-to-chunk): each prefill dispatch picks the
+    # smallest size covering the longest remaining prompt (or the largest
+    # size).  The compiled prefill set is bounded by len(chunk_sizes).
+    chunk_sizes: Tuple[int, ...] = (128, 32, 1)
 
     def __post_init__(self):
         if self.min_admit > 1 and self.max_wait <= 0:
             raise ValueError(
                 "min_admit > 1 requires max_wait > 0 — with max_wait=0 the "
                 "hold window is empty and min_admit would be silently inert"
+            )
+        if self.chunked_prefill and (
+            not self.chunk_sizes or any(c < 1 for c in self.chunk_sizes)
+        ):
+            raise ValueError(
+                f"chunk_sizes={self.chunk_sizes!r}: need at least one size >= 1"
             )
 
 
@@ -80,28 +113,56 @@ class ContinuousScheduler:
         self.engine = engine
         self.policy = policy
         self.pool = SlotPool(
-            engine.cfg, policy.n_slots, engine.max_len, mesh=engine.mesh
+            engine.cfg, policy.n_slots, engine.max_len, mesh=engine.mesh,
+            cache_dtype=jnp.dtype(engine.cfg.kv_cache_dtype),
         )
         cfg = engine.cfg
-        # ONE pooled decode program: pos is a (n_slots,) vector, so the
-        # compiled shape is independent of which lanes are live.  With a
-        # mesh, the output cache sharding is constrained to the pool's
-        # shardings so the program's signature is a fixed point — no
-        # sharding drift, no second compile.
+        # ONE pooled decode program: pos/act are (n_slots,) vectors, so the
+        # compiled shape is independent of which lanes are live or what
+        # phase they are in.  With a mesh, the output cache sharding is
+        # constrained to the pool's shardings so the program's signature is
+        # a fixed point — no sharding drift, no second compile.
         out_sh = None
         if engine.mesh is not None:
             out_sh = (None, self.pool.shardings["cache"])
+        self._cache_out_sh = out_sh
 
-        def _decode_fn(p, cache, tok, pos):
+        def _decode_fn(p, cache, tok, pos, act):
             with packed_shard_mesh(engine._packed_mesh):
-                return transformer.decode_step(p, cache, tok, pos, cfg)
+                return transformer.decode_step(p, cache, tok, pos, cfg, active=act)
 
         self._decode = jax.jit(_decode_fn, out_shardings=out_sh)
-        self._prefill_cache: Dict[int, Callable] = {}
-        # bench/telemetry: occupancy per step, decode-step wall times
+        self._prefill_cache: Dict[int, Callable] = {}  # legacy: per prompt length
+        self._chunk_cache: Dict[int, Callable] = {}  # chunked: per chunk size
+        # Chunked multi-admit: ONE program for every burst size — the slot
+        # vector is fixed-size (n_slots,), padded with the out-of-bounds
+        # index n_slots whose writes drop.
+        # A per-scheduler closure, not jit(reset_recurrent_slots) directly:
+        # jitting the shared module function would pool the trace cache —
+        # and compiled_admit_programs() telemetry — across every engine in
+        # the process.
+        def _reset_fn(cache, slots):
+            return reset_recurrent_slots(cache, slots)
+
+        self._reset_slots = jax.jit(
+            _reset_fn,
+            out_shardings=self.pool.shardings["cache"] if engine.mesh is not None else None,
+        )
+        # Chunk staging buffers are layout-decided by the dist layer like
+        # every other tensor (replicated control vectors).
+        self._chunk_shardings = None
+        if engine.mesh is not None:
+            specs = dist_sharding.chunk_buffer_specs(
+                {"tok": 0, "start": 0, "nvalid": 0, "slots": 0}, engine.mesh
+            )
+            self._chunk_shardings = dist_sharding.tree_shardings(engine.mesh, specs)
+        # bench/telemetry: occupancy per step, decode-step wall times,
+        # admission burst sizes, chunk dispatch counts
         self.occupancy_trace: List[int] = []
         self.decode_ms_total = 0.0
         self.decode_steps = 0
+        self.admit_bursts: List[int] = []
+        self.prefill_chunks = 0
 
     # -- jitted programs ---------------------------------------------------
     def _prefill_fn(self, plen: int) -> Callable:
@@ -119,15 +180,43 @@ class ContinuousScheduler:
                     )
                 return logits, scatter_slot(pool_cache, part, slot)
 
-            out_sh = None
-            if engine.mesh is not None:
-                out_sh = (None, self.pool.shardings["cache"])
-            fn = jax.jit(prefill_into_slot, out_shardings=out_sh)
+            fn = jax.jit(prefill_into_slot, out_shardings=self._cache_out_sh)
             self._prefill_cache[plen] = fn
+        return fn
+
+    def _chunk_fn(self, chunk: int) -> Callable:
+        """Pooled prefill-chunk program, jitted per chunk size."""
+        fn = self._chunk_cache.get(chunk)
+        if fn is None:
+            engine = self.engine
+
+            def chunk_into_pool(params, pool_cache, toks, start, nvalid):
+                with packed_shard_mesh(engine._packed_mesh):
+                    return transformer.prefill_chunk(
+                        params, pool_cache, toks, start, nvalid, engine.cfg,
+                        cache_dtype=self.pool.cache_dtype,
+                    )
+
+            fn = jax.jit(chunk_into_pool, out_shardings=self._cache_out_sh)
+            self._chunk_cache[chunk] = fn
         return fn
 
     def compiled_decode_programs(self) -> int:
         return int(self._decode._cache_size())
+
+    def compiled_prefill_programs(self) -> int:
+        """Prefill-side compiled programs: legacy admission compiles one
+        per distinct prompt length (grows with the workload); chunked
+        prefill compiles one per chunk size actually used (bounded by
+        ``policy.chunk_sizes``, independent of the length mix)."""
+        if self.policy.chunked_prefill:
+            return sum(int(fn._cache_size()) for fn in self._chunk_cache.values())
+        return sum(int(fn._cache_size()) for fn in self._prefill_cache.values())
+
+    def compiled_admit_programs(self) -> int:
+        """Chunked multi-admit programs (fixed-size padded slot vector =>
+        stays 1 regardless of burst sizes)."""
+        return int(self._reset_slots._cache_size())
 
     # -- admission ---------------------------------------------------------
     def _admit(self, queue: Deque[_Pending], now: int):
@@ -138,29 +227,109 @@ class ContinuousScheduler:
         oldest_wait = now - (queue[0].enqueued_at if queue[0].enqueued_at is not None else now)
         if placeable < self.policy.min_admit and oldest_wait < self.policy.max_wait:
             return  # max-wait batching: hold for a fuller admission burst
-        for _ in range(placeable):
-            pend = queue.popleft()
+        # Take the free list ONCE: re-deriving free_slots()[0] per placement
+        # was O(n_slots^2) per burst and would mis-place if a multi-admit
+        # reordered frees mid-loop.
+        batch = [queue.popleft() for _ in range(placeable)]
+        slots = free[:placeable]
+        self.admit_bursts.append(placeable)
+        if self.policy.chunked_prefill:
+            self._admit_chunked(batch, slots, now)
+        else:
+            self._admit_legacy(batch, slots, now)
+
+    def _admit_legacy(self, batch: List[_Pending], slots: List[int], now: int):
+        wall = time.perf_counter()
+        for pend, slot in zip(batch, slots):
             req = pend.request
-            slot = self.pool.free_slots()[0]
             plen = len(req.tokens)
             toks = self.engine._place_batch(
                 jnp.asarray(np.asarray(req.tokens, np.int32)[None, :])
             )
-            t0 = time.perf_counter()
             logits, self.pool.cache = self._prefill_fn(plen)(
                 self.engine.params, self.pool.cache, toks, jnp.int32(slot)
             )
-            jax.block_until_ready(logits)
-            prefill_ms = (time.perf_counter() - t0) * 1e3
             first = self.engine._sample(
                 logits,
                 jnp.asarray([req.temperature], jnp.float32),
                 req.temperature > 0,
             )
+            first_host = int(np.asarray(first)[0])
+            ttft_ms = (time.perf_counter() - wall) * 1e3
             self.pool.occupy(
-                slot, req.uid, int(first[0]), plen, req.max_new,
-                req.temperature, prefill_ms, now,
+                slot, req.uid, first_host, plen, req.max_new,
+                req.temperature, ttft_ms, now,
             )
+
+    def _admit_chunked(self, batch: List[_Pending], slots: List[int], now: int):
+        """Fused multi-admit: every placeable request claims its lane in one
+        device dispatch; the prompts then stream through chunk steps."""
+        wall = time.perf_counter()
+        slots_vec = np.full((self.pool.n_slots,), self.pool.n_slots, np.int32)
+        slots_vec[: len(slots)] = slots
+        self.pool.cache = self._reset_slots(
+            self.pool.cache, self._place_ctrl("slots", slots_vec)
+        )
+        for pend, slot in zip(batch, slots):
+            req = pend.request
+            self.pool.admit(
+                slot, req.uid, req.tokens, req.max_new, req.temperature, now, wall
+            )
+
+    # -- chunked prefill ---------------------------------------------------
+    def _pick_chunk(self, max_remaining: int) -> int:
+        """Smallest configured chunk covering the longest remaining prompt,
+        else the largest chunk (multi-chunk prompts)."""
+        for c in sorted(self.policy.chunk_sizes):
+            if c >= max_remaining:
+                return c
+        return max(self.policy.chunk_sizes)
+
+    def _place_ctrl(self, name: str, arr: np.ndarray) -> jax.Array:
+        if self._chunk_shardings is None:
+            return jnp.asarray(arr)
+        return jax.device_put(jnp.asarray(arr), self._chunk_shardings[name])
+
+    def _prefill_step(self):
+        """One prefill_chunk dispatch: every prefilling lane consumes up to
+        C prompt tokens; lanes whose prompt completes sample their first
+        token and flip to the decode phase."""
+        pool = self.pool
+        lanes = pool.prefilling()
+        remaining = {
+            i: len(pool.slots[i].prompt) - pool.slots[i].filled for i in lanes
+        }
+        C = self._pick_chunk(max(remaining.values()))
+        toks = np.zeros((pool.n_slots, C), np.int32)
+        # Non-prefilling lanes point past the cache: every write drops and
+        # n_valid=0 makes their recurrence a no-op (see prefill_chunk).
+        start = np.full((pool.n_slots,), self.engine.max_len, np.int32)
+        nval = np.zeros((pool.n_slots,), np.int32)
+        for i in lanes:
+            s = pool.slots[i]
+            take = min(C, remaining[i])
+            toks[i, :take] = s.prompt[s.filled : s.filled + take]
+            start[i] = s.filled
+            nval[i] = take
+        last_logits, pool.cache = self._chunk_fn(C)(
+            self.engine.params, pool.cache,
+            self._place_ctrl("tok", toks),
+            self._place_ctrl("start", start),
+            self._place_ctrl("nvalid", nval),
+        )
+        done = [i for i in lanes if pool.slots[i].filled + int(nval[i])
+                == len(pool.slots[i].prompt)]
+        sampled_host = None
+        if done:
+            sampled = self.engine._sample(last_logits, pool.temps, pool.any_hot)
+            sampled_host = np.asarray(sampled)
+        self.prefill_chunks += 1
+        for i in lanes:
+            s = pool.slots[i]
+            s.filled += int(nval[i])
+            if s.filled == len(s.prompt):
+                ttft_ms = (time.perf_counter() - s.admit_wall) * 1e3
+                pool.start_decode(i, int(sampled_host[i]), ttft_ms)
 
     # -- main loop ---------------------------------------------------------
     def stream(
@@ -174,8 +343,6 @@ class ContinuousScheduler:
         becomes visible (default: all at step 0).  FIFO by arrival then
         submission order.
         """
-        from .engine import Result  # deferred: engine imports this module
-
         if arrival_steps is None:
             arrival_steps = [0] * len(requests)
         if len(arrival_steps) != len(requests):
@@ -184,6 +351,11 @@ class ContinuousScheduler:
                 f"{len(requests)} requests — zip would silently drop the excess"
             )
         for r in requests:
+            if len(r.tokens) < 1:
+                raise ValueError(
+                    f"request {r.uid}: empty prompt — there is no position to "
+                    "prefill and the lane would never leave the prefill phase"
+                )
             if r.max_new < 1:
                 raise ValueError(
                     f"request {r.uid}: max_new={r.max_new} — the slot pool "
@@ -216,25 +388,34 @@ class ContinuousScheduler:
                     pend.enqueued_at = now
                     queue.append(pend)
                 self._admit(queue, now)
-                # Evict lanes whose request finished at admission (max_new == 1).
+                # Evict lanes whose request finished at admission
+                # (legacy max_new == 1).
                 for ev in self._finished():
                     yield ev
-                if pool.n_active:
+                worked = False
+                if self.policy.chunked_prefill and pool.prefilling():
+                    self._prefill_step()
+                    worked = True
+                    # chunked max_new == 1: finished at first token
+                    for ev in self._finished():
+                        yield ev
+                if pool.n_decoding:
+                    worked = True
                     t0 = time.perf_counter()
                     logits, pool.cache = self._decode(
-                        self.engine.params, pool.cache, pool.tok, pool.pos
+                        self.engine.params, pool.cache, pool.tok, pool.pos, pool.act
                     )
                     sampled = self.engine._sample(logits, pool.temps, pool.any_hot)
                     sampled_host = np.asarray(sampled)  # one host sync per step (streaming)
                     self.decode_ms_total += (time.perf_counter() - t0) * 1e3
                     self.decode_steps += 1
-                    active = pool.active_mask  # lanes live during this decode step
+                    active = pool.decode_mask  # lanes live during this decode step
                     pool.tok = pool._pin("tok", sampled[:, None])
                     pool.advance(sampled_host, active)
                     self.occupancy_trace.append(int(active.sum()))
                     for ev in self._finished():
                         yield ev
-                elif incoming and not queue:
+                if not worked and incoming and not queue:
                     # idle gap before the next arrival: fast-forward the
                     # clock.  Only when the queue is empty — a HELD queue
                     # (max-wait batching) must age step by step so the
@@ -242,9 +423,11 @@ class ContinuousScheduler:
                     now = max(now, incoming[0].arrival - 1)
                 now += 1
         finally:
-            # An abandoned generator (client disconnect mid-stream) must not
-            # leave ghost lanes decoding into the next workload: free every
-            # live lane so the shared pool is clean for the next call.
+            # An abandoned generator (client disconnect mid-stream, possibly
+            # mid-PREFILL) must not leave ghost lanes: free every live lane —
+            # including half-prefilled ones, whose staged prompt state dies
+            # with the SlotState — so the shared pool is clean for the next
+            # call.
             for i, s in enumerate(pool.slots):
                 if s.uid is not None:
                     pool.evict(i)
@@ -255,7 +438,7 @@ class ContinuousScheduler:
         pool = self.pool
         per_tok = self.decode_ms_total / max(self.decode_steps, 1)
         for i, s in enumerate(pool.slots):
-            if s.uid is not None and s.remaining <= 0:
+            if s.uid is not None and s.phase == "decode" and s.remaining <= 0:
                 done = pool.evict(i)
                 yield Result(
                     uid=done.uid,

@@ -8,18 +8,31 @@ per-slot temperature vector that ride through the jitted decode step,
 and host-side bookkeeping (which request occupies each lane, tokens
 generated so far, tokens remaining).
 
-Requests are admitted by *scatter*: a batch-1 prefill produces a cache
-fragment with the same structure as the pool, and
-:func:`scatter_slot` writes it into lane ``slot`` with a traced index —
-so admission is jit-stable (one compiled prefill program per prompt
-length, regardless of which lane it lands in).  Eviction is free: a
-finished lane is simply marked inactive on the host; its stale cache
-rows are dead weight until the next admission overwrites the whole lane.
+Two admission styles share the pool:
+
+* **Legacy (batch-1 prefill)**: a per-prompt-length prefill produces a
+  cache fragment and :func:`scatter_slot` writes it into lane ``slot``
+  with a traced index (one compiled prefill program per prompt length).
+  :func:`scatter_slots` is the vectorised primitive — k fragments into
+  k lanes in one program, same padded-slot-vector convention as the
+  chunked path's :func:`reset_recurrent_slots`.
+* **Chunked prefill**: admission only claims the lane
+  (:meth:`SlotPool.admit` + :func:`reset_recurrent_slots` zeroing the
+  recurrent state — attention rows need no reset, the chunk masks
+  confine reads to rows the new request wrote) and the prompt then
+  streams through ``transformer.prefill_chunk`` in fixed-size chunks,
+  interleaved with pooled decode steps.  Each lane carries a host-side
+  ``phase`` ("prefill" -> "decode") mirrored by the device ``act``
+  vector the decode step masks with.
+
+Eviction is free: a finished lane is simply marked inactive on the host;
+its stale cache rows are dead weight until the next occupant overwrites
+(or masks) them.
 
 Inactive lanes keep computing inside the decode step (that is what makes
-the loop a single compiled program), but their positions are pinned to 0
-and their outputs never reach a result — the garbage they write to their
-own lane is erased by the next admission's full-lane scatter.
+the loop a single compiled program), but the ``act`` mask freezes their
+cache rows and recurrent state, so idle lanes stay finite and a lane
+mid-way through a chunked prefill keeps its carried prompt state.
 """
 from __future__ import annotations
 
@@ -64,6 +77,52 @@ def scatter_slot(pool_cache: PyTree, part_cache: PyTree, slot) -> PyTree:
     return jax.tree_util.tree_unflatten(treedef, out)
 
 
+def scatter_slots(pool_cache: PyTree, part_cache: PyTree, slots) -> PyTree:
+    """Vectorised :func:`scatter_slot`: write a batch-k cache fragment into
+    lanes ``slots`` in ONE program.
+
+    ``slots`` is a (k,) int32 vector (may be traced); fragment leaves
+    carry k on the slot axis.  Entries ``>= n_slots`` are padding and
+    their writes drop, so a fixed-size slot vector keeps one compiled
+    program covering every admission-burst size.
+    """
+    flat_pool, treedef = jax.tree_util.tree_flatten_with_path(pool_cache)
+    flat_part = treedef.flatten_up_to(part_cache)
+    out = []
+    for (path, pl), pt in zip(flat_pool, flat_part):
+        if _is_blocks_leaf(path):
+            out.append(pl.at[:, slots].set(pt.astype(pl.dtype), mode="drop"))
+        else:
+            out.append(pl.at[slots].set(pt.astype(pl.dtype), mode="drop"))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def reset_recurrent_slots(pool_cache: PyTree, slots) -> PyTree:
+    """Zero the recurrent leaves (``state``/``conv``) of lanes ``slots``.
+
+    Chunked admission: attention rows need no reset (the chunk/decode
+    masks confine every read to rows the new occupant has written), but
+    recurrent state integrates every token, so a reused lane must restart
+    from the zero state a fresh batch-1 prefill used to provide
+    implicitly.  ``slots`` follows the :func:`scatter_slots` convention —
+    fixed-size, out-of-bounds entries pad — so one compiled program
+    serves every admission-burst size.
+    """
+    flat, treedef = jax.tree_util.tree_flatten_with_path(pool_cache)
+    out = []
+    for path, pl in flat:
+        seg = path[-1]
+        name = str(getattr(seg, "key", getattr(seg, "idx", seg))).strip(".'\"")
+        if name in ("state", "conv"):
+            if _is_blocks_leaf(path):
+                out.append(pl.at[:, slots].set(0, mode="drop"))
+            else:
+                out.append(pl.at[slots].set(0, mode="drop"))
+        else:
+            out.append(pl)
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
 @dataclasses.dataclass
 class SlotState:
     """Host-side view of one lane."""
@@ -74,6 +133,11 @@ class SlotState:
     prefill_ms: float = 0.0
     admitted_at: int = 0  # scheduler step of admission
     temperature: float = 0.0  # host mirror of the device temps lane
+    # chunked-prefill bookkeeping
+    phase: str = "decode"  # "prefill" (consuming prompt chunks) | "decode"
+    prompt: Optional[np.ndarray] = None  # staged prompt (chunked admission)
+    filled: int = 0  # prompt tokens already written to the cache
+    admit_wall: float = 0.0  # perf_counter at admission (TTFT accounting)
 
 
 class SlotPool:
@@ -91,10 +155,12 @@ class SlotPool:
         self.pos = jnp.zeros((n_slots,), jnp.int32)
         self.temps = jnp.zeros((n_slots,), jnp.float32)
         self.tok = jnp.zeros((n_slots, 1), jnp.int32)  # last sampled token per lane
+        self.act = jnp.zeros((n_slots,), jnp.bool_)  # decode-phase lanes (device mask)
         self.shardings = None
         if mesh is not None:
             specs = dist_sharding.slot_pool_specs(
-                {"cache": self.cache, "pos": self.pos, "temps": self.temps, "tok": self.tok},
+                {"cache": self.cache, "pos": self.pos, "temps": self.temps,
+                 "tok": self.tok, "act": self.act},
                 mesh,
             )
             self.shardings = {
@@ -104,6 +170,7 @@ class SlotPool:
             self.pos = jax.device_put(self.pos, self.shardings["pos"])
             self.temps = jax.device_put(self.temps, self.shardings["temps"])
             self.tok = jax.device_put(self.tok, self.shardings["tok"])
+            self.act = jax.device_put(self.act, self.shardings["act"])
         # Host bookkeeping.
         self.slots = [SlotState() for _ in range(n_slots)]
 
@@ -128,6 +195,23 @@ class SlotPool:
         return int(self.active_mask.sum())
 
     @property
+    def decode_mask(self) -> np.ndarray:
+        """Lanes currently in the decode phase (host mirror of ``act``)."""
+        return np.asarray(
+            [s.uid is not None and s.phase == "decode" for s in self.slots]
+        )
+
+    @property
+    def n_decoding(self) -> int:
+        return int(self.decode_mask.sum())
+
+    def prefilling(self) -> List[int]:
+        return [
+            i for i, s in enumerate(self.slots)
+            if s.uid is not None and s.phase == "prefill"
+        ]
+
+    @property
     def any_hot(self) -> bool:
         """True if any live lane samples with temperature > 0 — host-side,
         so the decode loop never syncs the device temps vector."""
@@ -136,7 +220,7 @@ class SlotPool:
     def occupy(self, slot: int, uid: int, first_token: int, prompt_len: int,
                max_new: int, temperature: float, prefill_ms: float, now: int):
         """Mark lane ``slot`` as owned by request ``uid`` (device-side cache
-        scatter has already happened); seed pos/temps/tok vectors."""
+        scatter has already happened); seed pos/temps/tok/act vectors."""
         self.slots[slot] = SlotState(
             uid=uid, remaining=max_new - 1, tokens=[first_token],
             prefill_ms=prefill_ms, admitted_at=now, temperature=temperature,
@@ -144,14 +228,47 @@ class SlotPool:
         self.pos = self._pin("pos", self.pos.at[slot].set(prompt_len))
         self.temps = self._pin("temps", self.temps.at[slot].set(temperature))
         self.tok = self._pin("tok", self.tok.at[slot, 0].set(first_token))
+        self.act = self._pin("act", self.act.at[slot].set(True))
+
+    def admit(self, slot: int, uid: int, prompt: np.ndarray, max_new: int,
+              temperature: float, now: int, wall: float):
+        """Claim lane ``slot`` for chunked prefill: the prompt is staged
+        host-side and streams through ``prefill_chunk`` dispatches; the
+        lane joins the decode phase via :meth:`start_decode` once its
+        last chunk lands.  (The caller zeroes the lane's recurrent state
+        with :func:`reset_recurrent_slots`.)"""
+        self.slots[slot] = SlotState(
+            uid=uid, remaining=max_new, tokens=[], admitted_at=now,
+            temperature=temperature, phase="prefill",
+            prompt=np.asarray(prompt, np.int32), filled=0, admit_wall=wall,
+        )
+        self.pos = self._pin("pos", self.pos.at[slot].set(0))
+        self.temps = self._pin("temps", self.temps.at[slot].set(temperature))
+        # act stays False: the interleaved decode step must freeze this
+        # lane's cache until the prompt is fully written.
+
+    def start_decode(self, slot: int, first_token: int, ttft_ms: float):
+        """Flip lane ``slot`` from prefill to decode: the final chunk's
+        logits produced ``first_token``; decode writes continue at the
+        prompt's end."""
+        s = self.slots[slot]
+        s.phase = "decode"
+        s.remaining -= 1
+        s.tokens = [first_token]
+        s.prefill_ms = ttft_ms
+        plen = len(s.prompt)
+        self.pos = self._pin("pos", self.pos.at[slot].set(plen))
+        self.tok = self._pin("tok", self.tok.at[slot, 0].set(first_token))
+        self.act = self._pin("act", self.act.at[slot].set(True))
 
     def evict(self, slot: int) -> SlotState:
         """Free lane ``slot``; returns its final host state.  The device
-        cache is left stale — the next admission overwrites the lane."""
+        cache is left stale — the next occupant overwrites (or masks) it."""
         done = self.slots[slot]
         self.slots[slot] = SlotState()
         self.pos = self._pin("pos", self.pos.at[slot].set(0))
         self.temps = self._pin("temps", self.temps.at[slot].set(0.0))
+        self.act = self._pin("act", self.act.at[slot].set(False))
         return done
 
     def advance(self, sampled: np.ndarray, active: np.ndarray):
@@ -168,6 +285,8 @@ class SlotPool:
         self.slots = [SlotState() for _ in range(self.n_slots)]
         self.pos = jnp.zeros_like(self.pos)
         self.temps = jnp.zeros_like(self.temps)
+        self.act = jnp.zeros_like(self.act)
         if self.shardings is not None:
             self.pos = jax.device_put(self.pos, self.shardings["pos"])
             self.temps = jax.device_put(self.temps, self.shardings["temps"])
+            self.act = jax.device_put(self.act, self.shardings["act"])

@@ -95,6 +95,18 @@ def test_packed_decode_on_2x4_mesh_matches_single_device():
         for r in cont.generate(reqs(), arrival_steps=[0, 0, 1, 3, 5]):
             np.testing.assert_array_equal(ref[r.uid], r.tokens)
         assert cont.scheduler.compiled_decode_programs() == 1
+        # chunked prefill on the mesh over packed weights: multi-admit +
+        # interleaved prefill/decode must stay token-identical with a
+        # bounded prefill program set (tentpole acceptance)
+        from repro.serve import SchedulerPolicy
+        chk = ServeEngine(packed, cfg, max_len=32, mesh=mesh, continuous=True,
+                          policy=SchedulerPolicy(n_slots=4, chunked_prefill=True,
+                                                 chunk_sizes=(8, 1)))
+        for r in chk.generate(reqs(), arrival_steps=[0, 0, 1, 3, 5]):
+            np.testing.assert_array_equal(ref[r.uid], r.tokens)
+        assert chk.scheduler.compiled_decode_programs() == 1
+        assert chk.scheduler.compiled_prefill_programs() <= 2
+        assert chk.scheduler.compiled_admit_programs() == 1
         # shard-aware export: per-slice local packing assembles the same
         # bytes as the global exporter, already mesh-sharded
         w = jax.random.normal(jax.random.PRNGKey(2), (2, 64, 64), jnp.float32)
