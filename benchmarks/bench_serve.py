@@ -43,6 +43,15 @@ chunk-size table)::
     serve_prefill,<us_total>,mode=legacy;ttft_p50_ms=...;ttft_p95_ms=...;prefill_programs=...
     serve_prefill,<us_total>,mode=chunked;ttft_p50_ms=...;ttft_p95_ms=...;prefill_programs=...
 
+``--paged`` additionally serves the workload through the paged-KV
+scheduler — block pool sized to the workload's live tokens (sum of the
+``n_slots`` largest per-request block needs) instead of
+``n_slots * max_len`` rows — checks token identity against the bucketed
+reference, and emits a ``serve_paged_hbm`` row with the cache-memory
+shrink plus block-occupancy/fragmentation telemetry::
+
+    serve_paged_hbm,<us_total>,block_size=...;n_blocks=...;cache_bytes=...;unpaged_cache_bytes=...;shrink_x=...;block_occupancy=...;fragmentation=...;leaked_blocks=0
+
 ``--json PATH`` dumps every emitted row as structured JSON for harness
 consumption.
 """
@@ -111,18 +120,42 @@ def run_bucketed(params, cfg, reqs, max_len: int):
     return results, wall, toks, programs
 
 
+def cache_bytes(pool) -> int:
+    """Total bytes of the pool's decode-cache arrays (paged: the block
+    pool replaces the per-lane max_len reservation)."""
+    import jax
+
+    return sum(leaf.nbytes for leaf in jax.tree.leaves(pool.cache))
+
+
+def paged_pool_size(reqs, n_slots: int, block_size: int) -> int:
+    """Size the block pool to the workload: the sum of the n_slots
+    largest per-request lifetime block needs — enough commit capacity
+    for any concurrent resident set, far below slots * max_len."""
+    from repro.serve import BlockAllocator
+
+    rows = BlockAllocator(1, block_size).blocks_for_rows  # one source of truth
+    needs = sorted((rows(len(r.tokens) + r.max_new - 1) for r in reqs),
+                   reverse=True)
+    return sum(needs[:n_slots])
+
+
 def run_continuous(params, cfg, reqs, arrivals, max_len: int, n_slots: int, mesh=None,
-                   chunked: bool = False):
+                   chunked: bool = False, paged: bool = False, block_size: int = 8,
+                   n_blocks=None):
     from repro.serve import ServeEngine
 
     engine = ServeEngine(params, cfg, max_len=max_len, continuous=True, n_slots=n_slots,
-                         mesh=mesh, chunked_prefill=chunked)
+                         mesh=mesh, chunked_prefill=chunked, paged=paged,
+                         block_size=block_size, n_blocks=n_blocks)
     sched = engine.scheduler
     engine.generate(reqs(), arrival_steps=arrivals)  # warmup
     programs_after_warmup = (sched.compiled_decode_programs(),
                              sched.compiled_prefill_programs())
     sched.pool.reset()
     sched.occupancy_trace.clear()
+    sched.block_used_trace.clear()
+    sched.live_rows_trace.clear()
     sched.decode_ms_total, sched.decode_steps = 0.0, 0
     t0 = time.perf_counter()
     results = engine.generate(reqs(), arrival_steps=arrivals)
@@ -155,6 +188,13 @@ def main(argv=None):
                     help="also serve through the chunked-prefill scheduler "
                          "and emit serve_prefill rows (TTFT + compile counts) "
                          "for legacy vs chunked")
+    ap.add_argument("--paged", action="store_true",
+                    help="also serve through the paged-KV scheduler (block "
+                         "pool sized to the workload) and emit a "
+                         "serve_paged_hbm row: cache bytes vs unpaged + "
+                         "block occupancy / fragmentation")
+    ap.add_argument("--block-size", type=int, default=8,
+                    help="KV block rows for --paged")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="dump all emitted rows as JSON to PATH")
     ap.add_argument("--packed-bits", type=int, default=0,
@@ -243,6 +283,33 @@ def main(argv=None):
             assert ksched.compiled_decode_programs() == 1
             assert sched.compiled_prefill_programs() >= len(
                 {len(r.tokens) for r in reqs()})
+    if args.paged:
+        bs = args.block_size
+        n_blocks = paged_pool_size(reqs(), args.slots, bs)
+        p_results, p_wall, p_toks, psched = run_continuous(
+            params, cfg, reqs, arrivals, args.max_len, args.slots, mesh=mesh,
+            paged=True, block_size=bs, n_blocks=n_blocks,
+        )
+        # Paging must not change a single greedy token.
+        for r in p_results:
+            np.testing.assert_array_equal(ref[r.uid], r.tokens)
+        paged_bytes = cache_bytes(psched.pool)
+        unpaged_bytes = cache_bytes(sched.pool)
+        alloc = psched.pool.allocator
+        leaked = alloc.n_blocks - alloc.free_count
+        emit("serve_paged_hbm", p_wall * 1e6,
+             f"block_size={bs};n_blocks={n_blocks};"
+             f"cache_bytes={paged_bytes};unpaged_cache_bytes={unpaged_bytes};"
+             f"shrink_x={unpaged_bytes / max(paged_bytes, 1):.2f};"
+             f"block_occupancy={psched.mean_block_occupancy():.2f};"
+             f"fragmentation={psched.mean_fragmentation():.2f};"
+             f"leaked_blocks={leaked};toks_per_s={p_toks / p_wall:.1f}")
+        if args.smoke:
+            assert leaked == 0, f"{leaked} blocks leaked"
+            assert alloc.committed == 0, alloc.committed
+            assert psched.compiled_decode_programs() == 1
+            # cache memory must scale with live tokens, not slots*max_len
+            assert unpaged_bytes > 1.5 * paged_bytes, (unpaged_bytes, paged_bytes)
     if args.packed_bits:
         glob, per_dev = packed_hbm_stats(sched.engine)
         shrink = glob / max(per_dev, 1)

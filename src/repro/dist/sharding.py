@@ -21,6 +21,8 @@ embedding ``embed`` (V, d)                  ``P("model", "data")``
 stacked MoE experts (L, E, in, out)         experts -> ``"model"``
 norm scales / biases / BSQ scales / masks   replicated
 KV cache (B, S, KV, hd)                     ``P("data", None, "model", None)``
+paged KV block pool (Nb, bs, KV, hd)        block axis -> ``"data"`` (as slots)
+block tables / pool control vectors         replicated
 KV cache, KV-heads % model != 0             seq -> ``"model"`` instead
 KV cache, batch 1 (long context)            seq -> ``("data", "model")``
 any other dim not divisible by its axis     that dim replicated
@@ -325,6 +327,59 @@ def slot_pool_specs(pool_state: PyTree, mesh) -> PyTree:
     """
     return {
         k: cache_tree_specs(v, mesh) if k == "cache" else jax.tree.map(lambda _: replicated(), v)
+        for k, v in pool_state.items()
+    }
+
+
+def paged_block_spec(shape: Tuple[int, ...], mesh) -> P:
+    """Spec for one paged KV pool leaf ``(n_blocks, block_size, KV, hd)``.
+
+    The block axis takes the slot axis's role and spreads over the data
+    axes; KV heads go to model when divisible.  The intra-block row axis
+    is NEVER sharded: a block is the unit of table indirection — every
+    gather/scatter addresses whole blocks through traced ids, and
+    splitting a block's rows across devices would turn each of those
+    accesses into a cross-device reshuffle (XLA falls back to full
+    rematerialisation of the pool per step).
+    """
+    Nb, _bs, KV, _hd = shape
+    spec: list = [None] * 4
+    spec[0] = dp_axes(mesh, Nb)
+    if KV > 1 and _fits(mesh, "model", KV):
+        spec[2] = "model"
+    return P(*spec)
+
+
+def block_pool_specs(pool_state: PyTree, mesh, n_blocks: int, block_size: int) -> PyTree:
+    """Specs for a PAGED slot pool (serve/slots.py with ``paged=True``).
+
+    Cache leaves whose leading dims match the block pool shape take
+    :func:`paged_block_spec`; everything else in the cache (ring buffers,
+    recurrent state — still per-lane) keeps the ordinary cache rules.
+    The per-lane ``block_table`` replicates with the other control
+    vectors: it is tiny, every lane's gather consumes the whole row, and
+    allocator updates write single entries — sharding it would turn each
+    block grant into a collective.
+    """
+    def cache_specs(cache):
+        flat, treedef = jax.tree_util.tree_flatten_with_path(cache)
+        specs = []
+        for path, leaf in flat:
+            name = _path_name(path)
+            segs = name.split("/")
+            stacked = segs and segs[0] == "blocks"
+            shape = tuple(leaf.shape)[1:] if stacked else tuple(leaf.shape)
+            if (segs[-1].lower() in ("k", "v") and len(shape) == 4
+                    and shape[:2] == (n_blocks, block_size)):
+                s = paged_block_spec(shape, mesh)
+            else:
+                s = cache_spec(segs[-1], shape, mesh)
+            specs.append(P(None, *s) if stacked else s)
+        return jax.tree_util.tree_unflatten(treedef, specs)
+
+    return {
+        k: cache_specs(v) if k == "cache"
+        else jax.tree.map(lambda _: replicated(), v)
         for k, v in pool_state.items()
     }
 

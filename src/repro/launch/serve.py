@@ -24,6 +24,11 @@ Scheduling modes:
   compiled set is bounded by the chunk-size table instead of growing
   with the number of distinct prompt lengths, and a long prompt no
   longer stalls live decode lanes.
+* ``--paged`` (with ``--continuous``; implies chunked prefill): paged KV
+  — attention caches become a global pool of ``--blocks`` fixed-size
+  ``--block-size``-row blocks plus per-lane block tables, allocated
+  on-demand as prompts/decodes grow and freed at eviction, so cache HBM
+  scales with live tokens instead of ``--slots * --max-len``.
 
 With --data-parallel/--model-parallel the engine serves on a real
 ("data", "model") mesh: params, the KV cache and the slot pool are
@@ -69,6 +74,20 @@ def main():
                     help="stream prompts through the pooled program in "
                          "fixed-size chunks (continuous mode; bounded "
                          "compile set + fused multi-admit)")
+    ap.add_argument("--paged", action="store_true",
+                    help="paged KV: attention caches become a global pool of "
+                         "fixed-size blocks + per-lane block tables, so cache "
+                         "HBM scales with live tokens instead of "
+                         "slots * max-len (continuous mode; implies "
+                         "--chunked-prefill)")
+    ap.add_argument("--block-size", type=int, default=32,
+                    help="rows per KV block (with --paged); align with the "
+                         "chunk sizes so chunk boundaries land on block "
+                         "boundaries")
+    ap.add_argument("--blocks", type=int, default=0,
+                    help="total KV blocks in the pool (with --paged); 0 sizes "
+                         "it to the unpaged capacity slots * ceil(max-len / "
+                         "block-size)")
     ap.add_argument("--arrival-rate", type=float, default=0.0,
                     help="simulate Poisson arrivals at this mean rate per decode "
                          "step (continuous mode; 0 = all requests at step 0)")
@@ -81,6 +100,8 @@ def main():
     args = ap.parse_args()
     if args.chunked_prefill and not args.continuous:
         raise SystemExit("--chunked-prefill requires --continuous")
+    if args.paged and not args.continuous:
+        raise SystemExit("--paged requires --continuous")
 
     from ..configs import reduced_config
     from ..data import MarkovLM
@@ -113,7 +134,9 @@ def main():
               f"{packed_bytes / 1e6:.2f} MB global")
     engine = ServeEngine(params, cfg, max_len=args.max_len, mesh=mesh,
                          continuous=args.continuous, n_slots=args.slots,
-                         chunked_prefill=args.chunked_prefill)
+                         chunked_prefill=args.chunked_prefill, paged=args.paged,
+                         block_size=args.block_size,
+                         n_blocks=args.blocks or None)
     task = MarkovLM(vocab=cfg.vocab_size, seed=3)
     if args.mixed_lens:
         lens = [max(2, args.prompt_len * m // 2) for m in (1, 2, 3, 4)]
@@ -144,10 +167,16 @@ def main():
               f"decode_steps={sched.decode_steps} "
               f"decode_programs={sched.compiled_decode_programs()} "
               f"prefill_programs={sched.compiled_prefill_programs()}")
-        if args.chunked_prefill:
+        if args.chunked_prefill or args.paged:
             print(f"[chunked] chunk_dispatches={sched.prefill_chunks} "
                   f"admit_bursts={len(sched.admit_bursts)} "
                   f"admit_programs={sched.compiled_admit_programs()}")
+        if args.paged:
+            pool = sched.pool
+            print(f"[paged] block_size={pool.block_size} n_blocks={pool.n_blocks} "
+                  f"block_occupancy={sched.mean_block_occupancy():.2f} "
+                  f"fragmentation={sched.mean_fragmentation():.2f} "
+                  f"leaked_blocks={pool.n_blocks - pool.allocator.free_count}")
 
 
 if __name__ == "__main__":

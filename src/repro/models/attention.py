@@ -125,6 +125,7 @@ def decode_attention(
     rope_theta: float,
     window: Optional[int] = None,
     active: Optional[jax.Array] = None,
+    block_table: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """One-token decode.  x: (B, 1, D); cache_[kv]: (B, Smax, K, d);
     pos: scalar int32 current position, or a (B,) int32 vector of
@@ -134,15 +135,44 @@ def decode_attention(
     only): (B,) bool; inactive lanes keep their cache row untouched —
     required when prefilling lanes interleave with the pooled decode step
     (their row ``pos`` holds a real prompt key the decode's garbage write
-    would otherwise clobber).  Returns (out, new_k, new_v)."""
+    would otherwise clobber).
+
+    ``block_table`` switches the cache to PAGED layout: cache_[kv] is a
+    global pool of fixed-size blocks ``(n_blocks, block_size, K, d)``
+    shared by every lane, and ``block_table`` is (B, blocks_per_lane)
+    int32 mapping each lane's logical block index to its pool block.
+    Lane b's logical row ``r`` lives at ``[table[b, r // bs], r % bs]``;
+    the decode write scatters through the table (inactive lanes are
+    redirected to the out-of-bounds block ``n_blocks`` so their writes
+    drop — an inactive lane's table row may hold stale or unallocated
+    entries that now belong to another lane) and the attention read
+    gathers the lane's logical view back out of the pool.  Unallocated /
+    stale table entries are harmless on the read side: their rows sit
+    beyond the lane's position, so the causal mask zeroes them exactly.
+    Requires per-slot ``pos``.  Returns (out, new_k, new_v) with new_k /
+    new_v in the pool layout."""
     B = x.shape[0]
     G = n_heads // n_kv
     q, k, v = _qkv(p, x, n_heads, n_kv, head_dim)
     per_slot = jnp.ndim(pos) == 1
+    paged = block_table is not None
+    if paged and not per_slot:
+        raise ValueError("paged decode needs per-slot positions (a slot pool)")
     posb = pos[:, None] if per_slot else jnp.full((B, 1), pos)
     q = apply_rope(q, posb, rope_theta)
     k = apply_rope(k, posb, rope_theta)
-    if per_slot:
+    if paged:
+        nb, bs = cache_k.shape[0], cache_k.shape[1]
+        blk = block_table[jnp.arange(B), pos // bs]  # (B,) pool block ids
+        if active is not None:
+            blk = jnp.where(active, blk, nb)  # OOB => write drops
+        k_row, v_row = k[:, 0].astype(cache_k.dtype), v[:, 0].astype(cache_v.dtype)
+        cache_k = cache_k.at[blk, pos % bs].set(k_row, mode="drop")
+        cache_v = cache_v.at[blk, pos % bs].set(v_row, mode="drop")
+        # lane-logical view: (B, blocks_per_lane * bs, K, d)
+        keys = cache_k[block_table].reshape(B, -1, n_kv, head_dim)
+        vals = cache_v[block_table].reshape(B, -1, n_kv, head_dim)
+    elif per_slot:
         bidx = jnp.arange(B)
         k_row, v_row = k[:, 0].astype(cache_k.dtype), v[:, 0].astype(cache_v.dtype)
         if active is not None:
@@ -150,21 +180,23 @@ def decode_attention(
             v_row = jnp.where(active[:, None, None], v_row, cache_v[bidx, pos])
         cache_k = cache_k.at[bidx, pos].set(k_row)
         cache_v = cache_v.at[bidx, pos].set(v_row)
+        keys, vals = cache_k, cache_v
     else:
         cache_k = jax.lax.dynamic_update_slice_in_dim(
             cache_k, k.astype(cache_k.dtype), pos, axis=1)
         cache_v = jax.lax.dynamic_update_slice_in_dim(
             cache_v, v.astype(cache_v.dtype), pos, axis=1)
+        keys, vals = cache_k, cache_v
     q = q.reshape(B, 1, n_kv, G, head_dim) * (head_dim**-0.5)
-    s = _gqa_scores(q, cache_k.astype(x.dtype))  # (B, K, G, 1, Smax)
-    kpos = jnp.arange(cache_k.shape[1])
+    s = _gqa_scores(q, keys.astype(x.dtype))  # (B, K, G, 1, Smax)
+    kpos = jnp.arange(keys.shape[1])
     valid = kpos[None, :] <= posb  # (B, Smax) or (B-broadcast, Smax)
     if window is not None:
         valid &= (posb - kpos[None, :]) < window
-    valid = jnp.broadcast_to(valid, (B, cache_k.shape[1]))
+    valid = jnp.broadcast_to(valid, (B, keys.shape[1]))
     s = jnp.where(valid[:, None, None, None, :], s, NEG_INF)
     w = jax.nn.softmax(s, axis=-1)
-    out = _gqa_combine(w, cache_v.astype(x.dtype), x.dtype)
+    out = _gqa_combine(w, vals.astype(x.dtype), x.dtype)
     return dense_apply(out, p["wo"]), cache_k, cache_v
 
 
@@ -182,6 +214,7 @@ def decode_attention_cache(
     window: Optional[int] = None,
     ring: bool = False,
     active: Optional[jax.Array] = None,
+    block_table: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """One-token decode against either a full-length cache or a ring buffer.
 
@@ -195,12 +228,16 @@ def decode_attention_cache(
     ``pos`` may be a scalar or a (B,) per-slot vector (continuous
     batching) — with a vector, each lane writes its own ring slot and
     masks against its own absolute positions.
+
+    ``block_table`` (full-length caches only) selects the paged pool
+    layout — see :func:`decode_attention`.  Ring buffers are already
+    bounded at the window size, so they never page and ignore it.
     """
     if not ring:
         return decode_attention(
             p, x, cache_k, cache_v, pos, n_heads=n_heads, n_kv=n_kv,
             head_dim=head_dim, rope_theta=rope_theta, window=window,
-            active=active,
+            active=active, block_table=block_table,
         )
     B = x.shape[0]
     Wc = cache_k.shape[1]
@@ -254,6 +291,7 @@ def prefill_chunk_attention(
     window: Optional[int] = None,
     ring: bool = False,
     scores_dtype=jnp.float32,
+    block_table: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """Chunked prefill: C prompt-token queries per lane against the lane's
     own rows of the pooled cache.
@@ -275,7 +313,16 @@ def prefill_chunk_attention(
     scores run over [chunk K/V ; pre-chunk ring] instead, and the ring is
     then rebuilt by gather: slot ``s``'s new content is the *latest* valid
     chunk position congruent to it, or the old content if the chunk never
-    reached that slot.  Returns (out, new_k, new_v)."""
+    reached that slot.
+
+    ``block_table`` (full-length caches only) switches the cache to the
+    paged pool layout of :func:`decode_attention`: writes scatter each
+    real chunk token through the lane's block table (pad tokens and
+    positions past the lane's allocation are redirected out of bounds and
+    drop), and scores run over the lane-logical gather view of the pool.
+    The caller must have allocated blocks covering rows
+    [start, start + n_valid) before dispatch.  Returns (out, new_k,
+    new_v)."""
     B, C, _ = x.shape
     G = n_heads // n_kv
     q, k, v = _qkv(p, x, n_heads, n_kv, head_dim)
@@ -285,18 +332,33 @@ def prefill_chunk_attention(
     qs = q.reshape(B, C, n_kv, G, head_dim) * (head_dim**-0.5)
     neg = jnp.asarray(NEG_INF, scores_dtype)
     if not ring:
-        bidx = jnp.arange(B)[:, None]
-        cache_k = cache_k.at[bidx, qpos].set(k.astype(cache_k.dtype), mode="drop")
-        cache_v = cache_v.at[bidx, qpos].set(v.astype(cache_v.dtype), mode="drop")
-        s = _gqa_scores(qs, cache_k.astype(x.dtype), scores_dtype)  # (B,K,G,C,Smax)
-        kpos = jnp.arange(cache_k.shape[1])
+        if block_table is not None:
+            nb, bs = cache_k.shape[0], cache_k.shape[1]
+            nb_lane = block_table.shape[1]
+            bi = jnp.clip(qpos // bs, 0, nb_lane - 1)  # (B, C) logical blocks
+            blk = jnp.take_along_axis(block_table, bi, axis=1)
+            # only real tokens within the lane's table reach the pool;
+            # pads and the idle lanes' start=max_len sentinel rows drop
+            ok = (jnp.arange(C)[None, :] < n_valid[:, None]) & (qpos < nb_lane * bs)
+            blk = jnp.where(ok, blk, nb)
+            cache_k = cache_k.at[blk, qpos % bs].set(k.astype(cache_k.dtype), mode="drop")
+            cache_v = cache_v.at[blk, qpos % bs].set(v.astype(cache_v.dtype), mode="drop")
+            keys = cache_k[block_table].reshape(B, nb_lane * bs, n_kv, head_dim)
+            vals = cache_v[block_table].reshape(B, nb_lane * bs, n_kv, head_dim)
+        else:
+            bidx = jnp.arange(B)[:, None]
+            cache_k = cache_k.at[bidx, qpos].set(k.astype(cache_k.dtype), mode="drop")
+            cache_v = cache_v.at[bidx, qpos].set(v.astype(cache_v.dtype), mode="drop")
+            keys, vals = cache_k, cache_v
+        s = _gqa_scores(qs, keys.astype(x.dtype), scores_dtype)  # (B,K,G,C,Smax)
+        kpos = jnp.arange(keys.shape[1])
         valid = kpos[None, None, :] <= qpos[:, :, None]  # (B, C, Smax)
         if window is not None:
             valid &= (qpos[:, :, None] - kpos[None, None, :]) < window
         s = jnp.where(valid[:, None, None], s, neg)
         s = s - jax.lax.stop_gradient(jnp.max(s, axis=-1, keepdims=True))
         w = jax.nn.softmax(s.astype(scores_dtype), axis=-1)
-        out = _gqa_combine(w, cache_v.astype(x.dtype), x.dtype)
+        out = _gqa_combine(w, vals.astype(x.dtype), x.dtype)
         return dense_apply(out, p["wo"]), cache_k, cache_v
 
     Wc = cache_k.shape[1]

@@ -231,11 +231,19 @@ def loss_fn(params: Params, batch: Dict[str, jax.Array], cfg: ModelConfig):
 # ---------------------------------------------------------------------------
 
 
-def _init_layer_cache(cfg: ModelConfig, kind: str, batch: int, max_len: int, dtype):
+def _init_layer_cache(cfg: ModelConfig, kind: str, batch: int, max_len: int, dtype,
+                      paged_blocks: Optional[int] = None,
+                      block_size: Optional[int] = None):
     base = _base_kind(kind)
     hd = cfg.resolved_head_dim
     if base == "attn":
-        shape = (batch, max_len, cfg.n_kv_heads, hd)
+        if paged_blocks is not None:
+            # paged layout: a global pool of fixed-size blocks shared by
+            # every lane; the per-lane block table (owned by the slot
+            # pool) maps logical rows onto it
+            shape = (paged_blocks, block_size, cfg.n_kv_heads, hd)
+        else:
+            shape = (batch, max_len, cfg.n_kv_heads, hd)
         return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
     if base == "local":
         wc = min(cfg.window, max_len)
@@ -257,9 +265,17 @@ def _init_layer_cache(cfg: ModelConfig, kind: str, batch: int, max_len: int, dty
     raise ValueError(kind)
 
 
-def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16,
+               paged_blocks: Optional[int] = None,
+               block_size: Optional[int] = None):
+    """Decode cache for ``batch`` lanes.  With ``paged_blocks`` /
+    ``block_size``, full-length attention K/V leaves become a shared pool
+    of ``paged_blocks`` fixed-size blocks instead of per-lane ``max_len``
+    reservations (ring buffers and recurrent state keep their fixed
+    per-lane shapes — they are already bounded, so they bypass paging)."""
     per_block = {
-        f"p{i}": _init_layer_cache(cfg, k, batch, max_len, dtype)
+        f"p{i}": _init_layer_cache(cfg, k, batch, max_len, dtype, paged_blocks,
+                                   block_size)
         for i, k in enumerate(cfg.layer_pattern)
     }
     blocks = jax.tree.map(
@@ -268,14 +284,15 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
     cache = {"blocks": blocks}
     if cfg.n_tail_layers:
         cache["tail"] = [
-            _init_layer_cache(cfg, cfg.layer_pattern[i], batch, max_len, dtype)
+            _init_layer_cache(cfg, cfg.layer_pattern[i], batch, max_len, dtype,
+                              paged_blocks, block_size)
             for i in range(cfg.n_tail_layers)
         ]
     return cache
 
 
 def _apply_layer_decode(p, x, cfg: ModelConfig, kind: str, cache, pos, cross_src,
-                        active=None):
+                        active=None, block_table=None):
     base = _base_kind(kind)
     hd = cfg.resolved_head_dim
     h = rmsnorm(p["norm1"], x, cfg.norm_eps)
@@ -287,7 +304,7 @@ def _apply_layer_decode(p, x, cfg: ModelConfig, kind: str, cache, pos, cross_src
             n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads, head_dim=hd,
             rope_theta=cfg.rope_theta,
             window=cfg.window if base == "local" else None, ring=ring,
-            active=active,
+            active=active, block_table=block_table,
         )
         new_cache = {"k": nk, "v": nv}
     elif base == "ssm":
@@ -336,6 +353,7 @@ def decode_step(
     cfg: ModelConfig,
     cross_embeds: Optional[jax.Array] = None,
     active: Optional[jax.Array] = None,
+    block_table: Optional[jax.Array] = None,
 ):
     """One decode step for the whole model. Returns (logits (B,V), cache).
 
@@ -352,7 +370,14 @@ def decode_step(
     is held fixed instead of absorbing garbage: free lanes stay finite
     under long idle, and lanes mid-way through a chunked prefill keep
     the prompt state the interleaved decode step would otherwise
-    clobber."""
+    clobber.
+
+    ``block_table`` ((B, blocks_per_lane) int32, per-slot pools only)
+    selects the PAGED cache layout for full-length attention layers: the
+    cache's ``k``/``v`` leaves are a shared block pool and each lane's
+    reads/writes route through its table row (see
+    ``attention.decode_attention``).  Ring/ssm/rglru state is fixed-size
+    per lane and bypasses paging."""
     dt = cfg.compute_dtype
     if tokens.ndim == 3:
         x = tokens.astype(dt)
@@ -365,7 +390,8 @@ def decode_step(
         new_cache = {}
         for i, kind in enumerate(cfg.layer_pattern):
             x, new_cache[f"p{i}"] = _apply_layer_decode(
-                blk[f"p{i}"], x, cfg, kind, blk_cache[f"p{i}"], pos, cross_src, active
+                blk[f"p{i}"], x, cfg, kind, blk_cache[f"p{i}"], pos, cross_src,
+                active, block_table
             )
         return x, new_cache
 
@@ -385,7 +411,7 @@ def decode_step(
         for i in range(cfg.n_tail_layers):
             x, c = _apply_layer_decode(
                 params["tail"][i], x, cfg, cfg.layer_pattern[i], cache["tail"][i],
-                pos, cross_src, active
+                pos, cross_src, active, block_table
             )
             new_tail.append(c)
         new_cache["tail"] = new_tail
@@ -501,18 +527,20 @@ def _seed_layer_cache(layer_params, cfg: ModelConfig, kind, seed, layer_cache, S
 
 
 def _apply_layer_prefill_chunk(p, x, cfg: ModelConfig, kind: str, cache, start,
-                               n_valid, cross_src, cache_dtype):
+                               n_valid, cross_src, cache_dtype, block_table=None):
     base = _base_kind(kind)
     hd = cfg.resolved_head_dim
     h = rmsnorm(p["norm1"], x, cfg.norm_eps)
     if base in ("attn", "local"):
+        ring = base == "local"
         out, nk, nv = attn_mod.prefill_chunk_attention(
             p["mixer"], h, cache["k"], cache["v"], start, n_valid,
             n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads, head_dim=hd,
             rope_theta=cfg.rope_theta,
             window=cfg.window if base == "local" else None,
-            ring=base == "local",
+            ring=ring,
             scores_dtype=jnp.dtype(cfg.attn_scores_dtype),
+            block_table=None if ring else block_table,
         )
         new_cache = {"k": nk, "v": nv}
     elif base == "ssm":
@@ -557,6 +585,7 @@ def prefill_chunk(
     cfg: ModelConfig,
     cache_dtype=jnp.bfloat16,
     cross_embeds: Optional[jax.Array] = None,
+    block_table: Optional[jax.Array] = None,
 ):
     """One fixed-size prefill chunk over the whole slot pool.
 
@@ -572,6 +601,11 @@ def prefill_chunk(
     ``start = max_len``): their compute is garbage but their cache is
     provably untouched — that is what lets the scheduler interleave
     prefill chunks with pooled decode steps without forking programs.
+
+    ``block_table`` routes full-length attention K/V through the paged
+    block pool (see :func:`decode_step`); the scheduler must have
+    allocated each prefilling lane's blocks for rows
+    [start, start + n_valid) before dispatch.
 
     Returns (last_logits (B, V), new_cache): ``last_logits[b]`` is the
     logits at lane b's last real token of this chunk — the scheduler
@@ -590,7 +624,7 @@ def prefill_chunk(
         for i, kind in enumerate(cfg.layer_pattern):
             x, ncache[f"p{i}"] = _apply_layer_prefill_chunk(
                 blk[f"p{i}"], x, cfg, kind, blk_cache[f"p{i}"], start, n_valid,
-                cross_src, cache_dtype,
+                cross_src, cache_dtype, block_table,
             )
         new_blocks.append(ncache)
     new_cache = {"blocks": jax.tree.map(lambda *xs: jnp.stack(xs), *new_blocks)}
@@ -599,7 +633,7 @@ def prefill_chunk(
         for i in range(cfg.n_tail_layers):
             x, c = _apply_layer_prefill_chunk(
                 params["tail"][i], x, cfg, cfg.layer_pattern[i], cache["tail"][i],
-                start, n_valid, cross_src, cache_dtype,
+                start, n_valid, cross_src, cache_dtype, block_table,
             )
             new_tail.append(c)
         new_cache["tail"] = new_tail

@@ -1,3 +1,9 @@
 from .engine import Request, Result, ServeEngine, dequantize_packed_params  # noqa: F401
 from .scheduler import ContinuousScheduler, SchedulerPolicy  # noqa: F401
-from .slots import SlotPool, reset_recurrent_slots, scatter_slot, scatter_slots  # noqa: F401
+from .slots import (  # noqa: F401
+    BlockAllocator,
+    SlotPool,
+    reset_recurrent_slots,
+    scatter_slot,
+    scatter_slots,
+)

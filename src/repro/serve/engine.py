@@ -14,7 +14,11 @@ Two scheduling modes share one engine:
   implementation.  With ``chunked_prefill=True`` prompts additionally
   stream through the pooled program in fixed-size chunks (fused
   multi-admit, prefill interleaved with decode, compiled prefill set
-  bounded by the chunk-size table) — see the scheduler docstring.
+  bounded by the chunk-size table) — see the scheduler docstring.  With
+  ``paged=True`` (implies chunked prefill) the pool's attention caches
+  are a global block pool + per-lane block tables (``serve.slots``), so
+  cache HBM scales with live tokens instead of ``n_slots * max_len``;
+  ``block_size`` / ``n_blocks`` size the pool.
 * **Length-bucketing** (default, the fallback mode): requests ->
   length-bucketed batches -> jitted prefill -> jitted decode loop with a
   single scalar position shared by the bucket.  One compiled program per
@@ -81,7 +85,8 @@ class ServeEngine:
     def __init__(self, params, cfg: ModelConfig, max_len: int = 4096, seed: int = 0,
                  mesh=None, continuous: bool = False, n_slots: int = 8,
                  policy: Optional["SchedulerPolicy"] = None,
-                 chunked_prefill: bool = False):
+                 chunked_prefill: bool = False, paged: bool = False,
+                 block_size: int = 32, n_blocks: Optional[int] = None):
         self.cfg = cfg
         self.max_len = max_len
         self.key = jax.random.PRNGKey(seed)
@@ -109,14 +114,26 @@ class ServeEngine:
 
         self._decode = jax.jit(_decode_fn)
         self.scheduler = None
+        if paged and not continuous:
+            raise ValueError("paged=True requires continuous=True (the block "
+                             "pool lives in the slot-pool scheduler)")
         if continuous:
             from .scheduler import ContinuousScheduler, SchedulerPolicy
 
             if policy is None:
                 policy = SchedulerPolicy(n_slots=n_slots,
-                                         chunked_prefill=chunked_prefill)
-            elif chunked_prefill and not policy.chunked_prefill:
-                policy = dataclasses.replace(policy, chunked_prefill=True)
+                                         chunked_prefill=chunked_prefill or paged,
+                                         paged=paged, block_size=block_size,
+                                         n_blocks=n_blocks)
+            else:
+                if chunked_prefill and not policy.chunked_prefill:
+                    policy = dataclasses.replace(policy, chunked_prefill=True)
+                if paged and not policy.paged:
+                    # paged implies chunked prefill (policy validates)
+                    policy = dataclasses.replace(
+                        policy, paged=True, chunked_prefill=True,
+                        block_size=block_size, n_blocks=n_blocks,
+                    )
             self.scheduler = ContinuousScheduler(self, policy)
 
     # -- sharding ---------------------------------------------------------

@@ -36,6 +36,19 @@ Because the decode step's shapes never depend on the arrival pattern
 (always ``tok (n_slots, 1)``, ``pos (n_slots,)``, ``act (n_slots,)``),
 exactly one decode program is compiled no matter how requests arrive.
 
+**Paged KV** (``SchedulerPolicy(paged=True)``, requires chunked
+prefill): the pool's attention caches become a global block pool + per
+lane block tables (see ``serve.slots``).  The scheduler's extra duties
+are small and host-side: admission checks *block* capacity on top of
+free lanes (first-chunk demand against free blocks, worst-case lifetime
+demand against uncommitted capacity — the latter makes on-demand growth
+infallible, so a lane can never stall mid-decode), each prefill chunk
+and each decode step grant the blocks their writes are about to land in
+(``SlotPool.grow_rows``), and eviction returns blocks to the free list.
+The block table rides through both jitted programs as a replicated
+(n_slots, blocks_per_lane) operand — shapes are static, so the
+one-decode-program property is untouched.
+
 Admission policy (:class:`SchedulerPolicy`): FIFO order, with optional
 max-wait batching — hold admissions until ``min_admit`` requests can be
 placed together or the oldest has waited ``max_wait`` scheduler steps,
@@ -79,6 +92,15 @@ class SchedulerPolicy:
     # smallest size covering the longest remaining prompt (or the largest
     # size).  The compiled prefill set is bounded by len(chunk_sizes).
     chunk_sizes: Tuple[int, ...] = (128, 32, 1)
+    # Paged KV: the pool's attention caches become a global pool of
+    # fixed-size blocks + per-lane block tables (serve/slots.py) so cache
+    # HBM scales with live tokens, not n_slots * max_len.  block_size
+    # should divide (or be divided by) the chunk sizes so chunk
+    # boundaries land on block boundaries; n_blocks=None sizes the pool
+    # to the unpaged capacity (callers shrink it to actually save HBM).
+    paged: bool = False
+    block_size: int = 32
+    n_blocks: Optional[int] = None
 
     def __post_init__(self):
         if self.min_admit > 1 and self.max_wait <= 0:
@@ -92,6 +114,17 @@ class SchedulerPolicy:
             raise ValueError(
                 f"chunk_sizes={self.chunk_sizes!r}: need at least one size >= 1"
             )
+        if self.paged:
+            if not self.chunked_prefill:
+                raise ValueError(
+                    "paged=True requires chunked_prefill=True — legacy batch-1 "
+                    "admission scatters a contiguous lane row the block pool "
+                    "does not have"
+                )
+            if self.block_size < 1:
+                raise ValueError(f"block_size={self.block_size}: need >= 1")
+            if self.n_blocks is not None and self.n_blocks < 1:
+                raise ValueError(f"n_blocks={self.n_blocks}: need >= 1 (or None)")
 
 
 @dataclasses.dataclass
@@ -115,6 +148,8 @@ class ContinuousScheduler:
         self.pool = SlotPool(
             engine.cfg, policy.n_slots, engine.max_len, mesh=engine.mesh,
             cache_dtype=jnp.dtype(engine.cfg.kv_cache_dtype),
+            paged=policy.paged, block_size=policy.block_size,
+            n_blocks=policy.n_blocks,
         )
         cfg = engine.cfg
         # ONE pooled decode program: pos/act are (n_slots,) vectors, so the
@@ -127,9 +162,10 @@ class ContinuousScheduler:
             out_sh = (None, self.pool.shardings["cache"])
         self._cache_out_sh = out_sh
 
-        def _decode_fn(p, cache, tok, pos, act):
+        def _decode_fn(p, cache, tok, pos, act, table):
             with packed_shard_mesh(engine._packed_mesh):
-                return transformer.decode_step(p, cache, tok, pos, cfg, active=act)
+                return transformer.decode_step(p, cache, tok, pos, cfg, active=act,
+                                               block_table=table)
 
         self._decode = jax.jit(_decode_fn, out_shardings=out_sh)
         self._prefill_cache: Dict[int, Callable] = {}  # legacy: per prompt length
@@ -163,6 +199,11 @@ class ContinuousScheduler:
         self.decode_steps = 0
         self.admit_bursts: List[int] = []
         self.prefill_chunks = 0
+        # paged telemetry: per decode step, pool blocks in use and live
+        # cache rows (occupancy = used/n_blocks; fragmentation = wasted
+        # tail rows of partially-filled blocks)
+        self.block_used_trace: List[int] = []
+        self.live_rows_trace: List[int] = []
 
     # -- jitted programs ---------------------------------------------------
     def _prefill_fn(self, plen: int) -> Callable:
@@ -190,11 +231,11 @@ class ContinuousScheduler:
         if fn is None:
             engine = self.engine
 
-            def chunk_into_pool(params, pool_cache, toks, start, nvalid):
+            def chunk_into_pool(params, pool_cache, toks, start, nvalid, table):
                 with packed_shard_mesh(engine._packed_mesh):
                     return transformer.prefill_chunk(
                         params, pool_cache, toks, start, nvalid, engine.cfg,
-                        cache_dtype=self.pool.cache_dtype,
+                        cache_dtype=self.pool.cache_dtype, block_table=table,
                     )
 
             fn = jax.jit(chunk_into_pool, out_shardings=self._cache_out_sh)
@@ -219,11 +260,50 @@ class ContinuousScheduler:
         return int(self._reset_slots._cache_size())
 
     # -- admission ---------------------------------------------------------
+    def _first_chunk_blocks(self, plen: int) -> int:
+        """Blocks the lane's FIRST prefill chunk will demand."""
+        rows = min(plen, max(self.policy.chunk_sizes))
+        return self.pool.allocator.blocks_for_rows(rows)
+
+    def _lifetime_blocks(self, req) -> int:
+        """Worst-case blocks over the request's life: prompt rows plus
+        max_new - 1 decode writes (same row math as the max_len check)."""
+        return self.pool.allocator.blocks_for_rows(len(req.tokens) + req.max_new - 1)
+
+    def _paged_placeable(self, queue: Deque[_Pending], placeable: int) -> int:
+        """Paged capacity check: a free lane is no longer enough — each
+        admit must find (a) free blocks >= its first-chunk demand
+        (immediate progress) and (b) uncommitted pool capacity >= its
+        worst-case lifetime demand (so on-demand growth can never fail —
+        see slots.BlockAllocator).  While the commitment invariant holds,
+        (b) implies (a) (free >= n_blocks - committed and first <= life);
+        (a) is kept as the literal admission contract and as a guard
+        should the invariant ever drift.  FIFO is preserved: walk the
+        queue in order and STOP at the first request that does not fit;
+        it retries when an eviction frees blocks, and nothing jumps it."""
+        alloc = self.pool.allocator
+        budget_free = alloc.free_count
+        budget_commit = alloc.n_blocks - alloc.committed
+        n = 0
+        for pend in list(queue)[:placeable]:
+            first = self._first_chunk_blocks(len(pend.request.tokens))
+            life = self._lifetime_blocks(pend.request)
+            if first > budget_free or life > budget_commit:
+                break
+            budget_free -= first
+            budget_commit -= life
+            n += 1
+        return n
+
     def _admit(self, queue: Deque[_Pending], now: int):
         free = self.pool.free_slots()
         if not queue or not free:
             return
         placeable = min(len(queue), len(free))
+        if self.policy.paged:
+            placeable = self._paged_placeable(queue, placeable)
+            if placeable == 0:
+                return
         oldest_wait = now - (queue[0].enqueued_at if queue[0].enqueued_at is not None else now)
         if placeable < self.policy.min_admit and oldest_wait < self.policy.max_wait:
             return  # max-wait batching: hold for a fuller admission burst
@@ -305,6 +385,13 @@ class ContinuousScheduler:
         # n_valid=0 makes their recurrence a no-op (see prefill_chunk).
         start = np.full((pool.n_slots,), self.engine.max_len, np.int32)
         nval = np.zeros((pool.n_slots,), np.int32)
+        if self.policy.paged:
+            # alloc-on-demand: grant the blocks each lane's chunk rows
+            # [filled, filled + take) land in before dispatch (one
+            # batched table update for the whole chunk)
+            pool.grow_many({
+                i: pool.slots[i].filled + min(C, remaining[i]) for i in lanes
+            })
         for i in lanes:
             s = pool.slots[i]
             take = min(C, remaining[i])
@@ -316,6 +403,7 @@ class ContinuousScheduler:
             self._place_ctrl("tok", toks),
             self._place_ctrl("start", start),
             self._place_ctrl("nvalid", nval),
+            pool.block_table,
         )
         done = [i for i in lanes if pool.slots[i].filled + int(nval[i])
                 == len(pool.slots[i].prompt)]
@@ -373,6 +461,13 @@ class ContinuousScheduler:
                     f"{self.engine.max_len} — out-of-range cache writes would "
                     "be silently dropped and the output would be garbage"
                 )
+            if self.policy.paged and self._lifetime_blocks(r) > self.pool.n_blocks:
+                raise ValueError(
+                    f"request {r.uid}: needs {self._lifetime_blocks(r)} KV "
+                    f"blocks worst-case > pool n_blocks {self.pool.n_blocks} — "
+                    "it could never be admitted (raise n_blocks or shrink "
+                    "prompt/max_new)"
+                )
         incoming = sorted(
             (_Pending(r, int(t)) for r, t in zip(requests, arrival_steps)),
             key=lambda p: p.arrival,
@@ -401,9 +496,19 @@ class ContinuousScheduler:
                         yield ev
                 if pool.n_decoding:
                     worked = True
+                    if self.policy.paged:
+                        # decode growth: lanes crossing a block boundary
+                        # need their next block granted before the write
+                        # (one batched table update for the whole step)
+                        pool.grow_many({
+                            i: len(s.prompt) + len(s.tokens)
+                            for i, s in enumerate(pool.slots)
+                            if s.uid is not None and s.phase == "decode"
+                        })
                     t0 = time.perf_counter()
                     logits, pool.cache = self._decode(
-                        self.engine.params, pool.cache, pool.tok, pool.pos, pool.act
+                        self.engine.params, pool.cache, pool.tok, pool.pos, pool.act,
+                        pool.block_table,
                     )
                     sampled = self.engine._sample(logits, pool.temps, pool.any_hot)
                     sampled_host = np.asarray(sampled)  # one host sync per step (streaming)
@@ -413,6 +518,9 @@ class ContinuousScheduler:
                     pool.tok = pool._pin("tok", sampled[:, None])
                     pool.advance(sampled_host, active)
                     self.occupancy_trace.append(int(active.sum()))
+                    if self.policy.paged:
+                        self.block_used_trace.append(pool.allocator.used_count)
+                        self.live_rows_trace.append(pool.live_rows())
                     for ev in self._finished():
                         yield ev
                 if not worked and incoming and not queue:
@@ -460,3 +568,19 @@ class ContinuousScheduler:
         if not self.occupancy_trace:
             return 0.0
         return float(np.mean(self.occupancy_trace)) / self.pool.n_slots
+
+    def mean_block_occupancy(self) -> float:
+        """Mean fraction of pool blocks in use per decode step (paged)."""
+        if not self.block_used_trace:
+            return 0.0
+        return float(np.mean(self.block_used_trace)) / self.pool.n_blocks
+
+    def mean_fragmentation(self) -> float:
+        """Mean wasted fraction of allocated block rows (paged): the tail
+        rows of each lane's last, partially-filled block.  Bounded above
+        by ``block_size / (block_size + 1)``; small blocks waste less."""
+        bs = self.pool.block_size
+        fr = [1.0 - live / (used * bs)
+              for used, live in zip(self.block_used_trace, self.live_rows_trace)
+              if used]
+        return float(np.mean(fr)) if fr else 0.0

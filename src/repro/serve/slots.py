@@ -29,6 +29,19 @@ Eviction is free: a finished lane is simply marked inactive on the host;
 its stale cache rows are dead weight until the next occupant overwrites
 (or masks) them.
 
+**Paged KV** (``SlotPool(paged=True)``): instead of reserving ``max_len``
+cache rows per lane, full-length attention layers share a global pool of
+``n_blocks`` fixed-size blocks plus a per-lane block table
+(:class:`BlockAllocator` owns the free list).  Blocks are granted
+on-demand as prefill chunks land and decode grows past a block boundary
+(:meth:`SlotPool.grow_rows`) and returned at eviction, so cache HBM
+scales with the *live tokens* in flight, not ``n_slots * max_len``.
+Admission reserves each request's worst-case lifetime need up front
+(:meth:`BlockAllocator.reserve`), which is what makes on-demand growth
+infallible.  Ring buffers and recurrent state are already bounded per
+lane and bypass paging.  Paged pools require chunked prefill (the
+batch-1 scatter admission path writes a contiguous lane row).
+
 Inactive lanes keep computing inside the decode step (that is what makes
 the loop a single compiled program), but the ``act`` mask freezes their
 cache rows and recurrent state, so idle lanes stay finite and a lane
@@ -48,6 +61,85 @@ from ..dist import sharding as dist_sharding
 from ..models import transformer
 
 PyTree = Any
+
+
+def _ceil_div(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+class BlockAllocator:
+    """Host-side free-list allocator for the paged KV block pool.
+
+    Blocks are interchangeable (the per-lane block table provides the
+    indirection), so there is no external fragmentation by construction:
+    ``alloc(k)`` succeeds iff ``k <= free_count``, independent of the
+    alloc/free history.  Invariants enforced here and leaned on by the
+    conformance harness:
+
+    * a block is owned by at most one lane at a time (``alloc`` never
+      hands out a live block; ``free`` rejects double-frees),
+    * ``free_count + used_count == n_blocks`` at every step — a drained
+      pool returns to ``free_count == n_blocks`` (zero leaks).
+
+    ``reserve``/``release`` track *commitments*: the scheduler reserves a
+    request's worst-case lifetime block need at admission (and releases
+    it at eviction), which guarantees every admitted lane can always grow
+    to its last decode row — on-demand allocation can then never fail, so
+    paged serving cannot deadlock on an exhausted pool.
+    """
+
+    def __init__(self, n_blocks: int, block_size: int):
+        if n_blocks < 1 or block_size < 1:
+            raise ValueError(f"need n_blocks >= 1 and block_size >= 1, got "
+                             f"{n_blocks}, {block_size}")
+        self.n_blocks = n_blocks
+        self.block_size = block_size
+        self._free = list(range(n_blocks - 1, -1, -1))  # pop() grants low ids first
+        self._owner = {}  # live block id -> owner tag
+        self.committed = 0  # blocks promised to admitted lanes (worst case)
+
+    @property
+    def free_count(self) -> int:
+        return len(self._free)
+
+    @property
+    def used_count(self) -> int:
+        return self.n_blocks - len(self._free)
+
+    def blocks_for_rows(self, rows: int) -> int:
+        """Blocks needed to cover ``rows`` cache rows."""
+        return _ceil_div(max(rows, 0), self.block_size)
+
+    def alloc(self, k: int, owner=None) -> Optional[List[int]]:
+        """Grant ``k`` blocks to ``owner``; None if the pool cannot (the
+        only failure mode — interchangeable blocks never fragment)."""
+        if k < 0:
+            raise ValueError(f"alloc({k})")
+        if k > len(self._free):
+            return None
+        out = [self._free.pop() for _ in range(k)]
+        for b in out:
+            self._owner[b] = owner
+        return out
+
+    def free(self, blocks: List[int]) -> None:
+        for b in blocks:
+            if b not in self._owner:
+                raise ValueError(f"block {b} is not live (double free?)")
+            del self._owner[b]
+            self._free.append(b)
+
+    def reserve(self, k: int) -> bool:
+        """Commit ``k`` blocks of future capacity; False if over-committing."""
+        if self.committed + k > self.n_blocks:
+            return False
+        self.committed += k
+        return True
+
+    def release(self, k: int) -> None:
+        if k > self.committed:
+            raise ValueError(f"release({k}) > committed {self.committed}")
+        self.committed -= k
 
 
 def _is_blocks_leaf(path) -> bool:
@@ -138,31 +230,61 @@ class SlotState:
     prompt: Optional[np.ndarray] = None  # staged prompt (chunked admission)
     filled: int = 0  # prompt tokens already written to the cache
     admit_wall: float = 0.0  # perf_counter at admission (TTFT accounting)
+    # paged-KV bookkeeping
+    blocks: Optional[List[int]] = None  # pool blocks owned, logical order
+    committed: int = 0  # worst-case lifetime blocks reserved at admission
 
 
 class SlotPool:
     """Device state + host bookkeeping for ``n_slots`` decode lanes."""
 
     def __init__(self, cfg: ModelConfig, n_slots: int, max_len: int, mesh=None,
-                 cache_dtype=jnp.bfloat16):
+                 cache_dtype=jnp.bfloat16, paged: bool = False,
+                 block_size: int = 32, n_blocks: Optional[int] = None):
         self.cfg = cfg
         self.n_slots = n_slots
         self.max_len = max_len
         self.mesh = mesh
         self.cache_dtype = cache_dtype
+        self.paged = paged
+        self.block_size = block_size if paged else None
+        self.blocks_per_lane = _ceil_div(max_len, block_size) if paged else None
+        if paged:
+            # Default pool capacity matches the unpaged reservation (no
+            # admission throttling); callers shrink n_blocks to trade
+            # concurrency headroom for HBM.
+            self.n_blocks = (n_slots * self.blocks_per_lane
+                             if n_blocks is None else n_blocks)
+            self.allocator = BlockAllocator(self.n_blocks, block_size)
+        else:
+            self.n_blocks = None
+            self.allocator = None
         # Device state (enters the jitted decode step every iteration).
-        self.cache = transformer.init_cache(cfg, n_slots, max_len, cache_dtype)
+        self.cache = transformer.init_cache(
+            cfg, n_slots, max_len, cache_dtype,
+            paged_blocks=self.n_blocks if paged else None,
+            block_size=block_size if paged else None,
+        )
         self.pos = jnp.zeros((n_slots,), jnp.int32)
         self.temps = jnp.zeros((n_slots,), jnp.float32)
         self.tok = jnp.zeros((n_slots, 1), jnp.int32)  # last sampled token per lane
         self.act = jnp.zeros((n_slots,), jnp.bool_)  # decode-phase lanes (device mask)
+        # Per-lane block table (paged): unallocated entries stay 0 — reads
+        # through them land beyond every lane's position and mask out, and
+        # writes only go through entries grow_rows() has granted.
+        self.block_table = (
+            jnp.zeros((n_slots, self.blocks_per_lane), jnp.int32) if paged else None
+        )
         self.shardings = None
         if mesh is not None:
-            specs = dist_sharding.slot_pool_specs(
-                {"cache": self.cache, "pos": self.pos, "temps": self.temps,
-                 "tok": self.tok, "act": self.act},
-                mesh,
-            )
+            state = {"cache": self.cache, "pos": self.pos, "temps": self.temps,
+                     "tok": self.tok, "act": self.act}
+            if paged:
+                state["block_table"] = self.block_table
+                specs = dist_sharding.block_pool_specs(
+                    state, mesh, self.n_blocks, block_size)
+            else:
+                specs = dist_sharding.slot_pool_specs(state, mesh)
             self.shardings = {
                 k: dist_sharding.tree_shardings(mesh, v) for k, v in specs.items()
             }
@@ -171,6 +293,9 @@ class SlotPool:
             self.temps = jax.device_put(self.temps, self.shardings["temps"])
             self.tok = jax.device_put(self.tok, self.shardings["tok"])
             self.act = jax.device_put(self.act, self.shardings["act"])
+            if paged:
+                self.block_table = jax.device_put(
+                    self.block_table, self.shardings["block_table"])
         # Host bookkeeping.
         self.slots = [SlotState() for _ in range(n_slots)]
 
@@ -236,16 +361,81 @@ class SlotPool:
         host-side and streams through ``prefill_chunk`` dispatches; the
         lane joins the decode phase via :meth:`start_decode` once its
         last chunk lands.  (The caller zeroes the lane's recurrent state
-        with :func:`reset_recurrent_slots`.)"""
+        with :func:`reset_recurrent_slots`.)
+
+        Paged pools additionally reserve the request's worst-case
+        lifetime block need (prompt + max_new - 1 rows) with the
+        allocator — the scheduler's admission check guarantees the
+        reservation fits, and the reservation in turn guarantees every
+        later :meth:`grow_rows` call succeeds (no mid-decode deadlock)."""
         self.slots[slot] = SlotState(
             uid=uid, remaining=max_new, tokens=[], admitted_at=now,
             temperature=temperature, phase="prefill",
             prompt=np.asarray(prompt, np.int32), filled=0, admit_wall=wall,
+            blocks=[] if self.paged else None,
         )
+        if self.paged:
+            s = self.slots[slot]
+            s.committed = self.allocator.blocks_for_rows(len(s.prompt) + max_new - 1)
+            if not self.allocator.reserve(s.committed):
+                raise RuntimeError(
+                    f"admitted lane {slot} cannot reserve {s.committed} blocks "
+                    f"(committed {self.allocator.committed}/{self.n_blocks}) — "
+                    "the scheduler's paged admission check should have held it"
+                )
         self.pos = self._pin("pos", self.pos.at[slot].set(0))
         self.temps = self._pin("temps", self.temps.at[slot].set(temperature))
         # act stays False: the interleaved decode step must freeze this
         # lane's cache until the prompt is fully written.
+
+    def grow_rows(self, slot: int, rows: int) -> None:
+        """Ensure lane ``slot`` owns blocks covering cache rows [0, rows)
+        — alloc-on-demand during prefill chunks and decode growth."""
+        self.grow_many({slot: rows})
+
+    def grow_many(self, rows_by_slot) -> None:
+        """Batched :meth:`grow_rows`: grant every lane's demand and apply
+        ONE block-table device update (lanes admitted together decode in
+        lockstep and cross block boundaries on the same step — per-lane
+        updates would cost one host->device dispatch each on the decode
+        hot path).  The admission-time reservation makes failure
+        impossible for admitted lanes (see :meth:`admit`); a failure is
+        therefore a bug, not a load condition, and raises."""
+        rr, cc, vv = [], [], []
+        for slot, rows in rows_by_slot.items():
+            s = self.slots[slot]
+            need = self.allocator.blocks_for_rows(rows) - len(s.blocks)
+            if need <= 0:
+                continue
+            got = self.allocator.alloc(need, owner=slot)
+            if got is None:
+                raise RuntimeError(
+                    f"lane {slot} needs {need} blocks but only "
+                    f"{self.allocator.free_count} are free — the commitment "
+                    "invariant was violated (allocator bug or out-of-band alloc)"
+                )
+            base = len(s.blocks)
+            rr += [slot] * need
+            cc += list(range(base, base + need))
+            vv += got
+            s.blocks.extend(got)
+        if rr:
+            self.block_table = self._pin(
+                "block_table",
+                self.block_table.at[jnp.asarray(rr), jnp.asarray(cc)].set(
+                    jnp.asarray(vv, jnp.int32)),
+            )
+
+    def live_rows(self) -> int:
+        """Cache rows actually holding live K/V across lanes (telemetry:
+        the numerator of block occupancy / fragmentation)."""
+        total = 0
+        for s in self.slots:
+            if s.uid is None:
+                continue
+            total += (s.filled if s.phase == "prefill"
+                      else len(s.prompt) + len(s.tokens) - 1)
+        return total
 
     def start_decode(self, slot: int, first_token: int, ttft_ms: float):
         """Flip lane ``slot`` from prefill to decode: the final chunk's
@@ -263,8 +453,17 @@ class SlotPool:
 
     def evict(self, slot: int) -> SlotState:
         """Free lane ``slot``; returns its final host state.  The device
-        cache is left stale — the next occupant overwrites (or masks) it."""
+        cache is left stale — the next occupant overwrites (or masks) it.
+        Paged pools return the lane's blocks and its commitment to the
+        allocator; the lane's block-table row is left stale too (the next
+        occupant's grow_rows overwrites the entries it will use, and
+        reads through stale entries sit beyond the lane's position, so
+        the causal mask zeroes them)."""
         done = self.slots[slot]
+        if self.paged and done.uid is not None:
+            if done.blocks:
+                self.allocator.free(done.blocks)
+            self.allocator.release(done.committed)
         self.slots[slot] = SlotState()
         self.pos = self._pin("pos", self.pos.at[slot].set(0))
         self.temps = self._pin("temps", self.temps.at[slot].set(0.0))
@@ -286,7 +485,13 @@ class SlotPool:
         self.pos = jnp.zeros_like(self.pos)
         self.temps = jnp.zeros_like(self.temps)
         self.act = jnp.zeros_like(self.act)
+        if self.paged:
+            self.allocator = BlockAllocator(self.n_blocks, self.block_size)
+            self.block_table = jnp.zeros_like(self.block_table)
         if self.shardings is not None:
             self.pos = jax.device_put(self.pos, self.shardings["pos"])
             self.temps = jax.device_put(self.temps, self.shardings["temps"])
             self.act = jax.device_put(self.act, self.shardings["act"])
+            if self.paged:
+                self.block_table = jax.device_put(
+                    self.block_table, self.shardings["block_table"])

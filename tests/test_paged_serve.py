@@ -1,0 +1,299 @@
+"""Randomized serve-conformance harness for paged block-table KV.
+
+The contract of ``paged=True``: the slot pool's attention caches become
+a global pool of fixed-size blocks plus per-lane block tables, and the
+engine must stay *greedy-token-identical* to the bucketed batch-1 oracle
+across arbitrary admission/eviction/abandon interleavings while the
+:class:`~repro.serve.slots.BlockAllocator` ends every schedule with zero
+leaked blocks (free count back to ``n_blocks``, zero committed).
+
+The harness drives seeded random schedules — mixed prompt lengths,
+staggered arrivals, lane churn beyond ``n_slots``, periodic mid-stream
+abandons — through three engines sharing one request set: the bucketed
+oracle, the unpaged chunked-prefill scheduler, and the paged scheduler
+(deliberately run with a pool too small for every lane's worst case, so
+the block-capacity admission path is exercised, not just the happy
+path).  Engines are module-scoped: lane/block state must also survive
+schedule after schedule on the SAME pool, which is exactly how a serving
+process lives.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import reduced_config
+from repro.models import init_params
+from repro.serve import BlockAllocator, Request, SchedulerPolicy, ServeEngine
+from repro.serve.slots import SlotPool
+
+N_SEEDS = 25
+MAX_LEN = 48
+N_SLOTS = 3
+BLOCK_SIZE = 4
+# Tight pool: 3 lanes x worst-case 5 blocks = 15 > 12, so admission must
+# sometimes hold requests on block capacity (commitment check) even when
+# a lane is free — the randomized schedules cover both regimes.
+N_BLOCKS = 12
+
+
+@pytest.fixture(scope="module")
+def granite():
+    cfg = reduced_config("granite-3-2b")
+    return cfg, init_params(jax.random.PRNGKey(0), cfg)
+
+
+@pytest.fixture(scope="module")
+def oracle(granite):
+    cfg, params = granite
+    return ServeEngine(params, cfg, max_len=MAX_LEN)
+
+
+@pytest.fixture(scope="module")
+def unpaged(granite):
+    cfg, params = granite
+    return ServeEngine(params, cfg, max_len=MAX_LEN, continuous=True,
+                       policy=SchedulerPolicy(n_slots=N_SLOTS, chunked_prefill=True,
+                                              chunk_sizes=(8, 1)))
+
+
+@pytest.fixture(scope="module")
+def paged(granite):
+    cfg, params = granite
+    return ServeEngine(params, cfg, max_len=MAX_LEN, continuous=True,
+                       policy=SchedulerPolicy(n_slots=N_SLOTS, chunked_prefill=True,
+                                              chunk_sizes=(8, 1), paged=True,
+                                              block_size=BLOCK_SIZE,
+                                              n_blocks=N_BLOCKS))
+
+
+def _random_schedule(rng, cfg, n_req=6, max_plen=12, max_new_hi=6):
+    """Seeded random workload: mixed prompt lengths, staggered arrivals."""
+    reqs = [
+        Request(
+            uid=i,
+            tokens=rng.integers(0, cfg.vocab_size,
+                                size=int(rng.integers(1, max_plen + 1))).astype(np.int32),
+            max_new=int(rng.integers(1, max_new_hi + 1)),
+        )
+        for i in range(n_req)
+    ]
+    arrivals = np.cumsum(rng.integers(0, 3, size=n_req)).tolist()
+    return reqs, arrivals
+
+
+def _assert_zero_leaks(engine):
+    pool = engine.scheduler.pool
+    assert pool.allocator.free_count == pool.n_blocks, (
+        f"{pool.n_blocks - pool.allocator.free_count} blocks leaked")
+    assert pool.allocator.committed == 0
+    assert pool.n_active == 0
+
+
+@pytest.mark.parametrize("seed", range(N_SEEDS))
+def test_randomized_schedule_conformance(seed, granite, oracle, unpaged, paged):
+    """One seeded schedule, three engines: greedy tokens must agree
+    everywhere and the block pool must drain back to full."""
+    cfg, _ = granite
+    rng = np.random.default_rng(seed)
+    reqs, arrivals = _random_schedule(rng, cfg)
+    ref = {r.uid: r.tokens for r in oracle.generate(reqs)}
+
+    out_u = unpaged.generate(reqs, arrival_steps=arrivals)
+    assert len(out_u) == len(reqs)
+    for r in out_u:
+        np.testing.assert_array_equal(ref[r.uid], r.tokens)
+
+    out_p = paged.generate(reqs, arrival_steps=arrivals)
+    assert len(out_p) == len(reqs)
+    for r in out_p:
+        np.testing.assert_array_equal(ref[r.uid], r.tokens)
+    _assert_zero_leaks(paged)
+
+    if seed % 5 == 0:
+        # mid-stream abandon (client disconnect, lanes possibly
+        # mid-prefill): the pool must come back clean — the NEXT seed's
+        # run on this same engine is the proof it stayed serviceable
+        it = paged.stream(reqs, arrival_steps=arrivals)
+        for _ in range(len(reqs) // 2):
+            next(it)
+        it.close()
+        _assert_zero_leaks(paged)
+
+
+@pytest.mark.parametrize("arch", ["gemma3-12b", "recurrentgemma-9b", "mamba2-130m"])
+def test_paged_ring_and_recurrent_archs(arch):
+    """Ring-buffer (sliding-window) and recurrent (ssm/rglru) state is
+    fixed-size per lane and bypasses paging — but it must still ride the
+    same scheduler, survive lane churn, and wrap its ring past the
+    window while attention neighbours page."""
+    cfg = reduced_config(arch)
+    params = init_params(jax.random.PRNGKey(1), cfg)
+    local = "local" in [k.split("+")[0] for k in cfg.layer_pattern]
+    max_new = cfg.window + 4 if local else 8
+    rng = np.random.default_rng(7)
+    reqs = [
+        Request(uid=i, tokens=rng.integers(0, cfg.vocab_size,
+                                           size=int(rng.integers(2, 14))).astype(np.int32),
+                max_new=max_new)
+        for i in range(4)
+    ]
+    ref = {r.uid: r.tokens for r in
+           ServeEngine(params, cfg, max_len=64).generate(reqs)}
+    eng = ServeEngine(params, cfg, max_len=64, continuous=True,
+                      policy=SchedulerPolicy(n_slots=2, chunked_prefill=True,
+                                             chunk_sizes=(8, 1), paged=True,
+                                             block_size=8))
+    out = eng.generate(reqs, arrival_steps=[0, 1, 2, 3])
+    assert len(out) == len(reqs)
+    for r in out:
+        np.testing.assert_array_equal(ref[r.uid], r.tokens)
+    _assert_zero_leaks(eng)
+
+
+def test_admission_blocked_then_unblocked_fifo(granite):
+    """The satellite fix: a free LANE is no longer sufficient to admit —
+    block capacity gates too, and a blocked head-of-queue request must
+    hold the line (FIFO), not be jumped by a smaller one behind it.
+
+    bs=4, n_blocks=4: uid 0 and uid 1 each commit 3 blocks, uid 2 one.
+    uid 1 cannot be admitted alongside uid 0 (3 + 3 > 4) even though a
+    lane is free, and uid 2 must NOT be admitted in its place (1 would
+    fit).  Once uid 0 evicts, uids 1 and 2 admit together."""
+    cfg, params = granite
+    reqs = [
+        Request(uid=0, tokens=np.arange(4, dtype=np.int32), max_new=9),
+        Request(uid=1, tokens=(np.arange(4, dtype=np.int32) + 1), max_new=9),
+        Request(uid=2, tokens=np.arange(2, dtype=np.int32), max_new=3),
+    ]
+    ref = {r.uid: r.tokens for r in
+           ServeEngine(params, cfg, max_len=32).generate(reqs)}
+    eng = ServeEngine(params, cfg, max_len=32, continuous=True, n_slots=2,
+                      paged=True, block_size=4, n_blocks=4)
+    out = eng.generate(reqs)
+    assert len(out) == len(reqs)
+    for r in out:
+        np.testing.assert_array_equal(ref[r.uid], r.tokens)
+    assert eng.scheduler.admit_bursts == [1, 2], eng.scheduler.admit_bursts
+    _assert_zero_leaks(eng)
+
+
+def test_request_larger_than_pool_rejected(granite):
+    """A request whose worst-case block need exceeds the whole pool can
+    never be admitted — reject it up front instead of queueing forever."""
+    cfg, params = granite
+    eng = ServeEngine(params, cfg, max_len=32, continuous=True, n_slots=2,
+                      paged=True, block_size=4, n_blocks=2)
+    with pytest.raises(ValueError, match="KV blocks"):
+        eng.generate([Request(uid=0, tokens=np.arange(8, dtype=np.int32),
+                              max_new=8)])
+
+
+def test_paged_mode_validation(granite):
+    cfg, params = granite
+    with pytest.raises(ValueError, match="chunked_prefill"):
+        SchedulerPolicy(n_slots=2, paged=True)
+    with pytest.raises(ValueError, match="continuous"):
+        ServeEngine(params, cfg, max_len=32, paged=True)
+
+
+def test_paged_cache_bytes_scale_with_blocks(granite):
+    """The point of the tentpole: cache HBM is n_blocks * block_size
+    rows, not n_slots * max_len rows."""
+    cfg, _ = granite
+
+    def attn_bytes(pool):
+        return sum(
+            leaf.nbytes
+            for path, leaf in jax.tree_util.tree_flatten_with_path(pool.cache)[0]
+            if str(path[-1]).strip(".'\"") in ("k", "v")
+        )
+
+    dense = SlotPool(cfg, 4, 64, cache_dtype=np.float32)
+    small = SlotPool(cfg, 4, 64, cache_dtype=np.float32, paged=True,
+                     block_size=8, n_blocks=8)
+    # 4 slots * 64 rows = 256 reserved rows vs 8 blocks * 8 rows = 64
+    assert attn_bytes(dense) == 4 * attn_bytes(small)
+
+
+def test_paged_packed_decode_on_2x4_mesh_matches_single_device():
+    """Acceptance: paged decode over PACKED weights on a ("data",
+    "model") mesh is token-identical to the single-device bucketed
+    oracle, with the block pool actually sharded (block axis over data)
+    and zero leaked blocks.  Spawned with 8 host devices (XLA_FLAGS must
+    precede jax init)."""
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(repo, "src")
+    out = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent("""
+            import jax, numpy as np
+            from repro.configs import reduced_config
+            from repro.core.packing import pack_model_params
+            from repro.models import init_params
+            from repro.serve import Request, ServeEngine
+            cfg = reduced_config("granite-3-2b")
+            packed = pack_model_params(init_params(jax.random.PRNGKey(0), cfg), 6)
+            mesh = jax.make_mesh((2, 4), ("data", "model"))
+            def reqs():
+                return [Request(uid=i, tokens=(np.arange(4 + 2 * i, dtype=np.int32) + i)
+                                % cfg.vocab_size, max_new=5) for i in range(5)]
+            ref = {r.uid: r.tokens
+                   for r in ServeEngine(packed, cfg, max_len=32).generate(reqs())}
+            eng = ServeEngine(packed, cfg, max_len=32, mesh=mesh, continuous=True,
+                              n_slots=4, paged=True, block_size=4, n_blocks=14)
+            for r in eng.generate(reqs(), arrival_steps=[0, 0, 1, 3, 5]):
+                np.testing.assert_array_equal(ref[r.uid], r.tokens)
+            pool = eng.scheduler.pool
+            assert pool.allocator.free_count == pool.n_blocks
+            assert eng.scheduler.compiled_decode_programs() == 1
+            kv = jax.tree.leaves(pool.cache)[0]  # (superblocks, n_blocks, bs, KV, hd)
+            assert not kv.sharding.is_fully_replicated, kv.sharding
+            assert kv.sharding.spec[1] == "data", kv.sharding.spec
+            print("PAGED_MESH_OK")
+        """)],
+        capture_output=True, text=True, env=env, timeout=900,
+    )
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "PAGED_MESH_OK" in out.stdout
+
+
+def test_block_allocator_randomized_interleavings():
+    """Non-hypothesis twin of the property test (hypothesis is an
+    optional dep): seeded random alloc/free interleavings never
+    double-assign a block, and — blocks being interchangeable through
+    the table indirection — an allocation fails ONLY when the pool
+    genuinely lacks that many free blocks (no stranding by
+    fragmentation)."""
+    rng = np.random.default_rng(0)
+    for _ in range(50):
+        n_blocks = int(rng.integers(1, 32))
+        a = BlockAllocator(n_blocks, int(rng.integers(1, 16)))
+        live = []
+        for _ in range(40):
+            if rng.random() < 0.55:
+                k = int(rng.integers(0, n_blocks + 2))
+                got = a.alloc(k)
+                if k <= n_blocks - len(live):
+                    assert got is not None and len(got) == k
+                    assert len(set(got)) == k  # no dup within a grant
+                    assert not set(got) & set(live)  # never a live block
+                    assert all(0 <= b < n_blocks for b in got)
+                    live.extend(got)
+                else:
+                    assert got is None  # and ONLY then
+            elif live:
+                j = int(rng.integers(1, len(live) + 1))
+                out, live = live[:j], live[j:]
+                a.free(out)
+        assert a.free_count == n_blocks - len(live)
+        if live:
+            a.free([live[0]])
+            with pytest.raises(ValueError, match="double free"):
+                a.free([live[0]])
+            live.pop(0)

@@ -93,6 +93,48 @@ def test_int8_quantize_bound(w):
 
 @_settings
 @given(
+    n_blocks=st.integers(1, 24),
+    ops=st.lists(
+        st.tuples(st.booleans(), st.integers(0, 30)), min_size=1, max_size=50
+    ),
+)
+def test_block_allocator_alloc_free_interleavings(n_blocks, ops):
+    """Paged-KV allocator invariants under ARBITRARY alloc/free orders:
+    a grant never double-assigns a block (no overlap with live blocks,
+    no duplicates, ids in range), and — blocks being interchangeable
+    through the block-table indirection — fragmentation never strands a
+    satisfiable request: alloc(k) fails iff k > free_count, whatever the
+    interleaving history."""
+    from repro.serve.slots import BlockAllocator
+
+    a = BlockAllocator(n_blocks, 4)
+    live = []
+    for is_alloc, k in ops:
+        if is_alloc:
+            want = k % (n_blocks + 4)  # may exceed capacity on purpose
+            got = a.alloc(want)
+            if want <= n_blocks - len(live):
+                assert got is not None and len(got) == want
+                assert len(set(got)) == want
+                assert not set(got) & set(live)
+                assert all(0 <= b < n_blocks for b in got)
+                live.extend(got)
+            else:
+                assert got is None
+        elif live:
+            j = k % len(live) + 1
+            out, live = live[:j], live[j:]
+            a.free(out)
+    assert a.free_count == n_blocks - len(live)
+    assert a.used_count == len(live)
+    if live:
+        a.free([live[0]])
+        with pytest.raises(ValueError, match="double free"):
+            a.free([live[0]])
+
+
+@_settings
+@given(
     seed=st.integers(0, 2**16),
     n_bits=st.integers(2, 8),
     rows=st.integers(1, 6),
