@@ -50,7 +50,17 @@ scheduler — block pool sized to the workload's live tokens (sum of the
 reference, and emits a ``serve_paged_hbm`` row with the cache-memory
 shrink plus block-occupancy/fragmentation telemetry::
 
-    serve_paged_hbm,<us_total>,block_size=...;n_blocks=...;cache_bytes=...;unpaged_cache_bytes=...;shrink_x=...;block_occupancy=...;fragmentation=...;leaked_blocks=0
+    serve_paged_hbm,<us_total>,block_size=...;n_blocks=...;cache_bytes=...;unpaged_cache_bytes=...;shrink_x=...;block_occupancy=...;fragmentation=...;leaked_blocks=0;tpot_p50_ms=...;tpot_p95_ms=...;attn_read_bytes_per_step=...
+
+``--paged-kernel`` (with ``--paged``) additionally serves through the
+Pallas block-table-walking decode kernel, checks token identity against
+the same bucketed reference, and emits a ``serve_paged_kernel`` row:
+decode TPOT p50/p95 plus an attention-HBM-read estimate per decode step
+— the kernel reads only live blocks (the scheduler's block-read trace)
+where the gather path reads every lane's full pool view, so
+``read_shrink_x`` is the per-step KV-byte reduction the kernel buys::
+
+    serve_paged_kernel,<us_total>,block_size=...;table_shards=...;tpot_p50_ms=...;tpot_p95_ms=...;attn_read_bytes_per_step=...;gather_read_bytes_per_step=...;read_shrink_x=...
 
 ``--json PATH`` dumps every emitted row as structured JSON for harness
 consumption.
@@ -142,12 +152,13 @@ def paged_pool_size(reqs, n_slots: int, block_size: int) -> int:
 
 def run_continuous(params, cfg, reqs, arrivals, max_len: int, n_slots: int, mesh=None,
                    chunked: bool = False, paged: bool = False, block_size: int = 8,
-                   n_blocks=None):
+                   n_blocks=None, paged_kernel: bool = False):
     from repro.serve import ServeEngine
 
     engine = ServeEngine(params, cfg, max_len=max_len, continuous=True, n_slots=n_slots,
                          mesh=mesh, chunked_prefill=chunked, paged=paged,
-                         block_size=block_size, n_blocks=n_blocks)
+                         block_size=block_size, n_blocks=n_blocks,
+                         paged_kernel=paged_kernel)
     sched = engine.scheduler
     engine.generate(reqs(), arrival_steps=arrivals)  # warmup
     programs_after_warmup = (sched.compiled_decode_programs(),
@@ -156,6 +167,8 @@ def run_continuous(params, cfg, reqs, arrivals, max_len: int, n_slots: int, mesh
     sched.occupancy_trace.clear()
     sched.block_used_trace.clear()
     sched.live_rows_trace.clear()
+    sched.decode_ms_trace.clear()
+    sched.attn_read_blocks_trace.clear()
     sched.decode_ms_total, sched.decode_steps = 0.0, 0
     t0 = time.perf_counter()
     results = engine.generate(reqs(), arrival_steps=arrivals)
@@ -172,6 +185,32 @@ def ttft_stats(results):
     """(p50, p95) of per-request TTFT in ms (Result.prefill_ms)."""
     ttfts = np.asarray([r.prefill_ms for r in results])
     return float(np.percentile(ttfts, 50)), float(np.percentile(ttfts, 95))
+
+
+def tpot_stats(sched):
+    """(p50, p95) decode time-per-output-token in ms, from the
+    scheduler's per-step wall-clock trace."""
+    t = np.asarray(sched.decode_ms_trace)
+    return float(np.percentile(t, 50)), float(np.percentile(t, 95))
+
+
+def attn_read_bytes_per_step(cfg, sched, kernel: bool) -> int:
+    """Estimated attention KV HBM reads per decode step, summed over the
+    paged attention layers.  The gather path materialises every lane's
+    full table view (n_slots * blocks_per_lane blocks); the kernel walks
+    only live blocks (the scheduler's attn_read_blocks_trace)."""
+    pool = sched.pool
+    bs = pool.block_size
+    row_bytes = (cfg.n_kv_heads * cfg.resolved_head_dim
+                 * np.dtype(cfg.kv_cache_dtype).itemsize * 2)  # K row + V row
+    kinds = [k.split("+")[0] for k in cfg.layer_pattern]
+    layers = (kinds.count("attn") * cfg.n_superblocks
+              + kinds[: cfg.n_tail_layers].count("attn"))
+    if kernel:
+        blocks = float(np.mean(sched.attn_read_blocks_trace))
+    else:
+        blocks = pool.n_slots * pool.blocks_per_lane
+    return int(blocks * bs * row_bytes * layers)
 
 
 def main(argv=None):
@@ -195,6 +234,12 @@ def main(argv=None):
                          "block occupancy / fragmentation")
     ap.add_argument("--block-size", type=int, default=8,
                     help="KV block rows for --paged")
+    ap.add_argument("--paged-kernel", action="store_true",
+                    help="with --paged: also serve through the Pallas "
+                         "block-table-walking decode kernel, check token "
+                         "identity, and emit a serve_paged_kernel row with "
+                         "decode TPOT percentiles and the attention-HBM-read "
+                         "shrink vs the full-pool gather path")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="dump all emitted rows as JSON to PATH")
     ap.add_argument("--packed-bits", type=int, default=0,
@@ -209,6 +254,8 @@ def main(argv=None):
     args = ap.parse_args(argv)
     if args.smoke:
         args.requests, args.max_new, args.slots = 6, 4, 4
+    if args.paged_kernel and not args.paged:
+        raise SystemExit("--paged-kernel requires --paged")
     if bool(args.data_parallel) != bool(args.model_parallel):
         raise SystemExit("--data-parallel and --model-parallel must be given together")
     n_dev = args.data_parallel * args.model_parallel
@@ -286,6 +333,11 @@ def main(argv=None):
     if args.paged:
         bs = args.block_size
         n_blocks = paged_pool_size(reqs(), args.slots, bs)
+        if mesh is not None:
+            # round the pool up to the data-axis size so the block axis
+            # (and with it the block tables) can shard evenly
+            d_ax = dict(mesh.shape).get("data", 1)
+            n_blocks = -(-n_blocks // d_ax) * d_ax
         p_results, p_wall, p_toks, psched = run_continuous(
             params, cfg, reqs, arrivals, args.max_len, args.slots, mesh=mesh,
             paged=True, block_size=bs, n_blocks=n_blocks,
@@ -297,19 +349,55 @@ def main(argv=None):
         unpaged_bytes = cache_bytes(sched.pool)
         alloc = psched.pool.allocator
         leaked = alloc.n_blocks - alloc.free_count
+        p_tpot50, p_tpot95 = tpot_stats(psched)
+        gather_read = attn_read_bytes_per_step(cfg, psched, kernel=False)
         emit("serve_paged_hbm", p_wall * 1e6,
              f"block_size={bs};n_blocks={n_blocks};"
              f"cache_bytes={paged_bytes};unpaged_cache_bytes={unpaged_bytes};"
              f"shrink_x={unpaged_bytes / max(paged_bytes, 1):.2f};"
              f"block_occupancy={psched.mean_block_occupancy():.2f};"
              f"fragmentation={psched.mean_fragmentation():.2f};"
-             f"leaked_blocks={leaked};toks_per_s={p_toks / p_wall:.1f}")
+             f"leaked_blocks={leaked};toks_per_s={p_toks / p_wall:.1f};"
+             f"tpot_p50_ms={p_tpot50:.2f};tpot_p95_ms={p_tpot95:.2f};"
+             f"attn_read_bytes_per_step={gather_read}")
         if args.smoke:
             assert leaked == 0, f"{leaked} blocks leaked"
             assert alloc.committed == 0, alloc.committed
             assert psched.compiled_decode_programs() == 1
             # cache memory must scale with live tokens, not slots*max_len
             assert unpaged_bytes > 1.5 * paged_bytes, (unpaged_bytes, paged_bytes)
+        if args.paged_kernel:
+            pk_results, pk_wall, pk_toks, pksched = run_continuous(
+                params, cfg, reqs, arrivals, args.max_len, args.slots, mesh=mesh,
+                paged=True, block_size=bs, n_blocks=n_blocks, paged_kernel=True,
+            )
+            # The kernel must not change a single greedy token either.
+            for r in pk_results:
+                np.testing.assert_array_equal(ref[r.uid], r.tokens)
+            k_alloc = pksched.pool.allocator
+            k_leaked = k_alloc.n_blocks - k_alloc.free_count
+            k_tpot50, k_tpot95 = tpot_stats(pksched)
+            kernel_read = attn_read_bytes_per_step(cfg, pksched, kernel=True)
+            read_ratio = gather_read / max(kernel_read, 1)
+            emit("serve_paged_kernel", pk_wall * 1e6,
+                 f"block_size={bs};n_blocks={n_blocks};"
+                 f"table_shards={pksched.pool.table_shards};"
+                 f"leaked_blocks={k_leaked};toks_per_s={pk_toks / pk_wall:.1f};"
+                 f"tpot_p50_ms={k_tpot50:.2f};tpot_p95_ms={k_tpot95:.2f};"
+                 f"attn_read_bytes_per_step={kernel_read};"
+                 f"gather_read_bytes_per_step={gather_read};"
+                 f"read_shrink_x={read_ratio:.2f}")
+            if args.smoke:
+                assert k_leaked == 0, f"{k_leaked} blocks leaked"
+                assert pksched.compiled_decode_programs() == 1
+                # per-step attention HBM reads must scale with live
+                # tokens, not pool capacity
+                assert read_ratio >= 2.0, (kernel_read, gather_read)
+                if mesh is not None:
+                    # block tables co-shard with the pool over the data axis
+                    d_ax = dict(mesh.shape).get("data", 1)
+                    assert pksched.pool.table_shards == d_ax, (
+                        pksched.pool.table_shards, d_ax)
     if args.packed_bits:
         glob, per_dev = packed_hbm_stats(sched.engine)
         shrink = glob / max(per_dev, 1)

@@ -22,7 +22,10 @@ stacked MoE experts (L, E, in, out)         experts -> ``"model"``
 norm scales / biases / BSQ scales / masks   replicated
 KV cache (B, S, KV, hd)                     ``P("data", None, "model", None)``
 paged KV block pool (Nb, bs, KV, hd)        block axis -> ``"data"`` (as slots)
-block tables / pool control vectors         replicated
+block table (n_slots, blocks_per_lane)      lanes -> data axes when they
+                                            co-shard with pool blocks,
+                                            else replicated
+pool control vectors (pos, temps, ...)      replicated
 KV cache, KV-heads % model != 0             seq -> ``"model"`` instead
 KV cache, batch 1 (long context)            seq -> ``("data", "model")``
 any other dim not divisible by its axis     that dim replicated
@@ -350,16 +353,49 @@ def paged_block_spec(shape: Tuple[int, ...], mesh) -> P:
     return P(*spec)
 
 
+def block_table_spec(n_slots: int, n_blocks: int, mesh) -> P:
+    """Spec for the per-lane block table ``(n_slots, blocks_per_lane)``.
+
+    The lane axis shards over the data axes when — and only when — the
+    pool's block axis shards over the *same* axes: shard s's lanes must
+    own exactly shard s's blocks, so the shard-local decode path
+    (``models.attention._paged_attend_sharded`` +
+    ``BlockAllocator(n_shards=D)``) can translate global block ids with
+    a subtraction and never touch another shard's pool slice.  When
+    either count doesn't divide (or they land on different axis tuples)
+    the table replicates, and the pool gathers run under GSPMD as
+    before.  Entries within a lane's row never shard — a gather consumes
+    the whole row.
+    """
+    ax = dp_axes(mesh, n_slots)
+    if ax is None or dp_axes(mesh, n_blocks) != ax:
+        return replicated()
+    return P(ax, None)
+
+
+def table_shards(mesh, n_slots: int, n_blocks: int) -> int:
+    """How many shards :func:`block_table_spec` splits the lane axis into
+    (1 = replicated).  The serve-side allocator mirrors this as its
+    per-shard free-list count."""
+    if mesh is None:
+        return 1
+    spec = block_table_spec(n_slots, n_blocks, mesh)
+    if len(spec) == 0 or spec[0] is None:
+        return 1
+    return _axis_size(mesh, spec[0])
+
+
 def block_pool_specs(pool_state: PyTree, mesh, n_blocks: int, block_size: int) -> PyTree:
     """Specs for a PAGED slot pool (serve/slots.py with ``paged=True``).
 
     Cache leaves whose leading dims match the block pool shape take
     :func:`paged_block_spec`; everything else in the cache (ring buffers,
     recurrent state — still per-lane) keeps the ordinary cache rules.
-    The per-lane ``block_table`` replicates with the other control
-    vectors: it is tiny, every lane's gather consumes the whole row, and
-    allocator updates write single entries — sharding it would turn each
-    block grant into a collective.
+    The per-lane ``block_table`` shards over the data axes when lanes
+    and pool blocks co-shard (:func:`block_table_spec`) so the decode
+    step can run shard-local; the remaining control vectors (``pos``,
+    ``temps``, ...) stay replicated: they are tiny, participate in every
+    lane's masking, and admission scatters write single elements.
     """
     def cache_specs(cache):
         flat, treedef = jax.tree_util.tree_flatten_with_path(cache)
@@ -377,9 +413,15 @@ def block_pool_specs(pool_state: PyTree, mesh, n_blocks: int, block_size: int) -
             specs.append(P(None, *s) if stacked else s)
         return jax.tree_util.tree_unflatten(treedef, specs)
 
+    def other_specs(k, v):
+        if k == "block_table":
+            return jax.tree.map(
+                lambda leaf: block_table_spec(leaf.shape[0], n_blocks, mesh), v
+            )
+        return jax.tree.map(lambda _: replicated(), v)
+
     return {
-        k: cache_specs(v) if k == "cache"
-        else jax.tree.map(lambda _: replicated(), v)
+        k: cache_specs(v) if k == "cache" else other_specs(k, v)
         for k, v in pool_state.items()
     }
 

@@ -16,6 +16,7 @@ from . import ref
 from .bgl_norm import bgl_sumsq_pallas
 from .bitserial_matmul import bitserial_matmul_pallas
 from .flash_attention import flash_attention_pallas
+from .paged_attention import paged_attention_pallas
 
 
 def _on_tpu() -> bool:
@@ -175,4 +176,36 @@ def flash_attention(
     bk = 128 if S % 128 == 0 else S
     return flash_attention_pallas(
         q, k, v, causal=causal, window=window, block_q=bq, block_k=bk, interpret=interpret
+    )
+
+
+def paged_attention(
+    q: jax.Array,
+    k_pool: jax.Array,
+    v_pool: jax.Array,
+    block_table: jax.Array,
+    pos: jax.Array,
+    *,
+    window: int | None = None,
+    sm_scale: float | None = None,
+    use_pallas: bool | None = None,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Paged decode attention: q (B, KV, G, d) against the block pools.
+
+    The Pallas path walks each lane's block table in place so HBM reads
+    scale with live tokens; the ref path gathers the full logical view
+    (exactly what ``models.attention`` does on the gather backend) and
+    is the conformance oracle.  ``pos < 0`` lanes return exact zeros on
+    both paths.
+    """
+    use_pallas = _on_tpu() if use_pallas is None else use_pallas
+    if not use_pallas:
+        return ref.paged_attention_ref(
+            q, k_pool, v_pool, block_table, pos, window=window, sm_scale=sm_scale
+        )
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    return paged_attention_pallas(
+        q, k_pool, v_pool, block_table, pos,
+        window=window, sm_scale=sm_scale, interpret=interpret,
     )

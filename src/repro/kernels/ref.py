@@ -47,3 +47,37 @@ def flash_attention_ref(q, k, v, *, causal=True, window=None, sm_scale=None):
     s = jnp.where(mask[None], s, -1e30)
     p = jax.nn.softmax(s, axis=-1)
     return jnp.einsum("bqk,bkd->bqd", p.astype(v.dtype), v)
+
+
+def paged_attention_ref(q, k_pool, v_pool, block_table, pos, *, window=None,
+                        sm_scale=None):
+    """Naive f32 softmax decode attention over the block-table gather.
+
+    ``q``: (B, KV, G, d) single-query heads (kv-major GQA layout);
+    ``k_pool``/``v_pool``: the global paged pools (n_blocks, block_size,
+    KV, d); ``block_table``: (B, blocks_per_lane) int32; ``pos``: (B,)
+    int32 per-lane positions.  Lane b attends its lane-logical rows
+    ``[0, pos[b]]`` (optionally windowed) gathered out of the pool —
+    stale/unallocated table entries are masked by the causal bound
+    exactly as in ``models.attention.decode_attention``.  ``pos[b] < 0``
+    marks an inactive lane and yields exact zeros (the contract the
+    Pallas kernel's empty accumulator meets for free).
+    """
+    B, KV, G, d = q.shape
+    bs = k_pool.shape[1]
+    L = block_table.shape[1] * bs
+    if sm_scale is None:
+        sm_scale = d**-0.5
+    keys = k_pool[block_table].reshape(B, L, KV, d)
+    vals = v_pool[block_table].reshape(B, L, KV, d)
+    s = jnp.einsum("bkgd,bskd->bkgs", q.astype(jnp.float32),
+                   keys.astype(jnp.float32)) * sm_scale
+    kpos = jnp.arange(L)
+    valid = kpos[None, :] <= pos[:, None]
+    if window is not None:
+        valid &= (pos[:, None] - kpos[None, :]) < window
+    s = jnp.where(valid[:, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", p, vals.astype(jnp.float32))
+    out = jnp.where((pos >= 0)[:, None, None, None], out, 0.0)
+    return out.astype(q.dtype)

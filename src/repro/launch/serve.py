@@ -29,6 +29,11 @@ Scheduling modes:
   ``--block-size``-row blocks plus per-lane block tables, allocated
   on-demand as prompts/decodes grow and freed at eviction, so cache HBM
   scales with live tokens instead of ``--slots * --max-len``.
+* ``--paged-kernel`` (with ``--paged``): decode attention runs the
+  Pallas block-table-walking kernel (kernels/paged_attention.py) so
+  per-step attention HBM reads scale with live tokens instead of the
+  pool's logical capacity; without it the decode step gathers each
+  lane's full pool view (the conformance reference path).
 
 With --data-parallel/--model-parallel the engine serves on a real
 ("data", "model") mesh: params, the KV cache and the slot pool are
@@ -88,6 +93,12 @@ def main():
                     help="total KV blocks in the pool (with --paged); 0 sizes "
                          "it to the unpaged capacity slots * ceil(max-len / "
                          "block-size)")
+    ap.add_argument("--paged-kernel", action="store_true",
+                    help="decode attention walks the block table in place via "
+                         "the Pallas paged-attention kernel instead of "
+                         "gathering each lane's full pool view — per-step "
+                         "attention HBM reads scale with live tokens (with "
+                         "--paged)")
     ap.add_argument("--arrival-rate", type=float, default=0.0,
                     help="simulate Poisson arrivals at this mean rate per decode "
                          "step (continuous mode; 0 = all requests at step 0)")
@@ -102,6 +113,8 @@ def main():
         raise SystemExit("--chunked-prefill requires --continuous")
     if args.paged and not args.continuous:
         raise SystemExit("--paged requires --continuous")
+    if args.paged_kernel and not args.paged:
+        raise SystemExit("--paged-kernel requires --paged")
 
     from ..configs import reduced_config
     from ..data import MarkovLM
@@ -136,7 +149,8 @@ def main():
                          continuous=args.continuous, n_slots=args.slots,
                          chunked_prefill=args.chunked_prefill, paged=args.paged,
                          block_size=args.block_size,
-                         n_blocks=args.blocks or None)
+                         n_blocks=args.blocks or None,
+                         paged_kernel=args.paged_kernel)
     task = MarkovLM(vocab=cfg.vocab_size, seed=3)
     if args.mixed_lens:
         lens = [max(2, args.prompt_len * m // 2) for m in (1, 2, 3, 4)]
@@ -174,6 +188,7 @@ def main():
         if args.paged:
             pool = sched.pool
             print(f"[paged] block_size={pool.block_size} n_blocks={pool.n_blocks} "
+                  f"kernel={args.paged_kernel} table_shards={pool.table_shards} "
                   f"block_occupancy={sched.mean_block_occupancy():.2f} "
                   f"fragmentation={sched.mean_fragmentation():.2f} "
                   f"leaked_blocks={pool.n_blocks - pool.allocator.free_count}")

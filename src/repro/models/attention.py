@@ -11,7 +11,7 @@ from typing import Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from .common import apply_rope, dense_apply, dense_init
+from .common import apply_rope, dense_apply, dense_init, paged_mesh
 
 Params = Dict[str, jax.Array]
 
@@ -112,6 +112,135 @@ def attention(
     return dense_apply(out, p["wo"]), (k, v)
 
 
+def _pool_gather(cache_k, cache_v, block_table, n_kv: int, head_dim: int):
+    """Lane-logical (B, nb_lane*bs, K, d) views of both pools.
+
+    The flattened table index is built once and shared by the K and V
+    gathers (they are two reads, one index computation)."""
+    B = block_table.shape[0]
+    idx = block_table.reshape(-1)
+    keys = jnp.take(cache_k, idx, axis=0).reshape(B, -1, n_kv, head_dim)
+    vals = jnp.take(cache_v, idx, axis=0).reshape(B, -1, n_kv, head_dim)
+    return keys, vals
+
+
+def _paged_update_attend(
+    q_heads, k_row, v_row, cache_k, cache_v, block_table, pos, active, *,
+    n_kv: int, head_dim: int, window: Optional[int], use_kernel: bool, x_dtype,
+):
+    """Scatter one decode row through the block table, then attend.
+
+    ``q_heads``/``k_row``/``v_row``: (B, H, d) / (B, K, d) post-RoPE,
+    unscaled; returns ``(out (B, K, G, d), new_k, new_v)``.  All block
+    ids are table-relative, so the same function runs globally or as the
+    per-shard body inside :func:`_paged_attend_sharded`.
+
+    ``use_kernel=False`` is the jnp gather conformance reference (kept
+    verbatim from the PR 5 decode path); ``use_kernel=True`` walks the
+    table block-by-block via ``kernels.ops.paged_attention`` so HBM
+    reads scale with live tokens.  The two paths differ on *inactive*
+    lanes (the kernel returns exact zeros, the gather computes garbage)
+    — both are discarded, only per-request tokens are compared."""
+    from ..kernels import ops as kernel_ops
+
+    B = q_heads.shape[0]
+    nb, bs = cache_k.shape[0], cache_k.shape[1]
+    blk = block_table[jnp.arange(B), pos // bs]  # (B,) pool block ids
+    if active is not None:
+        blk = jnp.where(active, blk, nb)  # OOB => write drops
+    cache_k = cache_k.at[blk, pos % bs].set(k_row.astype(cache_k.dtype), mode="drop")
+    cache_v = cache_v.at[blk, pos % bs].set(v_row.astype(cache_v.dtype), mode="drop")
+    qh = q_heads.reshape(B, n_kv, -1, head_dim)
+    if use_kernel:
+        pos_eff = pos if active is None else jnp.where(active, pos, -1)
+        out = kernel_ops.paged_attention(
+            qh, cache_k, cache_v, block_table, pos_eff,
+            window=window, use_pallas=True,
+        ).astype(x_dtype)
+        return out, cache_k, cache_v
+    keys, vals = _pool_gather(cache_k, cache_v, block_table, n_kv, head_dim)
+    q5 = (qh * (head_dim**-0.5))[:, None]  # (B, 1, K, G, d)
+    s = _gqa_scores(q5, keys.astype(x_dtype))  # (B, K, G, 1, L)
+    kpos = jnp.arange(keys.shape[1])
+    valid = kpos[None, :] <= pos[:, None]
+    if window is not None:
+        valid &= (pos[:, None] - kpos[None, :]) < window
+    s = jnp.where(valid[:, None, None, None, :], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    out = _gqa_combine(w, vals.astype(x_dtype), x_dtype)  # (B, 1, K*G*d)
+    return out.reshape(B, n_kv, -1, head_dim), cache_k, cache_v
+
+
+def _paged_attend_sharded(
+    mesh, q_heads, k_row, v_row, cache_k, cache_v, block_table, pos, active, *,
+    n_kv: int, head_dim: int, window: Optional[int], use_kernel: bool, x_dtype,
+):
+    """shard_map the paged update+attend: lanes and their pool blocks
+    co-shard over the data axes, so each shard scatters into and gathers
+    out of only its LOCAL pool slice — the pool is never all-gathered
+    (GSPMD would do exactly that at the opaque Pallas call, and pays a
+    cross-shard gather even on the jnp path).
+
+    Requires lanes and blocks to shard over the *same* axes
+    (``dist.sharding.block_table_spec``); the allocator grants lane b's
+    blocks from lane b's shard range (``BlockAllocator(n_shards=D)``),
+    so global->local id translation is a subtraction.  Stale table
+    entries of other shards clip into the local range and are masked by
+    the causal bound like any stale entry.  Returns None when lanes and
+    blocks do not co-shard (caller falls back to the GSPMD path)."""
+    from ..dist import sharding as shardrules
+    from ..dist.collectives import shard_map_compat
+    from jax.sharding import PartitionSpec as P
+
+    B = q_heads.shape[0]
+    nb = cache_k.shape[0]
+    pool_spec = shardrules.paged_block_spec(cache_k.shape, mesh)
+    blk_ax, kv_ax = pool_spec[0], pool_spec[2]
+    lane_ax = shardrules.dp_axes(mesh, B)
+    if blk_ax is None or lane_ax != blk_ax:
+        return None
+
+    def _axsize(ax):
+        axes = ax if isinstance(ax, tuple) else (ax,)
+        n = 1
+        for a in axes:
+            n *= int(mesh.shape[a])
+        return n
+
+    local_nb = nb // _axsize(blk_ax)
+    kv_local = n_kv // _axsize(kv_ax) if kv_ax is not None else n_kv
+    q4 = q_heads.reshape(B, n_kv, -1, head_dim)
+    if active is None:
+        active = jnp.ones((B,), bool)
+
+    def _shard_offset():
+        axes = blk_ax if isinstance(blk_ax, tuple) else (blk_ax,)
+        idx = jnp.int32(0)
+        for a in axes:
+            idx = idx * jax.lax.psum(1, a) + jax.lax.axis_index(a)
+        return idx * local_nb
+
+    def local(qh, kr, vr, ck, cv, tbl, po, act):
+        off = _shard_offset()
+        tbl_l = jnp.clip(tbl - off, 0, local_nb - 1)
+        return _paged_update_attend(
+            qh, kr, vr, ck, cv, tbl_l, po, act, n_kv=kv_local,
+            head_dim=head_dim, window=window, use_kernel=use_kernel,
+            x_dtype=x_dtype,
+        )
+
+    f = shard_map_compat(
+        local, mesh,
+        in_specs=(
+            P(lane_ax, kv_ax, None, None), P(lane_ax, kv_ax, None),
+            P(lane_ax, kv_ax, None), pool_spec, pool_spec,
+            P(lane_ax, None), P(lane_ax), P(lane_ax),
+        ),
+        out_specs=(P(lane_ax, kv_ax, None, None), pool_spec, pool_spec),
+    )
+    return f(q4, k_row, v_row, cache_k, cache_v, block_table, pos, active)
+
+
 def decode_attention(
     p: Params,
     x: jax.Array,
@@ -126,6 +255,7 @@ def decode_attention(
     window: Optional[int] = None,
     active: Optional[jax.Array] = None,
     block_table: Optional[jax.Array] = None,
+    paged_kernel: bool = False,
 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """One-token decode.  x: (B, 1, D); cache_[kv]: (B, Smax, K, d);
     pos: scalar int32 current position, or a (B,) int32 vector of
@@ -150,7 +280,15 @@ def decode_attention(
     stale table entries are harmless on the read side: their rows sit
     beyond the lane's position, so the causal mask zeroes them exactly.
     Requires per-slot ``pos``.  Returns (out, new_k, new_v) with new_k /
-    new_v in the pool layout."""
+    new_v in the pool layout.
+
+    ``paged_kernel=True`` replaces the full-pool-view gather read with
+    the Pallas block-table-walking kernel (``kernels.paged_attention``):
+    per-step HBM reads scale with each lane's live tokens instead of
+    blocks_per_lane x block_size.  The gather path stays the conformance
+    reference.  Under ``common.paged_shard_mesh`` (set by the scheduler
+    when block tables are data-sharded) either path runs shard-local
+    inside shard_map — the pool is never all-gathered."""
     B = x.shape[0]
     G = n_heads // n_kv
     q, k, v = _qkv(p, x, n_heads, n_kv, head_dim)
@@ -162,17 +300,17 @@ def decode_attention(
     q = apply_rope(q, posb, rope_theta)
     k = apply_rope(k, posb, rope_theta)
     if paged:
-        nb, bs = cache_k.shape[0], cache_k.shape[1]
-        blk = block_table[jnp.arange(B), pos // bs]  # (B,) pool block ids
-        if active is not None:
-            blk = jnp.where(active, blk, nb)  # OOB => write drops
-        k_row, v_row = k[:, 0].astype(cache_k.dtype), v[:, 0].astype(cache_v.dtype)
-        cache_k = cache_k.at[blk, pos % bs].set(k_row, mode="drop")
-        cache_v = cache_v.at[blk, pos % bs].set(v_row, mode="drop")
-        # lane-logical view: (B, blocks_per_lane * bs, K, d)
-        keys = cache_k[block_table].reshape(B, -1, n_kv, head_dim)
-        vals = cache_v[block_table].reshape(B, -1, n_kv, head_dim)
-    elif per_slot:
+        args = (q[:, 0], k[:, 0], v[:, 0], cache_k, cache_v, block_table, pos, active)
+        kw = dict(n_kv=n_kv, head_dim=head_dim, window=window,
+                  use_kernel=paged_kernel, x_dtype=x.dtype)
+        mesh = paged_mesh()
+        res = _paged_attend_sharded(mesh, *args, **kw) if mesh is not None else None
+        if res is None:  # unsharded, or lanes/blocks don't co-shard
+            res = _paged_update_attend(*args, **kw)
+        out, cache_k, cache_v = res
+        out = out.reshape(B, 1, -1)
+        return dense_apply(out, p["wo"]), cache_k, cache_v
+    if per_slot:
         bidx = jnp.arange(B)
         k_row, v_row = k[:, 0].astype(cache_k.dtype), v[:, 0].astype(cache_v.dtype)
         if active is not None:
@@ -215,6 +353,7 @@ def decode_attention_cache(
     ring: bool = False,
     active: Optional[jax.Array] = None,
     block_table: Optional[jax.Array] = None,
+    paged_kernel: bool = False,
 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """One-token decode against either a full-length cache or a ring buffer.
 
@@ -237,7 +376,7 @@ def decode_attention_cache(
         return decode_attention(
             p, x, cache_k, cache_v, pos, n_heads=n_heads, n_kv=n_kv,
             head_dim=head_dim, rope_theta=rope_theta, window=window,
-            active=active, block_table=block_table,
+            active=active, block_table=block_table, paged_kernel=paged_kernel,
         )
     B = x.shape[0]
     Wc = cache_k.shape[1]
@@ -343,8 +482,7 @@ def prefill_chunk_attention(
             blk = jnp.where(ok, blk, nb)
             cache_k = cache_k.at[blk, qpos % bs].set(k.astype(cache_k.dtype), mode="drop")
             cache_v = cache_v.at[blk, qpos % bs].set(v.astype(cache_v.dtype), mode="drop")
-            keys = cache_k[block_table].reshape(B, nb_lane * bs, n_kv, head_dim)
-            vals = cache_v[block_table].reshape(B, nb_lane * bs, n_kv, head_dim)
+            keys, vals = _pool_gather(cache_k, cache_v, block_table, n_kv, head_dim)
         else:
             bidx = jnp.arange(B)[:, None]
             cache_k = cache_k.at[bidx, qpos].set(k.astype(cache_k.dtype), mode="drop")

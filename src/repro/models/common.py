@@ -47,6 +47,36 @@ def packed_shard_mesh(mesh):
         _packed_mesh_var.reset(token)
 
 
+# Mesh over which paged decode attention is shard_map'd (None = GSPMD).
+# Same ContextVar discipline as _packed_mesh_var: set by the scheduler
+# for the duration of the decode trace when the block tables are
+# data-sharded (dist.sharding.table_shards > 1), read by
+# models.attention.decode_attention.
+_paged_mesh_var: contextvars.ContextVar = contextvars.ContextVar(
+    "paged_shard_mesh", default=None
+)
+
+
+@contextlib.contextmanager
+def paged_shard_mesh(mesh):
+    """Trace the enclosed computation with paged decode attention
+    shard_map'd over ``mesh``: each data shard scatters/gathers only its
+    local slice of the KV block pool (lanes and their blocks co-shard,
+    see ``dist.sharding.block_table_spec``), so the pool is never
+    all-gathered — GSPMD would do exactly that at the opaque Pallas
+    paged-attention call.  ``mesh=None`` is a no-op."""
+    token = _paged_mesh_var.set(mesh)
+    try:
+        yield
+    finally:
+        _paged_mesh_var.reset(token)
+
+
+def paged_mesh():
+    """The mesh set by :func:`paged_shard_mesh` for the current trace."""
+    return _paged_mesh_var.get()
+
+
 def dense_apply(x: jax.Array, w) -> jax.Array:
     """x @ w, dispatching on representation: plain array, or a BSQ
     PackedWeight (sign+magnitude bit-planes) dequantised on the fly —

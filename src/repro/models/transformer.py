@@ -292,7 +292,7 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16,
 
 
 def _apply_layer_decode(p, x, cfg: ModelConfig, kind: str, cache, pos, cross_src,
-                        active=None, block_table=None):
+                        active=None, block_table=None, paged_kernel=False):
     base = _base_kind(kind)
     hd = cfg.resolved_head_dim
     h = rmsnorm(p["norm1"], x, cfg.norm_eps)
@@ -304,7 +304,7 @@ def _apply_layer_decode(p, x, cfg: ModelConfig, kind: str, cache, pos, cross_src
             n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads, head_dim=hd,
             rope_theta=cfg.rope_theta,
             window=cfg.window if base == "local" else None, ring=ring,
-            active=active, block_table=block_table,
+            active=active, block_table=block_table, paged_kernel=paged_kernel,
         )
         new_cache = {"k": nk, "v": nv}
     elif base == "ssm":
@@ -354,6 +354,7 @@ def decode_step(
     cross_embeds: Optional[jax.Array] = None,
     active: Optional[jax.Array] = None,
     block_table: Optional[jax.Array] = None,
+    paged_kernel: bool = False,
 ):
     """One decode step for the whole model. Returns (logits (B,V), cache).
 
@@ -377,7 +378,9 @@ def decode_step(
     cache's ``k``/``v`` leaves are a shared block pool and each lane's
     reads/writes route through its table row (see
     ``attention.decode_attention``).  Ring/ssm/rglru state is fixed-size
-    per lane and bypasses paging."""
+    per lane and bypasses paging.  ``paged_kernel=True`` makes those
+    paged reads walk the table block-by-block via the Pallas kernel
+    instead of gathering the full pool view."""
     dt = cfg.compute_dtype
     if tokens.ndim == 3:
         x = tokens.astype(dt)
@@ -391,7 +394,7 @@ def decode_step(
         for i, kind in enumerate(cfg.layer_pattern):
             x, new_cache[f"p{i}"] = _apply_layer_decode(
                 blk[f"p{i}"], x, cfg, kind, blk_cache[f"p{i}"], pos, cross_src,
-                active, block_table
+                active, block_table, paged_kernel
             )
         return x, new_cache
 
@@ -411,7 +414,7 @@ def decode_step(
         for i in range(cfg.n_tail_layers):
             x, c = _apply_layer_decode(
                 params["tail"][i], x, cfg, cfg.layer_pattern[i], cache["tail"][i],
-                pos, cross_src, active, block_table
+                pos, cross_src, active, block_table, paged_kernel
             )
             new_tail.append(c)
         new_cache["tail"] = new_tail

@@ -86,7 +86,8 @@ class ServeEngine:
                  mesh=None, continuous: bool = False, n_slots: int = 8,
                  policy: Optional["SchedulerPolicy"] = None,
                  chunked_prefill: bool = False, paged: bool = False,
-                 block_size: int = 32, n_blocks: Optional[int] = None):
+                 block_size: int = 32, n_blocks: Optional[int] = None,
+                 paged_kernel: bool = False):
         self.cfg = cfg
         self.max_len = max_len
         self.key = jax.random.PRNGKey(seed)
@@ -114,9 +115,13 @@ class ServeEngine:
 
         self._decode = jax.jit(_decode_fn)
         self.scheduler = None
-        if paged and not continuous:
+        if (paged or paged_kernel) and not continuous:
             raise ValueError("paged=True requires continuous=True (the block "
                              "pool lives in the slot-pool scheduler)")
+        if paged_kernel and not paged:
+            raise ValueError("paged_kernel=True requires paged=True — the "
+                             "kernel walks the block table a dense cache "
+                             "does not have")
         if continuous:
             from .scheduler import ContinuousScheduler, SchedulerPolicy
 
@@ -124,7 +129,8 @@ class ServeEngine:
                 policy = SchedulerPolicy(n_slots=n_slots,
                                          chunked_prefill=chunked_prefill or paged,
                                          paged=paged, block_size=block_size,
-                                         n_blocks=n_blocks)
+                                         n_blocks=n_blocks,
+                                         paged_kernel=paged_kernel)
             else:
                 if chunked_prefill and not policy.chunked_prefill:
                     policy = dataclasses.replace(policy, chunked_prefill=True)
@@ -134,6 +140,9 @@ class ServeEngine:
                         policy, paged=True, chunked_prefill=True,
                         block_size=block_size, n_blocks=n_blocks,
                     )
+                if paged_kernel and not policy.paged_kernel:
+                    # requires paged (policy validates)
+                    policy = dataclasses.replace(policy, paged_kernel=True)
             self.scheduler = ContinuousScheduler(self, policy)
 
     # -- sharding ---------------------------------------------------------

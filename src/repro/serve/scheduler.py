@@ -76,7 +76,7 @@ import numpy as np
 
 from ..dist import sharding as dist_sharding
 from ..models import transformer
-from ..models.common import packed_shard_mesh
+from ..models.common import packed_shard_mesh, paged_shard_mesh
 from .slots import SlotPool, reset_recurrent_slots, scatter_slot
 
 
@@ -101,6 +101,11 @@ class SchedulerPolicy:
     paged: bool = False
     block_size: int = 32
     n_blocks: Optional[int] = None
+    # Decode reads walk the block table in place via the Pallas paged
+    # attention kernel (kernels/paged_attention.py) instead of gathering
+    # each lane's full pool view — per-step attention HBM reads scale
+    # with live tokens.  The gather path stays the conformance reference.
+    paged_kernel: bool = False
 
     def __post_init__(self):
         if self.min_admit > 1 and self.max_wait <= 0:
@@ -125,6 +130,11 @@ class SchedulerPolicy:
                 raise ValueError(f"block_size={self.block_size}: need >= 1")
             if self.n_blocks is not None and self.n_blocks < 1:
                 raise ValueError(f"n_blocks={self.n_blocks}: need >= 1 (or None)")
+        if self.paged_kernel and not self.paged:
+            raise ValueError(
+                "paged_kernel=True requires paged=True — the kernel walks the "
+                "block table a dense cache does not have"
+            )
 
 
 @dataclasses.dataclass
@@ -162,10 +172,21 @@ class ContinuousScheduler:
             out_sh = (None, self.pool.shardings["cache"])
         self._cache_out_sh = out_sh
 
+        # Shard-local paged decode: when the block tables co-shard with
+        # the pool over the data axes (table_shards > 1), the decode
+        # trace runs paged attention inside shard_map over the engine
+        # mesh — each shard touches only its own pool slice.
+        self._paged_mesh = (
+            engine.mesh
+            if policy.paged and self.pool.table_shards > 1 else None
+        )
+        pk = policy.paged_kernel
+
         def _decode_fn(p, cache, tok, pos, act, table):
-            with packed_shard_mesh(engine._packed_mesh):
+            with packed_shard_mesh(engine._packed_mesh), \
+                 paged_shard_mesh(self._paged_mesh):
                 return transformer.decode_step(p, cache, tok, pos, cfg, active=act,
-                                               block_table=table)
+                                               block_table=table, paged_kernel=pk)
 
         self._decode = jax.jit(_decode_fn, out_shardings=out_sh)
         self._prefill_cache: Dict[int, Callable] = {}  # legacy: per prompt length
@@ -197,13 +218,17 @@ class ContinuousScheduler:
         self.occupancy_trace: List[int] = []
         self.decode_ms_total = 0.0
         self.decode_steps = 0
+        self.decode_ms_trace: List[float] = []  # per-step (TPOT percentiles)
         self.admit_bursts: List[int] = []
         self.prefill_chunks = 0
         # paged telemetry: per decode step, pool blocks in use and live
         # cache rows (occupancy = used/n_blocks; fragmentation = wasted
-        # tail rows of partially-filled blocks)
+        # tail rows of partially-filled blocks), and the blocks the
+        # decode attention actually reads (the paged kernel's HBM
+        # traffic; the gather path reads blocks_per_lane per live lane)
         self.block_used_trace: List[int] = []
         self.live_rows_trace: List[int] = []
+        self.attn_read_blocks_trace: List[int] = []
 
     # -- jitted programs ---------------------------------------------------
     def _prefill_fn(self, plen: int) -> Callable:
@@ -270,48 +295,71 @@ class ContinuousScheduler:
         max_new - 1 decode writes (same row math as the max_len check)."""
         return self.pool.allocator.blocks_for_rows(len(req.tokens) + req.max_new - 1)
 
-    def _paged_placeable(self, queue: Deque[_Pending], placeable: int) -> int:
-        """Paged capacity check: a free lane is no longer enough — each
-        admit must find (a) free blocks >= its first-chunk demand
-        (immediate progress) and (b) uncommitted pool capacity >= its
-        worst-case lifetime demand (so on-demand growth can never fail —
-        see slots.BlockAllocator).  While the commitment invariant holds,
-        (b) implies (a) (free >= n_blocks - committed and first <= life);
-        (a) is kept as the literal admission contract and as a guard
-        should the invariant ever drift.  FIFO is preserved: walk the
-        queue in order and STOP at the first request that does not fit;
-        it retries when an eviction frees blocks, and nothing jumps it."""
+    def _paged_assign(
+        self, queue: Deque[_Pending], free: List[int]
+    ) -> List[Tuple[_Pending, int]]:
+        """Paged lane assignment: a free lane is no longer enough — each
+        admit must find a lane whose *shard* has (a) free blocks >= its
+        first-chunk demand (immediate progress) and (b) uncommitted
+        capacity >= its worst-case lifetime demand (so on-demand growth
+        can never fail — see slots.BlockAllocator).  While the commitment
+        invariant holds, (b) implies (a) (free >= capacity - committed
+        and first <= life); (a) is kept as the literal admission contract
+        and as a guard should the invariant ever drift.
+
+        With a replicated table (one shard) every lane sees the same
+        budgets and the assignment degenerates to free-list order.  With
+        sharded tables (lanes and pool blocks co-sharded over the data
+        axes) each lane draws only on its own shard's range, so the walk
+        picks the first free lane whose shard fits.  FIFO is preserved
+        either way: requests are considered in queue order and the walk
+        STOPS at the first that fits no lane; it retries when an eviction
+        frees blocks, and nothing jumps it."""
         alloc = self.pool.allocator
-        budget_free = alloc.free_count
-        budget_commit = alloc.n_blocks - alloc.committed
-        n = 0
-        for pend in list(queue)[:placeable]:
+        budget_free = [alloc.free_in(s) for s in range(alloc.n_shards)]
+        budget_commit = [alloc.shard_blocks - alloc.committed_in(s)
+                         for s in range(alloc.n_shards)]
+        lanes = list(free)
+        pairs: List[Tuple[_Pending, int]] = []
+        for pend in queue:
+            if not lanes:
+                break
             first = self._first_chunk_blocks(len(pend.request.tokens))
             life = self._lifetime_blocks(pend.request)
-            if first > budget_free or life > budget_commit:
-                break
-            budget_free -= first
-            budget_commit -= life
-            n += 1
-        return n
+            chosen = None
+            for lane in lanes:
+                sh = self.pool.lane_shard(lane)
+                if first <= budget_free[sh] and life <= budget_commit[sh]:
+                    chosen = lane
+                    break
+            if chosen is None:
+                break  # head-of-line: nothing jumps the unfit request
+            lanes.remove(chosen)
+            sh = self.pool.lane_shard(chosen)
+            budget_free[sh] -= first
+            budget_commit[sh] -= life
+            pairs.append((pend, chosen))
+        return pairs
 
     def _admit(self, queue: Deque[_Pending], now: int):
-        free = self.pool.free_slots()
-        if not queue or not free:
-            return
-        placeable = min(len(queue), len(free))
-        if self.policy.paged:
-            placeable = self._paged_placeable(queue, placeable)
-            if placeable == 0:
-                return
-        oldest_wait = now - (queue[0].enqueued_at if queue[0].enqueued_at is not None else now)
-        if placeable < self.policy.min_admit and oldest_wait < self.policy.max_wait:
-            return  # max-wait batching: hold for a fuller admission burst
         # Take the free list ONCE: re-deriving free_slots()[0] per placement
         # was O(n_slots^2) per burst and would mis-place if a multi-admit
         # reordered frees mid-loop.
+        free = self.pool.free_slots()
+        if not queue or not free:
+            return
+        if self.policy.paged:
+            pairs = self._paged_assign(queue, free)
+        else:
+            pairs = list(zip(list(queue), free))
+        placeable = len(pairs)
+        if placeable == 0:
+            return
+        oldest_wait = now - (queue[0].enqueued_at if queue[0].enqueued_at is not None else now)
+        if placeable < self.policy.min_admit and oldest_wait < self.policy.max_wait:
+            return  # max-wait batching: hold for a fuller admission burst
         batch = [queue.popleft() for _ in range(placeable)]
-        slots = free[:placeable]
+        slots = [lane for _, lane in pairs]
         self.admit_bursts.append(placeable)
         if self.policy.chunked_prefill:
             self._admit_chunked(batch, slots, now)
@@ -461,13 +509,17 @@ class ContinuousScheduler:
                     f"{self.engine.max_len} — out-of-range cache writes would "
                     "be silently dropped and the output would be garbage"
                 )
-            if self.policy.paged and self._lifetime_blocks(r) > self.pool.n_blocks:
-                raise ValueError(
-                    f"request {r.uid}: needs {self._lifetime_blocks(r)} KV "
-                    f"blocks worst-case > pool n_blocks {self.pool.n_blocks} — "
-                    "it could never be admitted (raise n_blocks or shrink "
-                    "prompt/max_new)"
-                )
+            if self.policy.paged:
+                cap = self.pool.allocator.shard_blocks  # == n_blocks unsharded
+                if self._lifetime_blocks(r) > cap:
+                    raise ValueError(
+                        f"request {r.uid}: needs {self._lifetime_blocks(r)} KV "
+                        f"blocks worst-case > per-lane pool capacity {cap} "
+                        f"({self.pool.n_blocks} blocks / "
+                        f"{self.pool.table_shards} table shard(s)) — it could "
+                        "never be admitted (raise n_blocks or shrink "
+                        "prompt/max_new)"
+                    )
         incoming = sorted(
             (_Pending(r, int(t)) for r, t in zip(requests, arrival_steps)),
             key=lambda p: p.arrival,
@@ -505,6 +557,14 @@ class ContinuousScheduler:
                             for i, s in enumerate(pool.slots)
                             if s.uid is not None and s.phase == "decode"
                         })
+                        # blocks this step's attention actually reads: the
+                        # decode lanes' live blocks (== the paged kernel's
+                        # per-step HBM traffic; the gather path reads
+                        # blocks_per_lane per live lane regardless)
+                        self.attn_read_blocks_trace.append(sum(
+                            len(s.blocks) for s in pool.slots
+                            if s.uid is not None and s.phase == "decode"
+                        ))
                     t0 = time.perf_counter()
                     logits, pool.cache = self._decode(
                         self.engine.params, pool.cache, pool.tok, pool.pos, pool.act,
@@ -512,7 +572,9 @@ class ContinuousScheduler:
                     )
                     sampled = self.engine._sample(logits, pool.temps, pool.any_hot)
                     sampled_host = np.asarray(sampled)  # one host sync per step (streaming)
-                    self.decode_ms_total += (time.perf_counter() - t0) * 1e3
+                    step_ms = (time.perf_counter() - t0) * 1e3
+                    self.decode_ms_total += step_ms
+                    self.decode_ms_trace.append(step_ms)
                     self.decode_steps += 1
                     active = pool.decode_mask  # lanes live during this decode step
                     pool.tok = pool._pin("tok", sampled[:, None])

@@ -86,38 +86,71 @@ class BlockAllocator:
     it at eviction), which guarantees every admitted lane can always grow
     to its last decode row — on-demand allocation can then never fail, so
     paged serving cannot deadlock on an exhausted pool.
+
+    **Sharded tables** (``n_shards > 1``): the pool's block id space is
+    partitioned into ``n_shards`` contiguous ranges — shard ``s`` owns
+    ids ``[s * shard_blocks, (s+1) * shard_blocks)`` — mirroring how
+    ``dist.sharding.block_table_spec`` splits the device pool over the
+    data axes.  Each shard keeps its own free list and commitment
+    counter, and a lane allocates only from its own shard, which is what
+    lets the decode step translate global block ids to shard-local ones
+    with a subtraction (``models.attention._paged_attend_sharded``).
+    ``n_shards=1`` is exactly the unsharded allocator.
     """
 
-    def __init__(self, n_blocks: int, block_size: int):
+    def __init__(self, n_blocks: int, block_size: int, n_shards: int = 1):
         if n_blocks < 1 or block_size < 1:
             raise ValueError(f"need n_blocks >= 1 and block_size >= 1, got "
                              f"{n_blocks}, {block_size}")
+        if n_shards < 1 or n_blocks % n_shards != 0:
+            raise ValueError(
+                f"n_shards {n_shards} must be >= 1 and divide n_blocks {n_blocks}")
         self.n_blocks = n_blocks
         self.block_size = block_size
-        self._free = list(range(n_blocks - 1, -1, -1))  # pop() grants low ids first
+        self.n_shards = n_shards
+        self.shard_blocks = n_blocks // n_shards
+        # Per-shard stacks; pop() grants low ids first within each shard.
+        self._free = [
+            list(range((s + 1) * self.shard_blocks - 1, s * self.shard_blocks - 1, -1))
+            for s in range(n_shards)
+        ]
         self._owner = {}  # live block id -> owner tag
-        self.committed = 0  # blocks promised to admitted lanes (worst case)
+        self._committed = [0] * n_shards  # blocks promised per shard (worst case)
+
+    @property
+    def committed(self) -> int:
+        return sum(self._committed)
 
     @property
     def free_count(self) -> int:
-        return len(self._free)
+        return sum(len(f) for f in self._free)
 
     @property
     def used_count(self) -> int:
-        return self.n_blocks - len(self._free)
+        return self.n_blocks - self.free_count
+
+    def shard_of(self, block: int) -> int:
+        return block // self.shard_blocks
+
+    def free_in(self, shard: int) -> int:
+        return len(self._free[shard])
+
+    def committed_in(self, shard: int) -> int:
+        return self._committed[shard]
 
     def blocks_for_rows(self, rows: int) -> int:
         """Blocks needed to cover ``rows`` cache rows."""
         return _ceil_div(max(rows, 0), self.block_size)
 
-    def alloc(self, k: int, owner=None) -> Optional[List[int]]:
-        """Grant ``k`` blocks to ``owner``; None if the pool cannot (the
-        only failure mode — interchangeable blocks never fragment)."""
+    def alloc(self, k: int, owner=None, shard: int = 0) -> Optional[List[int]]:
+        """Grant ``k`` blocks from ``shard`` to ``owner``; None if that
+        shard cannot (the only failure mode — interchangeable blocks
+        never fragment within a shard)."""
         if k < 0:
             raise ValueError(f"alloc({k})")
-        if k > len(self._free):
+        if k > len(self._free[shard]):
             return None
-        out = [self._free.pop() for _ in range(k)]
+        out = [self._free[shard].pop() for _ in range(k)]
         for b in out:
             self._owner[b] = owner
         return out
@@ -127,19 +160,21 @@ class BlockAllocator:
             if b not in self._owner:
                 raise ValueError(f"block {b} is not live (double free?)")
             del self._owner[b]
-            self._free.append(b)
+            self._free[self.shard_of(b)].append(b)
 
-    def reserve(self, k: int) -> bool:
-        """Commit ``k`` blocks of future capacity; False if over-committing."""
-        if self.committed + k > self.n_blocks:
+    def reserve(self, k: int, shard: int = 0) -> bool:
+        """Commit ``k`` blocks of ``shard``'s future capacity; False if
+        over-committing that shard."""
+        if self._committed[shard] + k > self.shard_blocks:
             return False
-        self.committed += k
+        self._committed[shard] += k
         return True
 
-    def release(self, k: int) -> None:
-        if k > self.committed:
-            raise ValueError(f"release({k}) > committed {self.committed}")
-        self.committed -= k
+    def release(self, k: int, shard: int = 0) -> None:
+        if k > self._committed[shard]:
+            raise ValueError(
+                f"release({k}) > committed {self._committed[shard]} in shard {shard}")
+        self._committed[shard] -= k
 
 
 def _is_blocks_leaf(path) -> bool:
@@ -255,9 +290,17 @@ class SlotPool:
             # concurrency headroom for HBM.
             self.n_blocks = (n_slots * self.blocks_per_lane
                              if n_blocks is None else n_blocks)
-            self.allocator = BlockAllocator(self.n_blocks, block_size)
+            # When lanes and pool blocks co-shard over the mesh's data
+            # axes, partition the allocator to match: lane b draws only
+            # from its own shard's block range, so the decode step can
+            # run shard-local (dist.sharding.block_table_spec).
+            self.table_shards = dist_sharding.table_shards(
+                mesh, n_slots, self.n_blocks)
+            self.allocator = BlockAllocator(
+                self.n_blocks, block_size, n_shards=self.table_shards)
         else:
             self.n_blocks = None
+            self.table_shards = 1
             self.allocator = None
         # Device state (enters the jitted decode step every iteration).
         self.cache = transformer.init_cache(
@@ -310,6 +353,12 @@ class SlotPool:
     # -- host-side lane management ----------------------------------------
     def free_slots(self) -> List[int]:
         return [i for i, s in enumerate(self.slots) if s.uid is None]
+
+    def lane_shard(self, slot: int) -> int:
+        """Which table shard lane ``slot`` belongs to (0 when the table is
+        replicated).  Contiguous lane groups, matching how shard_map
+        splits the lane axis."""
+        return slot * self.table_shards // self.n_slots
 
     @property
     def active_mask(self) -> np.ndarray:
@@ -376,12 +425,14 @@ class SlotPool:
         )
         if self.paged:
             s = self.slots[slot]
+            sh = self.lane_shard(slot)
             s.committed = self.allocator.blocks_for_rows(len(s.prompt) + max_new - 1)
-            if not self.allocator.reserve(s.committed):
+            if not self.allocator.reserve(s.committed, shard=sh):
                 raise RuntimeError(
                     f"admitted lane {slot} cannot reserve {s.committed} blocks "
-                    f"(committed {self.allocator.committed}/{self.n_blocks}) — "
-                    "the scheduler's paged admission check should have held it"
+                    f"(shard {sh} committed {self.allocator.committed_in(sh)}"
+                    f"/{self.allocator.shard_blocks}) — the scheduler's paged "
+                    "admission check should have held it"
                 )
         self.pos = self._pin("pos", self.pos.at[slot].set(0))
         self.temps = self._pin("temps", self.temps.at[slot].set(temperature))
@@ -407,12 +458,14 @@ class SlotPool:
             need = self.allocator.blocks_for_rows(rows) - len(s.blocks)
             if need <= 0:
                 continue
-            got = self.allocator.alloc(need, owner=slot)
+            sh = self.lane_shard(slot)
+            got = self.allocator.alloc(need, owner=slot, shard=sh)
             if got is None:
                 raise RuntimeError(
                     f"lane {slot} needs {need} blocks but only "
-                    f"{self.allocator.free_count} are free — the commitment "
-                    "invariant was violated (allocator bug or out-of-band alloc)"
+                    f"{self.allocator.free_in(sh)} are free in shard {sh} — "
+                    "the commitment invariant was violated (allocator bug or "
+                    "out-of-band alloc)"
                 )
             base = len(s.blocks)
             rr += [slot] * need
@@ -463,7 +516,7 @@ class SlotPool:
         if self.paged and done.uid is not None:
             if done.blocks:
                 self.allocator.free(done.blocks)
-            self.allocator.release(done.committed)
+            self.allocator.release(done.committed, shard=self.lane_shard(slot))
         self.slots[slot] = SlotState()
         self.pos = self._pin("pos", self.pos.at[slot].set(0))
         self.temps = self._pin("temps", self.temps.at[slot].set(0.0))
@@ -486,7 +539,8 @@ class SlotPool:
         self.temps = jnp.zeros_like(self.temps)
         self.act = jnp.zeros_like(self.act)
         if self.paged:
-            self.allocator = BlockAllocator(self.n_blocks, self.block_size)
+            self.allocator = BlockAllocator(
+                self.n_blocks, self.block_size, n_shards=self.table_shards)
             self.block_table = jnp.zeros_like(self.block_table)
         if self.shardings is not None:
             self.pos = jax.device_put(self.pos, self.shardings["pos"])

@@ -71,6 +71,20 @@ def paged(granite):
                                               n_blocks=N_BLOCKS))
 
 
+@pytest.fixture(scope="module")
+def paged_kernel(granite):
+    """Same pool geometry as `paged`, but decode attention runs the
+    Pallas block-table-walking kernel (interpret mode off-TPU) instead
+    of the jnp full-pool gather."""
+    cfg, params = granite
+    return ServeEngine(params, cfg, max_len=MAX_LEN, continuous=True,
+                       policy=SchedulerPolicy(n_slots=N_SLOTS, chunked_prefill=True,
+                                              chunk_sizes=(8, 1), paged=True,
+                                              block_size=BLOCK_SIZE,
+                                              n_blocks=N_BLOCKS,
+                                              paged_kernel=True))
+
+
 def _random_schedule(rng, cfg, n_req=6, max_plen=12, max_new_hi=6):
     """Seeded random workload: mixed prompt lengths, staggered arrivals."""
     reqs = [
@@ -95,9 +109,11 @@ def _assert_zero_leaks(engine):
 
 
 @pytest.mark.parametrize("seed", range(N_SEEDS))
-def test_randomized_schedule_conformance(seed, granite, oracle, unpaged, paged):
-    """One seeded schedule, three engines: greedy tokens must agree
-    everywhere and the block pool must drain back to full."""
+def test_randomized_schedule_conformance(seed, granite, oracle, unpaged, paged,
+                                         paged_kernel):
+    """One seeded schedule, four engines: greedy tokens must agree
+    everywhere (kernel == gather == oracle) and the block pool must
+    drain back to full."""
     cfg, _ = granite
     rng = np.random.default_rng(seed)
     reqs, arrivals = _random_schedule(rng, cfg)
@@ -113,6 +129,12 @@ def test_randomized_schedule_conformance(seed, granite, oracle, unpaged, paged):
     for r in out_p:
         np.testing.assert_array_equal(ref[r.uid], r.tokens)
     _assert_zero_leaks(paged)
+
+    out_k = paged_kernel.generate(reqs, arrival_steps=arrivals)
+    assert len(out_k) == len(reqs)
+    for r in out_k:
+        np.testing.assert_array_equal(ref[r.uid], r.tokens)
+    _assert_zero_leaks(paged_kernel)
 
     if seed % 5 == 0:
         # mid-stream abandon (client disconnect, lanes possibly
@@ -224,8 +246,10 @@ def test_paged_packed_decode_on_2x4_mesh_matches_single_device():
     """Acceptance: paged decode over PACKED weights on a ("data",
     "model") mesh is token-identical to the single-device bucketed
     oracle, with the block pool actually sharded (block axis over data)
-    and zero leaked blocks.  Spawned with 8 host devices (XLA_FLAGS must
-    precede jax init)."""
+    and zero leaked blocks — for both the gather decode path and the
+    Pallas kernel path with data-sharded block tables (shard-local pool
+    walks under shard_map; the pool is never all-gathered).  Spawned
+    with 8 host devices (XLA_FLAGS must precede jax init)."""
     repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
     env = dict(os.environ)
     env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
@@ -245,16 +269,23 @@ def test_paged_packed_decode_on_2x4_mesh_matches_single_device():
                                 % cfg.vocab_size, max_new=5) for i in range(5)]
             ref = {r.uid: r.tokens
                    for r in ServeEngine(packed, cfg, max_len=32).generate(reqs())}
-            eng = ServeEngine(packed, cfg, max_len=32, mesh=mesh, continuous=True,
-                              n_slots=4, paged=True, block_size=4, n_blocks=14)
-            for r in eng.generate(reqs(), arrival_steps=[0, 0, 1, 3, 5]):
-                np.testing.assert_array_equal(ref[r.uid], r.tokens)
-            pool = eng.scheduler.pool
-            assert pool.allocator.free_count == pool.n_blocks
-            assert eng.scheduler.compiled_decode_programs() == 1
-            kv = jax.tree.leaves(pool.cache)[0]  # (superblocks, n_blocks, bs, KV, hd)
-            assert not kv.sharding.is_fully_replicated, kv.sharding
-            assert kv.sharding.spec[1] == "data", kv.sharding.spec
+            for use_kernel in (False, True):
+                eng = ServeEngine(packed, cfg, max_len=32, mesh=mesh, continuous=True,
+                                  n_slots=4, paged=True, block_size=4, n_blocks=14,
+                                  paged_kernel=use_kernel)
+                for r in eng.generate(reqs(), arrival_steps=[0, 0, 1, 3, 5]):
+                    np.testing.assert_array_equal(ref[r.uid], r.tokens)
+                pool = eng.scheduler.pool
+                assert pool.allocator.free_count == pool.n_blocks
+                assert eng.scheduler.compiled_decode_programs() == 1
+                kv = jax.tree.leaves(pool.cache)[0]  # (superblocks, n_blocks, bs, KV, hd)
+                assert not kv.sharding.is_fully_replicated, kv.sharding
+                assert kv.sharding.spec[1] == "data", kv.sharding.spec
+                # block tables co-shard with the pool: lanes over the data
+                # axis, one table shard per pool shard (4 % 2 == 14 % 2 == 0)
+                assert pool.table_shards == 2, pool.table_shards
+                assert pool.block_table.sharding.spec[0] == "data", (
+                    pool.block_table.sharding.spec)
             print("PAGED_MESH_OK")
         """)],
         capture_output=True, text=True, env=env, timeout=900,
