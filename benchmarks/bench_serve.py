@@ -62,8 +62,13 @@ where the gather path reads every lane's full pool view, so
 
     serve_paged_kernel,<us_total>,block_size=...;table_shards=...;tpot_p50_ms=...;tpot_p95_ms=...;attn_read_bytes_per_step=...;gather_read_bytes_per_step=...;read_shrink_x=...
 
-``--json PATH`` dumps every emitted row as structured JSON for harness
-consumption.
+``--json PATH`` dumps a stable, versioned JSON document
+(``schema_version`` 1): the emitted rows, a metrics-registry snapshot
+per serving mode (the same counters/histograms ``launch.serve
+--metrics-port`` scrapes — every derived row statistic is recomputable
+from it), and the quantization-quality probe rows when ``--packed-bits``
+is set (``repro.obs.quality``: logit MSE + top-1 agreement per active
+plane count).  CI uploads it as the ``BENCH_serve.json`` artifact.
 """
 from __future__ import annotations
 
@@ -164,12 +169,7 @@ def run_continuous(params, cfg, reqs, arrivals, max_len: int, n_slots: int, mesh
     programs_after_warmup = (sched.compiled_decode_programs(),
                              sched.compiled_prefill_programs())
     sched.pool.reset()
-    sched.occupancy_trace.clear()
-    sched.block_used_trace.clear()
-    sched.live_rows_trace.clear()
-    sched.decode_ms_trace.clear()
-    sched.attn_read_blocks_trace.clear()
-    sched.decode_ms_total, sched.decode_steps = 0.0, 0
+    sched.reset_telemetry()  # zero the obs registry + flight recorder
     t0 = time.perf_counter()
     results = engine.generate(reqs(), arrival_steps=arrivals)
     wall = time.perf_counter() - t0
@@ -189,9 +189,10 @@ def ttft_stats(results):
 
 def tpot_stats(sched):
     """(p50, p95) decode time-per-output-token in ms, from the
-    scheduler's per-step wall-clock trace."""
-    t = np.asarray(sched.decode_ms_trace)
-    return float(np.percentile(t, 50)), float(np.percentile(t, 95))
+    scheduler's ``serve_decode_step_ms`` histogram (same interpolation
+    as numpy.percentile over the retained reservoir)."""
+    h = sched.decode_ms_trace
+    return h.percentile(50), h.percentile(95)
 
 
 def attn_read_bytes_per_step(cfg, sched, kernel: bool) -> int:
@@ -207,7 +208,7 @@ def attn_read_bytes_per_step(cfg, sched, kernel: bool) -> int:
     layers = (kinds.count("attn") * cfg.n_superblocks
               + kinds[: cfg.n_tail_layers].count("attn"))
     if kernel:
-        blocks = float(np.mean(sched.attn_read_blocks_trace))
+        blocks = sched.attn_read_blocks_trace.mean()
     else:
         blocks = pool.n_slots * pool.blocks_per_lane
     return int(blocks * bs * row_bytes * layers)
@@ -287,6 +288,10 @@ def main(argv=None):
     c_results, c_wall, c_toks, sched = run_continuous(
         params, cfg, reqs, arrivals, args.max_len, args.slots, mesh=mesh
     )
+    # Registry snapshots per serving mode for the --json document (each
+    # engine carries its own fresh obs bundle, reset after warmup).
+    snapshots = {}
+    quality_rows = []
 
     # Same requests, greedy: outputs must agree token-for-token.
     ref = {r.uid: r.tokens for r in b_results}
@@ -321,6 +326,7 @@ def main(argv=None):
              f"admit_programs={ksched.compiled_admit_programs()};"
              f"chunk_sizes={'/'.join(map(str, chunk_sizes))};"
              f"toks_per_s={k_toks / k_wall:.1f}")
+        snapshots["chunked"] = ksched.obs.registry.snapshot()
         if args.smoke:
             # bounded compile set: independent of the length mix (the
             # workload has one distinct length per request)
@@ -360,6 +366,7 @@ def main(argv=None):
              f"leaked_blocks={leaked};toks_per_s={p_toks / p_wall:.1f};"
              f"tpot_p50_ms={p_tpot50:.2f};tpot_p95_ms={p_tpot95:.2f};"
              f"attn_read_bytes_per_step={gather_read}")
+        snapshots["paged"] = psched.obs.registry.snapshot()
         if args.smoke:
             assert leaked == 0, f"{leaked} blocks leaked"
             assert alloc.committed == 0, alloc.committed
@@ -387,6 +394,7 @@ def main(argv=None):
                  f"attn_read_bytes_per_step={kernel_read};"
                  f"gather_read_bytes_per_step={gather_read};"
                  f"read_shrink_x={read_ratio:.2f}")
+            snapshots["paged_kernel"] = pksched.obs.registry.snapshot()
             if args.smoke:
                 assert k_leaked == 0, f"{k_leaked} blocks leaked"
                 assert pksched.compiled_decode_programs() == 1
@@ -414,17 +422,58 @@ def main(argv=None):
             if args.smoke:
                 raise AssertionError(msg)
             print(f"WARNING: {msg}", file=sys.stderr)
+        # Quantization-quality probe: the packed model at k active
+        # bit-planes vs full precision (logit MSE + greedy top-1
+        # agreement).  Gauges land in the continuous engine's registry,
+        # so they ride the same Prometheus/JSON export as the serving
+        # metrics; rows also land in the --json document.
+        from repro.obs.quality import quality_probe
+
+        probe_toks = reqs()[-1].tokens[None, :]  # the workload's longest prompt
+        quality_rows = [
+            r.to_dict()
+            for r in quality_probe(params, cfg, probe_toks,
+                                   registry=sched.obs.registry)
+        ]
+        for q in quality_rows:
+            emit("serve_quality", 0.0,
+                 f"planes={q['planes']};group={q['group']};"
+                 f"logit_mse={q['logit_mse']:.3e};"
+                 f"top1_agreement={q['top1_agreement']:.4f}")
+        if args.smoke:
+            from repro.obs.export import to_prometheus
+
+            full = max(q["planes"] for q in quality_rows)
+            by_k = {q["planes"]: q for q in quality_rows}
+            assert by_k[full]["top1_agreement"] == 1.0, by_k[full]
+            assert by_k[full]["logit_mse"] == 0.0, by_k[full]
+            assert by_k[1]["logit_mse"] >= by_k[full]["logit_mse"]
+            assert "serve_quality_top1" in to_prometheus(sched.obs.registry)
     if args.json:
         import json
 
         from benchmarks.common import ROWS
 
+        snapshots["continuous"] = sched.obs.registry.snapshot()
+        doc = {
+            # Bump schema_version on any breaking change to this layout;
+            # consumers (CI artifact readers) key on it.
+            "schema_version": 1,
+            "workload": {
+                "arch": args.arch, "requests": args.requests,
+                "max_new": args.max_new, "max_len": args.max_len,
+                "slots": args.slots, "arrival_rate": args.arrival_rate,
+                "packed_bits": args.packed_bits,
+            },
+            "rows": [
+                dict(zip(("name", "us_per_call", "derived"), r.split(",", 2)))
+                for r in ROWS
+            ],
+            "metrics": snapshots,
+            "quality": quality_rows,
+        }
         with open(args.json, "w") as f:
-            json.dump(
-                [dict(zip(("name", "us_per_call", "derived"), r.split(",", 2)))
-                 for r in ROWS],
-                f, indent=2,
-            )
+            json.dump(doc, f, indent=2, sort_keys=True)
     if args.smoke:
         assert sched.compiled_decode_programs() == 1, "must be ONE decode program"
         assert c_toks == b_toks

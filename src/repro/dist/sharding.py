@@ -82,6 +82,19 @@ def _axis_size(mesh, axis: str) -> int:
     return int(mesh.shape[axis]) if axis in mesh.shape else 0
 
 
+def mesh_labels(mesh) -> dict:
+    """Metric labels identifying this process's mesh placement.
+
+    ``{"mesh": "dp2xtp4", "process": "0"}`` for a 2x4 mesh (or
+    ``{"mesh": "none", "process": "0"}`` single-device) — attached to
+    the serve allocator's per-shard metric families so a scraped
+    exposition says *which* topology produced the numbers."""
+    if mesh is None:
+        return {"mesh": "none", "process": str(jax.process_index())}
+    shape = "x".join(f"{ax}{n}" for ax, n in mesh.shape.items())
+    return {"mesh": shape or "none", "process": str(jax.process_index())}
+
+
 def _fits(mesh, axis: str, dim: int) -> bool:
     n = _axis_size(mesh, axis)
     return n > 0 and dim % n == 0

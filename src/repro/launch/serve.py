@@ -42,6 +42,16 @@ XLA_FLAGS --xla_force_host_platform_device_count).  --packed-bits N
 serves bit-plane-packed weights (per-shard PackedWeights on a mesh: the
 bitserial matmul runs shard_map'd on local packed bytes; see
 docs/packed_format.md).
+
+Observability (docs/observability.md): the engine emits through the
+process-global metrics registry and a flight recorder of the last
+``--flight-recorder N`` request traces.  ``--metrics-port P`` serves
+Prometheus text at ``/metrics`` (P=0 binds an ephemeral port and prints
+it); ``--trace-out F`` dumps the recorded spans as JSONL;
+``--chrome-trace-out F`` writes a chrome://tracing document.
+``--smoke`` self-scrapes once after serving, validates the exposition,
+the required metric families and the trace schema, and prints
+``OBS_SMOKE_OK`` (the CI wiring).
 """
 import argparse
 
@@ -108,6 +118,21 @@ def main():
                     help="serve bit-plane-packed weights at this precision "
                          "(0 = float); with a mesh the packed bytes shard "
                          "per-device (docs/packed_format.md)")
+    ap.add_argument("--metrics-port", type=int, default=None,
+                    help="serve Prometheus text at /metrics on this port "
+                         "(0 = ephemeral, printed at startup; omit to disable)")
+    ap.add_argument("--trace-out", default=None,
+                    help="dump the flight recorder's request traces as JSONL "
+                         "to this path after serving")
+    ap.add_argument("--chrome-trace-out", default=None,
+                    help="write a chrome://tracing / perfetto document of the "
+                         "recorded request spans to this path")
+    ap.add_argument("--flight-recorder", type=int, default=256,
+                    help="keep the last N completed request traces")
+    ap.add_argument("--smoke", action="store_true",
+                    help="after serving, scrape the metrics endpoint once, "
+                         "validate the exposition + required families + trace "
+                         "schema, and print OBS_SMOKE_OK (CI)")
     args = ap.parse_args()
     if args.chunked_prefill and not args.continuous:
         raise SystemExit("--chunked-prefill requires --continuous")
@@ -145,12 +170,24 @@ def main():
         packed_bytes = sum(pw.hbm_bytes() for pw in packed_leaves(params))
         print(f"[serve] packed weights at {args.packed_bits}b: "
               f"{packed_bytes / 1e6:.2f} MB global")
+    from ..obs import Observability, get_registry
+
+    # Wire the engine to the PROCESS-GLOBAL registry (engines default to a
+    # private one) so the scrape endpoint below sees its metrics.
+    obs = Observability(registry=get_registry(),
+                        flight_capacity=args.flight_recorder)
+    server = None
+    if args.metrics_port is not None:
+        from ..obs.export import start_metrics_server
+
+        server = start_metrics_server(obs.registry, port=args.metrics_port)
+        print(f"[obs] metrics at {server.url}")
     engine = ServeEngine(params, cfg, max_len=args.max_len, mesh=mesh,
                          continuous=args.continuous, n_slots=args.slots,
                          chunked_prefill=args.chunked_prefill, paged=args.paged,
                          block_size=args.block_size,
                          n_blocks=args.blocks or None,
-                         paged_kernel=args.paged_kernel)
+                         paged_kernel=args.paged_kernel, obs=obs)
     task = MarkovLM(vocab=cfg.vocab_size, seed=3)
     if args.mixed_lens:
         lens = [max(2, args.prompt_len * m // 2) for m in (1, 2, 3, 4)]
@@ -192,6 +229,51 @@ def main():
                   f"block_occupancy={sched.mean_block_occupancy():.2f} "
                   f"fragmentation={sched.mean_fragmentation():.2f} "
                   f"leaked_blocks={pool.n_blocks - pool.allocator.free_count}")
+    if args.trace_out:
+        n = obs.recorder.dump_jsonl(args.trace_out)
+        print(f"[obs] {n} request traces -> {args.trace_out}")
+    if args.chrome_trace_out:
+        obs.recorder.dump_chrome_trace(args.chrome_trace_out)
+        print(f"[obs] chrome trace -> {args.chrome_trace_out}")
+    if args.smoke:
+        _obs_smoke(args, obs, server)
+    if server is not None:
+        server.close()
+
+
+def _obs_smoke(args, obs, server):
+    """CI self-check: scrape once over HTTP (or render directly when no
+    endpoint was requested), validate the exposition parses, the expected
+    metric families are populated, no span leaked, and the JSONL trace
+    file (if written) passes the schema check.  Prints OBS_SMOKE_OK."""
+    from urllib.request import urlopen
+
+    from ..obs import trace as obs_trace
+    from ..obs.export import parse_prometheus, to_prometheus
+
+    if server is not None:
+        text = urlopen(server.url, timeout=10).read().decode()
+    else:
+        text = to_prometheus(obs.registry)
+    families = parse_prometheus(text)  # raises on any malformed line
+    required = ["serve_ttft_ms", "serve_requests_total"]
+    if args.continuous:
+        required += ["serve_occupancy", "serve_decode_step_ms"]
+    if args.paged:
+        required += ["serve_blocks_alloc_total", "serve_block_pool_free"]
+    missing = [f for f in required
+               if f not in families or not families[f]["samples"]]
+    if missing:
+        raise SystemExit(f"[obs] smoke FAILED: empty/missing families {missing}")
+    if obs.recorder.leaked:
+        raise SystemExit(f"[obs] smoke FAILED: leaked spans {obs.recorder.leaked}")
+    if args.trace_out:
+        n = obs_trace.validate_jsonl(args.trace_out)
+        if n < args.requests:
+            raise SystemExit(
+                f"[obs] smoke FAILED: {n} traces in {args.trace_out} for "
+                f"{args.requests} requests")
+    print(f"OBS_SMOKE_OK families={len(families)}")
 
 
 if __name__ == "__main__":

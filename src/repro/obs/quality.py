@@ -1,0 +1,179 @@
+"""Quantization-quality probe: packed model at k active planes vs full.
+
+BSQ's packed representation is bit-serial — the magnitude planes of a
+:class:`~repro.core.packing.PackedWeight` are independent summands — so
+"run the model at k active bit-planes" is a *view* of the same weights:
+keep the k most significant planes and fold the dropped LSBs' scale
+factor into the scale row (:func:`truncate_packed` is exact for the
+truncated code by construction).  The probe runs a sampled token batch
+through the full-precision packed model and through each truncated view
+and records, per plane count (and optionally per layer-group):
+
+* ``logit mse`` — mean squared error of the final logits vs full
+  precision, and
+* ``top-1 agreement`` — fraction of positions whose argmax token
+  (greedy decode) is unchanged.
+
+This is the quality-telemetry hook the serve-time precision-tier and
+bit-plane speculative-decoding ROADMAP items choose their plane counts
+with: agreement ~1.0 at k planes means a k-plane tier (or draft model)
+is nearly free.  Results land in a metrics registry
+(``serve_quality_logit_mse{planes=,group=}`` /
+``serve_quality_top1{planes=,group=}``) so they export through the same
+Prometheus/JSON path as the serving metrics, and are returned as plain
+dict rows for ``bench_serve --json``.
+
+jax / the model stack are imported lazily inside the functions so
+importing :mod:`repro.obs` stays dependency-free.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from .metrics import Registry
+
+# Layer-group partition of the packable leaves (core.packing.PACKABLE_SUFFIXES)
+LAYER_GROUPS: Dict[str, Tuple[str, ...]] = {
+    "attn": ("wq", "wk", "wv", "wo"),
+    "mlp": ("w_gate", "w_up", "w_down"),
+    "head": ("lm_head",),
+}
+
+
+def truncate_packed(pw, k: int):
+    """Keep the ``k`` most significant magnitude planes of a PackedWeight.
+
+    The truncated integer code is ``q' = (q >> (n-k)) << (n-k)`` (the
+    dropped LSB planes zeroed); re-expressed as a k-bit PackedWeight its
+    scale row absorbs the shift exactly::
+
+        W_trunc = sign * scale * q' / (2^n - 1)
+                = sign * [scale * 2^(n-k) * (2^k - 1) / (2^n - 1)] * q_k / (2^k - 1)
+
+    so ``unpack_to_float(truncate_packed(pw, k))`` equals the full
+    dequantisation with the low planes zeroed — no re-quantisation, no
+    second copy of the planes (the plane slice is a view of the same
+    bytes).  ``k >= n_bits`` returns ``pw`` unchanged.
+    """
+    import dataclasses as _dc
+
+    if k < 1:
+        raise ValueError(f"need k >= 1 active planes, got {k}")
+    n = pw.n_bits
+    if k >= n:
+        return pw
+    # planes axis is the third-from-last: (..., n_bits, K//8, N); plane b
+    # holds bit b (LSB-first), so the top-k planes are the last k.
+    planes = pw.planes[..., n - k:, :, :]
+    factor = (2.0 ** (n - k)) * (2.0 ** k - 1.0) / (2.0 ** n - 1.0)
+    return _dc.replace(pw, planes=planes, scale=pw.scale * factor, n_bits=k)
+
+
+def truncate_model_planes(params, k: int,
+                          suffixes: Optional[Sequence[str]] = None):
+    """Truncate every PackedWeight leaf of a param tree to ``k`` planes.
+
+    ``suffixes`` restricts truncation to leaves whose name's last segment
+    matches (e.g. ``LAYER_GROUPS['attn']``) — the per-layer-group probe;
+    ``None`` truncates all packed leaves.  Float leaves pass through.
+    """
+    import jax
+
+    from ..core.packing import PackedWeight
+
+    flat = jax.tree_util.tree_flatten_with_path(
+        params, is_leaf=lambda x: isinstance(x, PackedWeight))[0]
+    treedef = jax.tree_util.tree_structure(
+        params, is_leaf=lambda x: isinstance(x, PackedWeight))
+    leaves = []
+    for path, leaf in flat:
+        if isinstance(leaf, PackedWeight):
+            name = str(getattr(path[-1], "key", getattr(path[-1], "idx", path[-1])))
+            name = name.strip(".'\"").lower()
+            if suffixes is None or name in suffixes:
+                leaf = truncate_packed(leaf, k)
+        leaves.append(leaf)
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+@dataclasses.dataclass
+class QualityRow:
+    planes: int
+    group: str  # "all" or a LAYER_GROUPS key
+    logit_mse: float
+    top1_agreement: float
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def quality_probe(params, cfg, tokens, plane_counts: Optional[Sequence[int]] = None,
+                  groups: Sequence[str] = ("all",),
+                  registry: Optional[Registry] = None) -> List[QualityRow]:
+    """Probe a packed model's logit quality at reduced active planes.
+
+    ``tokens``: an (B, S) int32 token batch (e.g. the bench workload's
+    prompts) — the probe compares full-sequence logits, which covers both
+    the prefill and decode compute paths (same matmuls, same weights).
+    ``plane_counts`` defaults to every count from 1 to the model's max
+    ``n_bits``.  ``groups``: "all" truncates every packed leaf; a
+    :data:`LAYER_GROUPS` key truncates only that group (isolating which
+    layers' planes the quality rides on).
+
+    Returns rows sorted by (group, planes); with ``registry``, also sets
+    ``serve_quality_logit_mse`` / ``serve_quality_top1`` gauges labeled
+    ``{planes, group}``.
+    """
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from ..core.packing import packed_leaves
+    from ..models import transformer
+
+    packed = packed_leaves(params)
+    if not packed:
+        raise ValueError("quality_probe needs a packed model "
+                         "(no PackedWeight leaves found)")
+    max_bits = max(pw.n_bits for pw in packed)
+    if plane_counts is None:
+        plane_counts = range(1, max_bits + 1)
+    plane_counts = sorted(set(int(k) for k in plane_counts))
+    if any(k < 1 for k in plane_counts):
+        raise ValueError(f"plane_counts must be >= 1, got {plane_counts}")
+    for g in groups:
+        if g != "all" and g not in LAYER_GROUPS:
+            raise ValueError(f"unknown layer group {g!r} "
+                             f"(want 'all' or one of {sorted(LAYER_GROUPS)})")
+
+    toks = jnp.asarray(np.asarray(tokens, np.int32))
+    fwd = jax.jit(lambda p: transformer.forward(p, {"tokens": toks}, cfg)[0])
+    full_logits = np.asarray(fwd(params), np.float32)[..., : cfg.vocab_size]
+    full_top1 = full_logits.argmax(axis=-1)
+
+    rows: List[QualityRow] = []
+    g_mse = g_top1 = None
+    if registry is not None:
+        g_mse = registry.gauge(
+            "serve_quality_logit_mse",
+            "logit MSE vs full-precision packed weights at k active planes",
+            labels=("planes", "group"))
+        g_top1 = registry.gauge(
+            "serve_quality_top1",
+            "greedy top-1 agreement vs full precision at k active planes",
+            labels=("planes", "group"))
+    for group in groups:
+        suffixes = None if group == "all" else LAYER_GROUPS[group]
+        for k in plane_counts:
+            probe_params = truncate_model_planes(params, k, suffixes)
+            logits = np.asarray(fwd(probe_params), np.float32)[..., : cfg.vocab_size]
+            mse = float(np.mean((logits - full_logits) ** 2))
+            top1 = float(np.mean(logits.argmax(axis=-1) == full_top1))
+            rows.append(QualityRow(planes=k, group=group, logit_mse=mse,
+                                   top1_agreement=top1))
+            if registry is not None:
+                g_mse.labels(planes=str(k), group=group).set(mse)
+                g_top1.labels(planes=str(k), group=group).set(top1)
+    rows.sort(key=lambda r: (r.group, r.planes))
+    return rows

@@ -63,6 +63,8 @@ from ..configs.base import ModelConfig
 from ..dist import sharding as dist_sharding
 from ..models import transformer
 from ..models.common import packed_shard_mesh
+from ..obs import Observability
+from ..obs import trace as obs_trace
 
 
 @dataclasses.dataclass
@@ -77,6 +79,8 @@ class Request:
 class Result:
     uid: int
     tokens: np.ndarray
+    # TTFT under the one definition every path shares: the request's
+    # admitted -> first_token span (obs.trace.RequestTrace.ttft_ms).
     prefill_ms: float
     decode_ms_per_tok: float
 
@@ -87,11 +91,17 @@ class ServeEngine:
                  policy: Optional["SchedulerPolicy"] = None,
                  chunked_prefill: bool = False, paged: bool = False,
                  block_size: int = 32, n_blocks: Optional[int] = None,
-                 paged_kernel: bool = False):
+                 paged_kernel: bool = False,
+                 obs: Optional[Observability] = None):
         self.cfg = cfg
         self.max_len = max_len
         self.key = jax.random.PRNGKey(seed)
         self.mesh = mesh
+        # Observability bundle (metrics registry + flight recorder).  The
+        # default is a FRESH bundle per engine so engines never share
+        # telemetry; launch.serve passes one wired to the process-global
+        # registry so its scrape endpoint sees this engine's metrics.
+        self.obs = obs if obs is not None else Observability()
         # Model-parallel packed serving: annotate PackedWeights with their
         # mesh axes BEFORE placement, and trace every program under
         # packed_shard_mesh so the bitserial matmul runs shard_map'd on
@@ -208,10 +218,19 @@ class ServeEngine:
         by prompt length and ignore arrivals (offline semantics)."""
         if self.scheduler is not None:
             return self.scheduler.run(requests, arrival_steps)
-        results = []
-        for plen, bucket in self._buckets(requests).items():
-            results.extend(self._run_bucket(plen, bucket))
-        return results
+        rec = self.obs.recorder
+        for r in requests:
+            rec.begin(r.uid)
+        try:
+            results = []
+            for plen, bucket in self._buckets(requests).items():
+                results.extend(self._run_bucket(plen, bucket))
+            return results
+        finally:
+            # A failed bucket must not leak the remaining spans.
+            for r in requests:
+                if r.uid in rec.active:
+                    rec.finish(r.uid, obs_trace.ABANDONED)
 
     def stream(self, requests: List[Request],
                arrival_steps: Optional[Sequence[int]] = None):
@@ -223,15 +242,30 @@ class ServeEngine:
 
     def _run_bucket(self, plen: int, bucket: List[Request]) -> List[Result]:
         B = len(bucket)
+        rec = self.obs.recorder
+        h_ttft = self.obs.registry.histogram(
+            "serve_ttft_ms",
+            "time to first token (admitted -> first_token span, ms)")
+        c_req = self.obs.registry.counter(
+            "serve_requests_total", "requests retired, by terminal outcome",
+            labels=("outcome",))
         prompts = self._place_batch(jnp.asarray(np.stack([r.tokens for r in bucket])))
         temps = jnp.asarray([r.temperature for r in bucket], jnp.float32)
         any_hot = any(r.temperature > 0 for r in bucket)
         max_new = max(r.max_new for r in bucket)
-        t0 = time.perf_counter()
+        # The bucket's prefill dispatch is every member's admission.
+        t0 = obs_trace.now()
+        for r in bucket:
+            rec.event(r.uid, obs_trace.ADMITTED, ts=t0, batch=B)
         logits, cache = self._prefill_fn(B)(self.params, {"tokens": prompts})
-        jax.block_until_ready(logits)
-        prefill_ms = (time.perf_counter() - t0) * 1e3
         tok = self._sample(logits, temps, any_hot)
+        jax.block_until_ready(tok)
+        # TTFT = admitted -> first SAMPLED token, matching the continuous
+        # scheduler (the pre-obs bucketed path stopped its clock before
+        # sampling — the drift tests/test_obs.py now pins away).
+        t_first = obs_trace.now()
+        for r in bucket:
+            rec.event(r.uid, obs_trace.FIRST_TOKEN, ts=t_first)
         out_toks = [tok]
         t1 = time.perf_counter()
         for t in range(max_new - 1):
@@ -241,10 +275,13 @@ class ServeEngine:
         jax.block_until_ready(tok)
         decode_ms = (time.perf_counter() - t1) * 1e3 / max(max_new - 1, 1)
         gen = np.asarray(jnp.stack(out_toks, axis=1))
-        return [
-            Result(r.uid, gen[i, : r.max_new], prefill_ms, decode_ms)
-            for i, r in enumerate(bucket)
-        ]
+        results = []
+        for i, r in enumerate(bucket):
+            tr = rec.finish(r.uid, obs_trace.FINISHED, n_tokens=r.max_new)
+            c_req.labels(outcome="finished").inc()
+            h_ttft.observe(tr.ttft_ms())
+            results.append(Result(r.uid, gen[i, : r.max_new], tr.ttft_ms(), decode_ms))
+        return results
 
 
 def dequantize_packed_params(template, packed: Dict[str, "object"], floats: Dict[str, jax.Array]):

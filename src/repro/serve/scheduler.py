@@ -58,10 +58,22 @@ engine.
 
 Time is measured in scheduler steps (one pooled decode = one step);
 arrival times for simulated workloads are expressed on that clock.
-``Result.prefill_ms`` reports TTFT: wall time from the admission burst
-that dequeued the request to its first sampled token (for legacy
-admission that includes the serialisation behind earlier batch-1
-prefills in the same burst — exactly the cost multi-admit removes).
+
+**Observability**: the scheduler emits through the engine's
+:class:`repro.obs.Observability` bundle instead of ad-hoc lists.  Every
+request gets a trace span (``enqueued -> admitted(slot[, blocks]) ->
+prefill_chunk* -> first_token -> decode_step* ->
+finished|abandoned|evicted``) in the flight recorder, and the per-step
+telemetry lands in bounded-reservoir histograms
+(``serve_occupancy`` / ``serve_decode_step_ms`` / ``serve_ttft_ms`` /
+the paged block gauges — capacity ``SchedulerPolicy.telemetry_capacity``)
+so a long-lived server holds O(capacity) memory.  ``Result.prefill_ms``
+reports TTFT as defined by :meth:`repro.obs.trace.RequestTrace.ttft_ms`
+— the ``admitted`` event (the wall clock at the admission burst that
+dequeued the request, so legacy admission includes the serialisation
+behind earlier batch-1 prefills in the same burst — exactly the cost
+multi-admit removes) to the ``first_token`` event.  The metric
+catalogue and span schema live in docs/observability.md.
 """
 from __future__ import annotations
 
@@ -77,6 +89,8 @@ import numpy as np
 from ..dist import sharding as dist_sharding
 from ..models import transformer
 from ..models.common import packed_shard_mesh, paged_shard_mesh
+from ..obs import metrics as obs_metrics
+from ..obs import trace as obs_trace
 from .slots import SlotPool, reset_recurrent_slots, scatter_slot
 
 
@@ -106,6 +120,13 @@ class SchedulerPolicy:
     # each lane's full pool view — per-step attention HBM reads scale
     # with live tokens.  The gather path stays the conformance reference.
     paged_kernel: bool = False
+    # Bounded-telemetry capacity: per-step observations (occupancy,
+    # decode-step ms, block usage, ...) live in fixed-size reservoirs of
+    # this many entries (obs.metrics.Histogram), so a long-lived server
+    # holds O(capacity) telemetry memory.  The default comfortably holds
+    # every bench/CI workload, so percentiles match the unbounded lists
+    # this replaced bit-for-bit there.
+    telemetry_capacity: int = obs_metrics.DEFAULT_HISTOGRAM_CAPACITY
 
     def __post_init__(self):
         if self.min_admit > 1 and self.max_wait <= 0:
@@ -159,7 +180,7 @@ class ContinuousScheduler:
             engine.cfg, policy.n_slots, engine.max_len, mesh=engine.mesh,
             cache_dtype=jnp.dtype(engine.cfg.kv_cache_dtype),
             paged=policy.paged, block_size=policy.block_size,
-            n_blocks=policy.n_blocks,
+            n_blocks=policy.n_blocks, registry=engine.obs.registry,
         )
         cfg = engine.cfg
         # ONE pooled decode program: pos/act are (n_slots,) vectors, so the
@@ -213,22 +234,69 @@ class ContinuousScheduler:
                 {"tok": 0, "start": 0, "nvalid": 0, "slots": 0}, engine.mesh
             )
             self._chunk_shardings = dist_sharding.tree_shardings(engine.mesh, specs)
-        # bench/telemetry: occupancy per step, decode-step wall times,
-        # admission burst sizes, chunk dispatch counts
-        self.occupancy_trace: List[int] = []
-        self.decode_ms_total = 0.0
-        self.decode_steps = 0
-        self.decode_ms_trace: List[float] = []  # per-step (TPOT percentiles)
-        self.admit_bursts: List[int] = []
-        self.prefill_chunks = 0
+        # Telemetry: bounded-reservoir histograms in the engine's obs
+        # registry (scraped by launch.serve --metrics-port, snapshotted by
+        # bench_serve).  The legacy trace attributes below alias the same
+        # Histogram objects, so old call sites keep reading the numbers.
+        self.obs = engine.obs
+        reg = self.obs.registry
+        tcap = policy.telemetry_capacity
+        self._h_occ = reg.histogram(
+            "serve_occupancy", "live decode lanes per pooled decode step",
+            capacity=tcap)
+        self._h_step = reg.histogram(
+            "serve_decode_step_ms", "pooled decode step wall time (ms)",
+            capacity=tcap)
+        self._h_ttft = reg.histogram(
+            "serve_ttft_ms",
+            "time to first token (admitted -> first_token span, ms)",
+            capacity=tcap)
+        self._h_burst = reg.histogram(
+            "serve_admit_burst", "requests admitted per admission burst",
+            capacity=tcap)
+        self._c_req = reg.counter(
+            "serve_requests_total", "requests retired, by terminal outcome",
+            labels=("outcome",))
+        self._c_blocked = reg.counter(
+            "serve_admit_blocked_total",
+            "scheduler steps where a queued request could not be placed")
+        self._c_chunks = reg.counter(
+            "serve_prefill_chunks_total", "prefill_chunk dispatches")
+        self._c_steps = reg.counter(
+            "serve_decode_steps_total", "pooled decode step dispatches")
+        self._g_queue = reg.gauge(
+            "serve_queue_depth", "requests waiting for a lane")
+        self._g_progs = reg.gauge(
+            "serve_compiled_programs", "compiled XLA programs by stage",
+            labels=("kind",))
         # paged telemetry: per decode step, pool blocks in use and live
         # cache rows (occupancy = used/n_blocks; fragmentation = wasted
         # tail rows of partially-filled blocks), and the blocks the
         # decode attention actually reads (the paged kernel's HBM
         # traffic; the gather path reads blocks_per_lane per live lane)
-        self.block_used_trace: List[int] = []
-        self.live_rows_trace: List[int] = []
-        self.attn_read_blocks_trace: List[int] = []
+        self._h_blocks = reg.histogram(
+            "serve_blocks_used", "pool blocks in use per decode step",
+            capacity=tcap)
+        self._h_rows = reg.histogram(
+            "serve_live_rows", "live KV cache rows per decode step",
+            capacity=tcap)
+        self._h_frag = reg.histogram(
+            "serve_fragmentation",
+            "wasted fraction of allocated block rows per decode step",
+            capacity=tcap)
+        self._h_attn = reg.histogram(
+            "serve_attn_read_blocks",
+            "pool blocks read by decode attention per step", capacity=tcap)
+        # Legacy names (bench/tests): the same bounded reservoirs.
+        self.occupancy_trace = self._h_occ
+        self.decode_ms_trace = self._h_step
+        self.block_used_trace = self._h_blocks
+        self.live_rows_trace = self._h_rows
+        self.attn_read_blocks_trace = self._h_attn
+        self.admit_bursts = obs_metrics.Ring(tcap)
+        self.decode_ms_total = 0.0
+        self.decode_steps = 0
+        self.prefill_chunks = 0
 
     # -- jitted programs ---------------------------------------------------
     def _prefill_fn(self, plen: int) -> Callable:
@@ -346,7 +414,10 @@ class ContinuousScheduler:
         # was O(n_slots^2) per burst and would mis-place if a multi-admit
         # reordered frees mid-loop.
         free = self.pool.free_slots()
-        if not queue or not free:
+        if not queue:
+            return
+        if not free:
+            self._c_blocked.inc()  # queued work, no lane
             return
         if self.policy.paged:
             pairs = self._paged_assign(queue, free)
@@ -354,6 +425,7 @@ class ContinuousScheduler:
             pairs = list(zip(list(queue), free))
         placeable = len(pairs)
         if placeable == 0:
+            self._c_blocked.inc()  # lanes free, but no shard fits the head
             return
         oldest_wait = now - (queue[0].enqueued_at if queue[0].enqueued_at is not None else now)
         if placeable < self.policy.min_admit and oldest_wait < self.policy.max_wait:
@@ -361,15 +433,22 @@ class ContinuousScheduler:
         batch = [queue.popleft() for _ in range(placeable)]
         slots = [lane for _, lane in pairs]
         self.admit_bursts.append(placeable)
+        self._h_burst.observe(placeable)
         if self.policy.chunked_prefill:
             self._admit_chunked(batch, slots, now)
         else:
             self._admit_legacy(batch, slots, now)
 
     def _admit_legacy(self, batch: List[_Pending], slots: List[int], now: int):
-        wall = time.perf_counter()
+        # Every request's ADMITTED span starts at the burst wall clock, so
+        # TTFT includes the serialisation behind earlier batch-1 prefills
+        # in the same burst (the cost multi-admit removes).
+        wall = obs_trace.now()
+        rec = self.obs.recorder
         for pend, slot in zip(batch, slots):
             req = pend.request
+            tr = rec.get(req.uid)
+            tr.event(obs_trace.ADMITTED, ts=wall, slot=slot)
             plen = len(req.tokens)
             toks = self.engine._place_batch(
                 jnp.asarray(np.asarray(req.tokens, np.int32)[None, :])
@@ -383,7 +462,9 @@ class ContinuousScheduler:
                 req.temperature > 0,
             )
             first_host = int(np.asarray(first)[0])
-            ttft_ms = (time.perf_counter() - wall) * 1e3
+            tr.event(obs_trace.FIRST_TOKEN)
+            ttft_ms = tr.ttft_ms()
+            self._h_ttft.observe(ttft_ms)
             self.pool.occupy(
                 slot, req.uid, first_host, plen, req.max_new,
                 req.temperature, ttft_ms, now,
@@ -392,7 +473,8 @@ class ContinuousScheduler:
     def _admit_chunked(self, batch: List[_Pending], slots: List[int], now: int):
         """Fused multi-admit: every placeable request claims its lane in one
         device dispatch; the prompts then stream through chunk steps."""
-        wall = time.perf_counter()
+        wall = obs_trace.now()
+        rec = self.obs.recorder
         slots_vec = np.full((self.pool.n_slots,), self.pool.n_slots, np.int32)
         slots_vec[: len(slots)] = slots
         self.pool.cache = self._reset_slots(
@@ -403,6 +485,10 @@ class ContinuousScheduler:
             self.pool.admit(
                 slot, req.uid, req.tokens, req.max_new, req.temperature, now, wall
             )
+            attrs = {"slot": slot}
+            if self.policy.paged:
+                attrs["blocks"] = self.pool.slots[slot].committed
+            rec.get(req.uid).event(obs_trace.ADMITTED, ts=wall, **attrs)
 
     # -- chunked prefill ---------------------------------------------------
     def _pick_chunk(self, max_remaining: int) -> int:
@@ -460,11 +546,17 @@ class ContinuousScheduler:
             sampled = self.engine._sample(last_logits, pool.temps, pool.any_hot)
             sampled_host = np.asarray(sampled)
         self.prefill_chunks += 1
+        self._c_chunks.inc()
+        rec = self.obs.recorder
         for i in lanes:
             s = pool.slots[i]
+            tr = rec.get(s.uid)
+            tr.event(obs_trace.PREFILL_CHUNK, size=int(nval[i]))
             s.filled += int(nval[i])
             if s.filled == len(s.prompt):
-                ttft_ms = (time.perf_counter() - s.admit_wall) * 1e3
+                tr.event(obs_trace.FIRST_TOKEN)
+                ttft_ms = tr.ttft_ms()
+                self._h_ttft.observe(ttft_ms)
                 pool.start_decode(i, int(sampled_host[i]), ttft_ms)
 
     # -- main loop ---------------------------------------------------------
@@ -527,13 +619,16 @@ class ContinuousScheduler:
         incoming = deque(incoming)
         queue: Deque[_Pending] = deque()
         pool = self.pool
+        rec = self.obs.recorder
         now = 0
         try:
             while incoming or queue or pool.n_active:
                 while incoming and incoming[0].arrival <= now:
                     pend = incoming.popleft()
                     pend.enqueued_at = now
+                    rec.begin(pend.request.uid, arrival=pend.arrival)
                     queue.append(pend)
+                self._g_queue.set(len(queue))
                 self._admit(queue, now)
                 # Evict lanes whose request finished at admission
                 # (legacy max_new == 1).
@@ -561,7 +656,7 @@ class ContinuousScheduler:
                         # decode lanes' live blocks (== the paged kernel's
                         # per-step HBM traffic; the gather path reads
                         # blocks_per_lane per live lane regardless)
-                        self.attn_read_blocks_trace.append(sum(
+                        self._h_attn.observe(sum(
                             len(s.blocks) for s in pool.slots
                             if s.uid is not None and s.phase == "decode"
                         ))
@@ -574,15 +669,24 @@ class ContinuousScheduler:
                     sampled_host = np.asarray(sampled)  # one host sync per step (streaming)
                     step_ms = (time.perf_counter() - t0) * 1e3
                     self.decode_ms_total += step_ms
-                    self.decode_ms_trace.append(step_ms)
+                    self._h_step.observe(step_ms)
                     self.decode_steps += 1
+                    self._c_steps.inc()
                     active = pool.decode_mask  # lanes live during this decode step
                     pool.tok = pool._pin("tok", sampled[:, None])
                     pool.advance(sampled_host, active)
-                    self.occupancy_trace.append(int(active.sum()))
+                    self._h_occ.observe(int(active.sum()))
+                    for i, s in enumerate(pool.slots):
+                        if active[i] and s.uid is not None:
+                            rec.event(s.uid, obs_trace.DECODE_STEP)
                     if self.policy.paged:
-                        self.block_used_trace.append(pool.allocator.used_count)
-                        self.live_rows_trace.append(pool.live_rows())
+                        used = pool.allocator.used_count
+                        live = pool.live_rows()
+                        self._h_blocks.observe(used)
+                        self._h_rows.observe(live)
+                        if used:
+                            self._h_frag.observe(
+                                1.0 - live / (used * pool.block_size))
                     for ev in self._finished():
                         yield ev
                 if not worked and incoming and not queue:
@@ -597,19 +701,37 @@ class ContinuousScheduler:
             # mid-PREFILL) must not leave ghost lanes: free every live lane —
             # including half-prefilled ones, whose staged prompt state dies
             # with the SlotState — so the shared pool is clean for the next
-            # call.
+            # call.  Every open span gets its terminal here: a live lane's
+            # request is EVICTED (its lane is torn down mid-flight), a
+            # request still queued is ABANDONED (never admitted) — so the
+            # flight recorder never leaks a span, abandoned or not.
             for i, s in enumerate(pool.slots):
                 if s.uid is not None:
+                    rec.finish(s.uid, obs_trace.EVICTED,
+                               phase=s.phase, filled=s.filled)
+                    self._c_req.labels(outcome="evicted").inc()
                     pool.evict(i)
+            for pend in queue:
+                if pend.request.uid in rec.active:
+                    rec.finish(pend.request.uid, obs_trace.ABANDONED)
+                    self._c_req.labels(outcome="abandoned").inc()
+            self._g_queue.set(0)
+            self._g_progs.labels(kind="decode").set(self.compiled_decode_programs())
+            self._g_progs.labels(kind="prefill").set(self.compiled_prefill_programs())
+            self._g_progs.labels(kind="admit").set(self.compiled_admit_programs())
 
     def _finished(self):
         from .engine import Result
 
         pool = self.pool
+        rec = self.obs.recorder
         per_tok = self.decode_ms_total / max(self.decode_steps, 1)
         for i, s in enumerate(pool.slots):
             if s.uid is not None and s.phase == "decode" and s.remaining <= 0:
                 done = pool.evict(i)
+                rec.finish(done.uid, obs_trace.FINISHED,
+                           n_tokens=len(done.tokens))
+                self._c_req.labels(outcome="finished").inc()
                 yield Result(
                     uid=done.uid,
                     tokens=np.asarray(done.tokens, np.int32),
@@ -625,24 +747,25 @@ class ContinuousScheduler:
         return list(self.stream(requests, arrival_steps))
 
     # -- telemetry ---------------------------------------------------------
+    def reset_telemetry(self) -> None:
+        """Zero the obs bundle (registry + flight recorder) and the scalar
+        counters (bench warmup).  Compiled-program caches survive."""
+        self.obs.reset()
+        self.admit_bursts.clear()
+        self.prefill_chunks = 0
+        self.decode_ms_total = 0.0
+        self.decode_steps = 0
+
     def mean_occupancy(self) -> float:
         """Mean fraction of lanes live per decode step (bench metric)."""
-        if not self.occupancy_trace:
-            return 0.0
-        return float(np.mean(self.occupancy_trace)) / self.pool.n_slots
+        return self._h_occ.mean() / self.pool.n_slots
 
     def mean_block_occupancy(self) -> float:
         """Mean fraction of pool blocks in use per decode step (paged)."""
-        if not self.block_used_trace:
-            return 0.0
-        return float(np.mean(self.block_used_trace)) / self.pool.n_blocks
+        return self._h_blocks.mean() / self.pool.n_blocks if self.pool.n_blocks else 0.0
 
     def mean_fragmentation(self) -> float:
         """Mean wasted fraction of allocated block rows (paged): the tail
         rows of each lane's last, partially-filled block.  Bounded above
         by ``block_size / (block_size + 1)``; small blocks waste less."""
-        bs = self.pool.block_size
-        fr = [1.0 - live / (used * bs)
-              for used, live in zip(self.block_used_trace, self.live_rows_trace)
-              if used]
-        return float(np.mean(fr)) if fr else 0.0
+        return self._h_frag.mean()

@@ -98,7 +98,8 @@ class BlockAllocator:
     ``n_shards=1`` is exactly the unsharded allocator.
     """
 
-    def __init__(self, n_blocks: int, block_size: int, n_shards: int = 1):
+    def __init__(self, n_blocks: int, block_size: int, n_shards: int = 1,
+                 registry=None, labels: Optional[dict] = None):
         if n_blocks < 1 or block_size < 1:
             raise ValueError(f"need n_blocks >= 1 and block_size >= 1, got "
                              f"{n_blocks}, {block_size}")
@@ -116,6 +117,33 @@ class BlockAllocator:
         ]
         self._owner = {}  # live block id -> owner tag
         self._committed = [0] * n_shards  # blocks promised per shard (worst case)
+        # Metrics (obs.metrics.Registry; optional so bare allocators stay
+        # dependency-free): alloc/free counters and free/committed gauges,
+        # one child per shard.  ``labels`` carries the process's mesh
+        # identity (dist.sharding.mesh_labels) so a scraped exposition
+        # says which topology the shard numbers belong to.  Children are
+        # resolved once here — the alloc/free hot path touches no dicts.
+        self._m_alloc = self._m_freed = self._g_free = self._g_commit = None
+        if registry is not None:
+            extra = dict(labels or {})
+            names = ("shard",) + tuple(sorted(extra))
+            mk = lambda fam: [  # noqa: E731 — one child per shard
+                fam.labels(shard=str(s), **extra) for s in range(n_shards)
+            ]
+            self._m_alloc = mk(registry.counter(
+                "serve_blocks_alloc_total", "KV pool blocks granted",
+                labels=names))
+            self._m_freed = mk(registry.counter(
+                "serve_blocks_freed_total", "KV pool blocks returned",
+                labels=names))
+            self._g_free = mk(registry.gauge(
+                "serve_block_pool_free", "free KV pool blocks", labels=names))
+            self._g_commit = mk(registry.gauge(
+                "serve_blocks_committed",
+                "KV pool blocks committed (worst-case reservations)",
+                labels=names))
+            for s in range(n_shards):
+                self._g_free[s].set(len(self._free[s]))
 
     @property
     def committed(self) -> int:
@@ -153,6 +181,9 @@ class BlockAllocator:
         out = [self._free[shard].pop() for _ in range(k)]
         for b in out:
             self._owner[b] = owner
+        if self._m_alloc is not None and k:
+            self._m_alloc[shard].inc(k)
+            self._g_free[shard].set(len(self._free[shard]))
         return out
 
     def free(self, blocks: List[int]) -> None:
@@ -160,7 +191,11 @@ class BlockAllocator:
             if b not in self._owner:
                 raise ValueError(f"block {b} is not live (double free?)")
             del self._owner[b]
-            self._free[self.shard_of(b)].append(b)
+            sh = self.shard_of(b)
+            self._free[sh].append(b)
+            if self._m_freed is not None:
+                self._m_freed[sh].inc()
+                self._g_free[sh].set(len(self._free[sh]))
 
     def reserve(self, k: int, shard: int = 0) -> bool:
         """Commit ``k`` blocks of ``shard``'s future capacity; False if
@@ -168,6 +203,8 @@ class BlockAllocator:
         if self._committed[shard] + k > self.shard_blocks:
             return False
         self._committed[shard] += k
+        if self._g_commit is not None:
+            self._g_commit[shard].set(self._committed[shard])
         return True
 
     def release(self, k: int, shard: int = 0) -> None:
@@ -175,6 +212,8 @@ class BlockAllocator:
             raise ValueError(
                 f"release({k}) > committed {self._committed[shard]} in shard {shard}")
         self._committed[shard] -= k
+        if self._g_commit is not None:
+            self._g_commit[shard].set(self._committed[shard])
 
 
 def _is_blocks_leaf(path) -> bool:
@@ -275,13 +314,18 @@ class SlotPool:
 
     def __init__(self, cfg: ModelConfig, n_slots: int, max_len: int, mesh=None,
                  cache_dtype=jnp.bfloat16, paged: bool = False,
-                 block_size: int = 32, n_blocks: Optional[int] = None):
+                 block_size: int = 32, n_blocks: Optional[int] = None,
+                 registry=None):
         self.cfg = cfg
         self.n_slots = n_slots
         self.max_len = max_len
         self.mesh = mesh
         self.cache_dtype = cache_dtype
         self.paged = paged
+        # Allocator metrics land in ``registry`` (obs.metrics.Registry or
+        # None) stamped with this process's mesh identity.
+        self.registry = registry
+        self._metric_labels = dist_sharding.mesh_labels(mesh)
         self.block_size = block_size if paged else None
         self.blocks_per_lane = _ceil_div(max_len, block_size) if paged else None
         if paged:
@@ -297,7 +341,8 @@ class SlotPool:
             self.table_shards = dist_sharding.table_shards(
                 mesh, n_slots, self.n_blocks)
             self.allocator = BlockAllocator(
-                self.n_blocks, block_size, n_shards=self.table_shards)
+                self.n_blocks, block_size, n_shards=self.table_shards,
+                registry=registry, labels=self._metric_labels)
         else:
             self.n_blocks = None
             self.table_shards = 1
@@ -540,7 +585,8 @@ class SlotPool:
         self.act = jnp.zeros_like(self.act)
         if self.paged:
             self.allocator = BlockAllocator(
-                self.n_blocks, self.block_size, n_shards=self.table_shards)
+                self.n_blocks, self.block_size, n_shards=self.table_shards,
+                registry=self.registry, labels=self._metric_labels)
             self.block_table = jnp.zeros_like(self.block_table)
         if self.shardings is not None:
             self.pos = jax.device_put(self.pos, self.shardings["pos"])

@@ -28,6 +28,7 @@ import pytest
 
 from repro.configs import reduced_config
 from repro.models import init_params
+from repro.obs import trace as obs_trace
 from repro.serve import BlockAllocator, Request, SchedulerPolicy, ServeEngine
 from repro.serve.slots import SlotPool
 
@@ -108,6 +109,20 @@ def _assert_zero_leaks(engine):
     assert pool.n_active == 0
 
 
+def _assert_span_accounting(engine):
+    """Flight-recorder invariants, cumulative across every schedule this
+    module-scoped engine has served: no open (leaked) spans once drained,
+    every retired trace carries EXACTLY one terminal event, and a trace
+    that finished normally passed through admitted -> first_token."""
+    rec = engine.obs.recorder
+    assert rec.leaked == [], rec.leaked
+    for tr in rec.traces():
+        assert tr.terminal_count() == 1, (tr.uid, [e.kind for e in tr.events])
+        if tr.terminal.kind == obs_trace.FINISHED:
+            assert tr.find(obs_trace.ADMITTED) is not None, tr.uid
+            assert tr.find(obs_trace.FIRST_TOKEN) is not None, tr.uid
+
+
 @pytest.mark.parametrize("seed", range(N_SEEDS))
 def test_randomized_schedule_conformance(seed, granite, oracle, unpaged, paged,
                                          paged_kernel):
@@ -123,18 +138,21 @@ def test_randomized_schedule_conformance(seed, granite, oracle, unpaged, paged,
     assert len(out_u) == len(reqs)
     for r in out_u:
         np.testing.assert_array_equal(ref[r.uid], r.tokens)
+    _assert_span_accounting(unpaged)
 
     out_p = paged.generate(reqs, arrival_steps=arrivals)
     assert len(out_p) == len(reqs)
     for r in out_p:
         np.testing.assert_array_equal(ref[r.uid], r.tokens)
     _assert_zero_leaks(paged)
+    _assert_span_accounting(paged)
 
     out_k = paged_kernel.generate(reqs, arrival_steps=arrivals)
     assert len(out_k) == len(reqs)
     for r in out_k:
         np.testing.assert_array_equal(ref[r.uid], r.tokens)
     _assert_zero_leaks(paged_kernel)
+    _assert_span_accounting(paged_kernel)
 
     if seed % 5 == 0:
         # mid-stream abandon (client disconnect, lanes possibly
@@ -145,6 +163,11 @@ def test_randomized_schedule_conformance(seed, granite, oracle, unpaged, paged,
             next(it)
         it.close()
         _assert_zero_leaks(paged)
+        # teardown must have retired every open span with an
+        # evicted/abandoned terminal — never silently dropped
+        _assert_span_accounting(paged)
+        kinds = {t.terminal.kind for t in paged.obs.recorder.traces()}
+        assert kinds & {obs_trace.EVICTED, obs_trace.ABANDONED, obs_trace.FINISHED}
 
 
 @pytest.mark.parametrize("arch", ["gemma3-12b", "recurrentgemma-9b", "mamba2-130m"])
