@@ -398,6 +398,26 @@ def table_shards(mesh, n_slots: int, n_blocks: int) -> int:
     return _axis_size(mesh, spec[0])
 
 
+def lane_shard(slot: int, n_slots: int, n_shards: int) -> int:
+    """Which table shard lane ``slot`` belongs to: contiguous lane
+    groups, matching how shard_map splits the lane axis (shard s owns
+    lanes ``[ceil(s*n_slots/n_shards), ceil((s+1)*n_slots/n_shards))``).
+    This is the layout contract the serve-side allocator and the
+    scheduler's shard-aware admission/victim selection both lean on —
+    it lives here so the mapping can never drift from
+    :func:`block_table_spec`'s split."""
+    return slot * n_shards // n_slots
+
+
+def shard_lanes(shard: int, n_slots: int, n_shards: int) -> range:
+    """Inverse of :func:`lane_shard`: the contiguous lane range shard
+    ``shard`` owns.  Used by shard-aware victim selection — a lane can
+    only relieve block pressure in its own shard's pool range."""
+    lo = -(-shard * n_slots // n_shards)
+    hi = -(-(shard + 1) * n_slots // n_shards)
+    return range(lo, hi)
+
+
 def block_pool_specs(pool_state: PyTree, mesh, n_blocks: int, block_size: int) -> PyTree:
     """Specs for a PAGED slot pool (serve/slots.py with ``paged=True``).
 

@@ -34,6 +34,13 @@ Scheduling modes:
   per-step attention HBM reads scale with live tokens instead of the
   pool's logical capacity; without it the decode step gathers each
   lane's full pool view (the conformance reference path).
+* ``--overcommit F`` (with ``--paged``): optimistic admission — commit
+  up to ``F x`` the pool's physical blocks (most requests finish before
+  their worst case); under pressure the scheduler preempts a victim
+  lane and re-enqueues it for recompute re-prefill, token-identically.
+  ``--tier {throughput,latency,mixed}`` assigns request SLO classes:
+  latency-tier requests are admitted first and preempted last (mixed
+  marks every 4th request latency).
 
 With --data-parallel/--model-parallel the engine serves on a real
 ("data", "model") mesh: params, the KV cache and the slot pool are
@@ -109,6 +116,17 @@ def main():
                          "gathering each lane's full pool view — per-step "
                          "attention HBM reads scale with live tokens (with "
                          "--paged)")
+    ap.add_argument("--overcommit", type=float, default=1.0,
+                    help="admit against this multiple of the pool's physical "
+                         "blocks (with --paged); > 1.0 enables preemption: "
+                         "under pressure a victim lane's blocks are reclaimed "
+                         "and the request re-prefills prompt + generated "
+                         "tokens (token-identical recompute swap)")
+    ap.add_argument("--tier", choices=("throughput", "latency", "mixed"),
+                    default="throughput",
+                    help="SLO class stamped on requests: latency-tier is "
+                         "admitted first and preempted last; 'mixed' marks "
+                         "every 4th request latency-tier")
     ap.add_argument("--arrival-rate", type=float, default=0.0,
                     help="simulate Poisson arrivals at this mean rate per decode "
                          "step (continuous mode; 0 = all requests at step 0)")
@@ -140,6 +158,9 @@ def main():
         raise SystemExit("--paged requires --continuous")
     if args.paged_kernel and not args.paged:
         raise SystemExit("--paged-kernel requires --paged")
+    if args.overcommit != 1.0 and not args.paged:
+        raise SystemExit("--overcommit requires --paged (only the block pool "
+                         "has commitment accounting)")
 
     from ..configs import reduced_config
     from ..data import MarkovLM
@@ -187,12 +208,18 @@ def main():
                          chunked_prefill=args.chunked_prefill, paged=args.paged,
                          block_size=args.block_size,
                          n_blocks=args.blocks or None,
-                         paged_kernel=args.paged_kernel, obs=obs)
+                         paged_kernel=args.paged_kernel,
+                         overcommit=args.overcommit, obs=obs)
     task = MarkovLM(vocab=cfg.vocab_size, seed=3)
     if args.mixed_lens:
         lens = [max(2, args.prompt_len * m // 2) for m in (1, 2, 3, 4)]
     else:
         lens = [args.prompt_len]
+    def req_tier(i: int) -> str:
+        if args.tier == "mixed":
+            return "latency" if i % 4 == 0 else "throughput"
+        return args.tier
+
     reqs = [
         Request(
             uid=i,
@@ -200,6 +227,7 @@ def main():
                    : lens[i % len(lens)]].astype(np.int32),
             max_new=args.max_new,
             temperature=args.temperature,
+            tier=req_tier(i),
         )
         for i in range(args.requests)
     ]
@@ -229,6 +257,11 @@ def main():
                   f"block_occupancy={sched.mean_block_occupancy():.2f} "
                   f"fragmentation={sched.mean_fragmentation():.2f} "
                   f"leaked_blocks={pool.n_blocks - pool.allocator.free_count}")
+            if args.overcommit != 1.0:
+                print(f"[overcommit] factor={args.overcommit} "
+                      f"commit_capacity={pool.allocator.commit_capacity}"
+                      f"x{pool.allocator.n_shards} "
+                      f"preemptions={sched.preemptions_total()}")
     if args.trace_out:
         n = obs.recorder.dump_jsonl(args.trace_out)
         print(f"[obs] {n} request traces -> {args.trace_out}")

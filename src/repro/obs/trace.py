@@ -5,6 +5,15 @@ A request's life in the serve stack is an ordered event sequence::
     enqueued -> admitted(slot, blocks) -> prefill_chunk(size)*
              -> first_token -> decode_step* -> finished|abandoned|evicted
 
+Overcommitted scheduling can interrupt that mid-flight: a preempted
+request records a non-terminal ``preempted`` event (its lane and blocks
+are reclaimed), stays an *open* trace while it waits in the queue, and
+on re-admission records ``admitted`` again plus ``re_prefill`` before
+its recompute chunks.  A preempted-and-resumed trace therefore reads::
+
+    ... decode_step* -> preempted -> admitted -> re_prefill
+                     -> prefill_chunk* -> decode_step* -> finished
+
 Every path that serves a request (bucketed engine, legacy continuous,
 chunked/paged continuous) records the same events through one
 :class:`FlightRecorder`, which keeps the in-flight traces plus a ring of
@@ -45,10 +54,16 @@ DECODE_STEP = "decode_step"
 FINISHED = "finished"
 ABANDONED = "abandoned"
 EVICTED = "evicted"
+# Overcommit: a preempted lane's request is NOT terminal — its trace
+# stays open across the requeue and records ADMITTED again (plus
+# RE_PREFILL) when it resumes, so ttft_ms (find = FIRST occurrence)
+# still measures the original admitted -> first_token span.
+PREEMPTED = "preempted"
+RE_PREFILL = "re_prefill"
 
 TERMINAL = frozenset({FINISHED, ABANDONED, EVICTED})
 KINDS = (ENQUEUED, ADMITTED, PREFILL_CHUNK, FIRST_TOKEN, DECODE_STEP,
-         FINISHED, ABANDONED, EVICTED)
+         PREEMPTED, RE_PREFILL, FINISHED, ABANDONED, EVICTED)
 
 
 def now() -> float:
@@ -218,9 +233,9 @@ class FlightRecorder:
                     "dur": max(us(b.ts) - us(a.ts), 0.0),
                 })
             for ev in tr.events:
-                if ev.kind == PREFILL_CHUNK:
+                if ev.kind in (PREFILL_CHUNK, PREEMPTED, RE_PREFILL):
                     events.append({
-                        "ph": "i", "pid": 0, "tid": tid, "name": PREFILL_CHUNK,
+                        "ph": "i", "pid": 0, "tid": tid, "name": ev.kind,
                         "cat": "serve", "ts": us(ev.ts), "s": "t",
                         "args": ev.attrs or {},
                     })

@@ -73,6 +73,10 @@ class Request:
     tokens: np.ndarray  # (S,) int32 prompt
     max_new: int = 32
     temperature: float = 0.0  # 0 => greedy
+    # SLO class (continuous scheduler): "latency" requests outrank
+    # "throughput" at admission and are preempted last under overcommit
+    # pressure; the bucketed engine ignores the field.
+    tier: str = "throughput"
 
 
 @dataclasses.dataclass
@@ -91,7 +95,7 @@ class ServeEngine:
                  policy: Optional["SchedulerPolicy"] = None,
                  chunked_prefill: bool = False, paged: bool = False,
                  block_size: int = 32, n_blocks: Optional[int] = None,
-                 paged_kernel: bool = False,
+                 paged_kernel: bool = False, overcommit: float = 1.0,
                  obs: Optional[Observability] = None):
         self.cfg = cfg
         self.max_len = max_len
@@ -140,7 +144,8 @@ class ServeEngine:
                                          chunked_prefill=chunked_prefill or paged,
                                          paged=paged, block_size=block_size,
                                          n_blocks=n_blocks,
-                                         paged_kernel=paged_kernel)
+                                         paged_kernel=paged_kernel,
+                                         overcommit=overcommit)
             else:
                 if chunked_prefill and not policy.chunked_prefill:
                     policy = dataclasses.replace(policy, chunked_prefill=True)
@@ -153,6 +158,9 @@ class ServeEngine:
                 if paged_kernel and not policy.paged_kernel:
                     # requires paged (policy validates)
                     policy = dataclasses.replace(policy, paged_kernel=True)
+                if overcommit != 1.0 and policy.overcommit == 1.0:
+                    # requires paged (policy validates)
+                    policy = dataclasses.replace(policy, overcommit=overcommit)
             self.scheduler = ContinuousScheduler(self, policy)
 
     # -- sharding ---------------------------------------------------------

@@ -49,12 +49,35 @@ The block table rides through both jitted programs as a replicated
 (n_slots, blocks_per_lane) operand — shapes are static, so the
 one-decode-program property is untouched.
 
-Admission policy (:class:`SchedulerPolicy`): FIFO order, with optional
-max-wait batching — hold admissions until ``min_admit`` requests can be
-placed together or the oldest has waited ``max_wait`` scheduler steps,
-amortising prefill dispatches under bursty arrivals.  Per-request
-``temperature`` / ``max_new`` ride in the Request, as in the bucketed
-engine.
+Admission policy (:class:`SchedulerPolicy`): FIFO order within an SLO
+tier — ``latency``-tier requests outrank ``throughput``-tier ones, and
+anti-starvation aging promotes any request that has waited
+``aging_steps`` scheduler steps — with optional max-wait batching: hold
+admissions until ``min_admit`` requests can be placed together or the
+oldest has waited ``max_wait`` scheduler steps, amortising prefill
+dispatches under bursty arrivals.  Per-request ``temperature`` /
+``max_new`` / ``tier`` ride in the Request, as in the bucketed engine.
+
+**Overcommit + preemption** (``SchedulerPolicy(overcommit > 1.0)``,
+requires paged): admission stops gating on worst-case lifetime blocks
+against the *physical* pool and instead reserves against
+``BlockAllocator.commit_capacity = shard_blocks * overcommit`` — most
+requests finish early, so the pool serves more concurrent lanes than
+worst-case accounting would allow.  The price is that on-demand growth
+can now exhaust a shard; before every grow the scheduler runs
+``_ensure_headroom``, which preempts victim lanes (lowest priority
+first: throughput tier before latency, then most recently admitted)
+until the step's block demand fits.  Preemption is a *recompute swap*:
+the victim's blocks are freed, its generated-so-far tokens are
+snapshotted, and the request re-enters the queue with prompt +
+generated as its new prompt — re-prefill through the exact chunked
+path reconstructs identical KV/recurrent state, so greedy output stays
+token-identical to the no-preemption oracle.  Two rules make this
+deadlock-free: requests whose worst case exceeds one shard's physical
+blocks are rejected up front (unchanged from overcommit=1.0), so a
+lane alone in its shard can always grow; and admission still gates the
+first chunk's demand against free blocks, so a fresh admit always
+makes progress before it can be chosen as a victim.
 
 Time is measured in scheduler steps (one pooled decode = one step);
 arrival times for simulated workloads are expressed on that clock.
@@ -91,7 +114,7 @@ from ..models import transformer
 from ..models.common import packed_shard_mesh, paged_shard_mesh
 from ..obs import metrics as obs_metrics
 from ..obs import trace as obs_trace
-from .slots import SlotPool, reset_recurrent_slots, scatter_slot
+from .slots import SlotPool, SlotState, reset_recurrent_slots, scatter_slot
 
 
 @dataclasses.dataclass
@@ -120,6 +143,25 @@ class SchedulerPolicy:
     # each lane's full pool view — per-step attention HBM reads scale
     # with live tokens.  The gather path stays the conformance reference.
     paged_kernel: bool = False
+    # Optimistic overcommit (paged only): admit against
+    # shard_blocks * overcommit commitment capacity instead of the
+    # physical pool.  1.0 (default) is exact worst-case gating — growth
+    # can never fail and the preemption path is provably unreachable.
+    # Past 1.0 the scheduler preempts victim lanes (recompute swap) when
+    # a step's block demand would exhaust a shard.
+    overcommit: float = 1.0
+    # Anti-starvation aging: a queued request that has waited this many
+    # scheduler steps is promoted to the latency class for admission
+    # ordering, so throughput-tier work cannot starve behind a stream of
+    # latency-tier arrivals.
+    aging_steps: int = 64
+    # Occupancy-aware chunk sizing: scale the prefill chunk down as more
+    # lanes are decoding (small chunks keep per-step latency low for live
+    # decode lanes; large chunks drain prompts fast when the pool is
+    # idle).  Picked sizes always come from chunk_sizes, so the compiled
+    # prefill set stays bounded.  False restores the static
+    # smallest-covering-chunk rule.
+    occupancy_chunking: bool = True
     # Bounded-telemetry capacity: per-step observations (occupancy,
     # decode-step ms, block usage, ...) live in fixed-size reservoirs of
     # this many entries (obs.metrics.Histogram), so a long-lived server
@@ -156,6 +198,22 @@ class SchedulerPolicy:
                 "paged_kernel=True requires paged=True — the kernel walks the "
                 "block table a dense cache does not have"
             )
+        if self.overcommit < 1.0:
+            raise ValueError(
+                f"overcommit={self.overcommit}: factors below 1.0 would "
+                "strand physical blocks behind the commitment gate"
+            )
+        if self.overcommit > 1.0 and not self.paged:
+            raise ValueError(
+                "overcommit > 1.0 requires paged=True — only the block pool "
+                "has the commitment accounting (and the preemption escape "
+                "hatch) overcommit relies on"
+            )
+        if self.aging_steps < 1:
+            raise ValueError(
+                f"aging_steps={self.aging_steps}: need >= 1 (aging at 0 "
+                "steps would flatten the tier ordering entirely)"
+            )
 
 
 @dataclasses.dataclass
@@ -163,6 +221,47 @@ class _Pending:
     request: "repro.serve.engine.Request"  # noqa: F821 — engine imports us
     arrival: int
     enqueued_at: Optional[int] = None  # step it became visible to admission
+    seq: int = 0  # global FIFO sequence; stable across preemption requeues
+    # Recompute-swap resume state: the tokens a preempted run had already
+    # generated.  The effective prompt is the original prompt extended by
+    # these (re-prefill recomputes their KV rows exactly), the effective
+    # max_new shrinks by their count, and the Result stitches them back.
+    prior: Optional[List[int]] = None
+
+    @property
+    def prompt_len(self) -> int:
+        return len(self.request.tokens) + len(self.prior or ())
+
+    def prompt_tokens(self) -> np.ndarray:
+        toks = np.asarray(self.request.tokens, np.int32)
+        if self.prior:
+            toks = np.concatenate([toks, np.asarray(self.prior, np.int32)])
+        return toks
+
+    @property
+    def max_new(self) -> int:
+        return self.request.max_new - len(self.prior or ())
+
+    @property
+    def tier(self) -> str:
+        return getattr(self.request, "tier", "throughput")
+
+
+def preemption_order(candidates: List[Tuple[int, "SlotState"]]  # noqa: F821
+                     ) -> List[Tuple[int, "SlotState"]]:
+    """Victim priority over ``(slot, SlotState)`` live-lane candidates:
+    best victim FIRST.  Throughput-tier lanes go before latency-tier
+    ones (a latency lane is never preempted while a throughput victim
+    is available), most recently admitted first within a tier (LIFO —
+    the youngest lane has the least recompute debt and the oldest makes
+    progress, which is what guarantees the highest-priority lane always
+    runs to completion), highest slot index as the deterministic
+    tie-break.  Pure and host-side so the hypothesis harness can drive
+    it against arbitrary interleavings without a model."""
+    return sorted(
+        candidates,
+        key=lambda c: (c[1].tier == "latency", -c[1].admit_seq, -c[0]),
+    )
 
 
 class ContinuousScheduler:
@@ -180,7 +279,8 @@ class ContinuousScheduler:
             engine.cfg, policy.n_slots, engine.max_len, mesh=engine.mesh,
             cache_dtype=jnp.dtype(engine.cfg.kv_cache_dtype),
             paged=policy.paged, block_size=policy.block_size,
-            n_blocks=policy.n_blocks, registry=engine.obs.registry,
+            n_blocks=policy.n_blocks, overcommit=policy.overcommit,
+            registry=engine.obs.registry,
         )
         cfg = engine.cfg
         # ONE pooled decode program: pos/act are (n_slots,) vectors, so the
@@ -262,6 +362,18 @@ class ContinuousScheduler:
             "scheduler steps where a queued request could not be placed")
         self._c_chunks = reg.counter(
             "serve_prefill_chunks_total", "prefill_chunk dispatches")
+        self._c_preempt = reg.counter(
+            "serve_preemptions_total",
+            "lanes preempted under overcommit pressure (blocks reclaimed, "
+            "request re-queued for re-prefill), by SLO tier",
+            labels=("tier",))
+        self._c_preempt_rows = reg.counter(
+            "serve_preempted_rows_total",
+            "live KV cache rows discarded by preemption (recompute debt)")
+        self._h_tier_ttft = reg.histogram(
+            "serve_tier_ttft_ms",
+            "time to first token by SLO tier (same span as serve_ttft_ms)",
+            labels=("tier",), capacity=tcap)
         self._c_steps = reg.counter(
             "serve_decode_steps_total", "pooled decode step dispatches")
         self._g_queue = reg.gauge(
@@ -297,6 +409,11 @@ class ContinuousScheduler:
         self.decode_ms_total = 0.0
         self.decode_steps = 0
         self.prefill_chunks = 0
+        # Overcommit bookkeeping: which _Pending occupies each lane (so a
+        # preemption can rebuild the queue entry) and a monotone admission
+        # counter driving the LIFO leg of preemption_order.
+        self._lane_pend: Dict[int, _Pending] = {}
+        self._admit_seq = 0
 
     # -- jitted programs ---------------------------------------------------
     def _prefill_fn(self, plen: int) -> Callable:
@@ -364,35 +481,37 @@ class ContinuousScheduler:
         return self.pool.allocator.blocks_for_rows(len(req.tokens) + req.max_new - 1)
 
     def _paged_assign(
-        self, queue: Deque[_Pending], free: List[int]
+        self, order: List[_Pending], free: List[int]
     ) -> List[Tuple[_Pending, int]]:
         """Paged lane assignment: a free lane is no longer enough — each
         admit must find a lane whose *shard* has (a) free blocks >= its
-        first-chunk demand (immediate progress) and (b) uncommitted
-        capacity >= its worst-case lifetime demand (so on-demand growth
-        can never fail — see slots.BlockAllocator).  While the commitment
-        invariant holds, (b) implies (a) (free >= capacity - committed
-        and first <= life); (a) is kept as the literal admission contract
-        and as a guard should the invariant ever drift.
+        first-chunk demand (immediate progress: a fresh admit always
+        lands its first chunk before it can be chosen as a victim, so
+        overcommit cannot livelock on admit -> self-preempt) and (b)
+        uncommitted capacity >= its worst-case lifetime demand, measured
+        against ``commit_capacity = shard_blocks * overcommit`` (at the
+        default factor 1.0 this is the physical pool and on-demand
+        growth can never fail — see slots.BlockAllocator; past 1.0 the
+        scheduler preempts to headroom instead).
 
         With a replicated table (one shard) every lane sees the same
         budgets and the assignment degenerates to free-list order.  With
         sharded tables (lanes and pool blocks co-sharded over the data
         axes) each lane draws only on its own shard's range, so the walk
-        picks the first free lane whose shard fits.  FIFO is preserved
-        either way: requests are considered in queue order and the walk
-        STOPS at the first that fits no lane; it retries when an eviction
-        frees blocks, and nothing jumps it."""
+        picks the first free lane whose shard fits.  ``order`` is the
+        tier-priority queue view (FIFO within a tier) and the walk STOPS
+        at the first request that fits no lane; it retries when an
+        eviction frees blocks, and nothing jumps it."""
         alloc = self.pool.allocator
         budget_free = [alloc.free_in(s) for s in range(alloc.n_shards)]
-        budget_commit = [alloc.shard_blocks - alloc.committed_in(s)
+        budget_commit = [alloc.commit_capacity - alloc.committed_in(s)
                          for s in range(alloc.n_shards)]
         lanes = list(free)
         pairs: List[Tuple[_Pending, int]] = []
-        for pend in queue:
+        for pend in order:
             if not lanes:
                 break
-            first = self._first_chunk_blocks(len(pend.request.tokens))
+            first = self._first_chunk_blocks(pend.prompt_len)
             life = self._lifetime_blocks(pend.request)
             chosen = None
             for lane in lanes:
@@ -409,6 +528,21 @@ class ContinuousScheduler:
             pairs.append((pend, chosen))
         return pairs
 
+    def _priority_order(self, queue: Deque[_Pending], now: int) -> List[_Pending]:
+        """Admission order: latency-tier (and aged-past-``aging_steps``)
+        requests first, FIFO by global sequence within a class.  The sort
+        is stable and keyed on ``seq``, so an all-default-tier workload
+        reduces exactly to the old FIFO."""
+        aging = self.policy.aging_steps
+
+        def key(pend: _Pending):
+            waited = now - (pend.enqueued_at if pend.enqueued_at is not None
+                            else now)
+            urgent = pend.tier == "latency" or waited >= aging
+            return (0 if urgent else 1, pend.seq)
+
+        return sorted(queue, key=key)
+
     def _admit(self, queue: Deque[_Pending], now: int):
         # Take the free list ONCE: re-deriving free_slots()[0] per placement
         # was O(n_slots^2) per burst and would mis-place if a multi-admit
@@ -419,18 +553,21 @@ class ContinuousScheduler:
         if not free:
             self._c_blocked.inc()  # queued work, no lane
             return
+        order = self._priority_order(queue, now)
         if self.policy.paged:
-            pairs = self._paged_assign(queue, free)
+            pairs = self._paged_assign(order, free)
         else:
-            pairs = list(zip(list(queue), free))
+            pairs = list(zip(order, free))
         placeable = len(pairs)
         if placeable == 0:
             self._c_blocked.inc()  # lanes free, but no shard fits the head
             return
-        oldest_wait = now - (queue[0].enqueued_at if queue[0].enqueued_at is not None else now)
+        oldest_wait = now - (order[0].enqueued_at if order[0].enqueued_at is not None else now)
         if placeable < self.policy.min_admit and oldest_wait < self.policy.max_wait:
             return  # max-wait batching: hold for a fuller admission burst
-        batch = [queue.popleft() for _ in range(placeable)]
+        batch = [pend for pend, _ in pairs]
+        for pend in batch:
+            queue.remove(pend)
         slots = [lane for _, lane in pairs]
         self.admit_bursts.append(placeable)
         self._h_burst.observe(placeable)
@@ -465,6 +602,7 @@ class ContinuousScheduler:
             tr.event(obs_trace.FIRST_TOKEN)
             ttft_ms = tr.ttft_ms()
             self._h_ttft.observe(ttft_ms)
+            self._h_tier_ttft.labels(tier=pend.tier).observe(ttft_ms)
             self.pool.occupy(
                 slot, req.uid, first_host, plen, req.max_new,
                 req.temperature, ttft_ms, now,
@@ -482,50 +620,162 @@ class ContinuousScheduler:
         )
         for pend, slot in zip(batch, slots):
             req = pend.request
+            self._admit_seq += 1
             self.pool.admit(
-                slot, req.uid, req.tokens, req.max_new, req.temperature, now, wall
+                slot, req.uid, pend.prompt_tokens(), pend.max_new,
+                req.temperature, now, wall, tier=pend.tier, prior=pend.prior,
+                admit_seq=self._admit_seq,
             )
+            self._lane_pend[slot] = pend
             attrs = {"slot": slot}
             if self.policy.paged:
                 attrs["blocks"] = self.pool.slots[slot].committed
-            rec.get(req.uid).event(obs_trace.ADMITTED, ts=wall, **attrs)
+            tr = rec.get(req.uid)
+            tr.event(obs_trace.ADMITTED, ts=wall, **attrs)
+            if pend.prior is not None:
+                # Resumed after a preemption: the recompute prefill over
+                # prompt + generated-so-far starts here (prior is [] when
+                # the victim was still mid-prefill — nothing generated,
+                # but the re-run is still recompute work worth marking).
+                tr.event(obs_trace.RE_PREFILL, ts=wall,
+                         rows=pend.prompt_len, generated=len(pend.prior))
 
     # -- chunked prefill ---------------------------------------------------
-    def _pick_chunk(self, max_remaining: int) -> int:
-        """Smallest configured chunk covering the longest remaining prompt,
-        else the largest chunk (multi-chunk prompts)."""
-        for c in sorted(self.policy.chunk_sizes):
-            if c >= max_remaining:
-                return c
-        return max(self.policy.chunk_sizes)
+    def _pick_chunk(self, max_remaining: int, n_decoding: int = 0) -> int:
+        """Occupancy-aware chunk size, always drawn from
+        ``policy.chunk_sizes`` (the compiled prefill set stays bounded by
+        the table).  Two forces:
+
+        * cover: the smallest configured chunk covering the longest
+          remaining prompt, else the largest (multi-chunk prompts) — the
+          static rule this replaces, and the whole rule when no lane is
+          decoding or ``occupancy_chunking`` is off.
+        * occupancy: with ``f = n_decoding / n_slots`` live decode lanes,
+          step down the sorted size table by ``f`` — each prefill chunk
+          rides the same dispatch cadence as the interleaved decode
+          steps, so a hot pool prefers small chunks (low added per-token
+          latency for live lanes) and a draining pool large ones (fast
+          prompt consumption).  Monotone non-increasing in occupancy.
+        """
+        sizes = sorted(self.policy.chunk_sizes)
+        cover = next((c for c in sizes if c >= max_remaining), sizes[-1])
+        if not self.policy.occupancy_chunking or n_decoding <= 0:
+            return cover
+        frac = n_decoding / max(self.pool.n_slots, 1)
+        desc = sizes[::-1]
+        idx = min(int(frac * len(desc)), len(desc) - 1)
+        return min(cover, desc[idx])
 
     def _place_ctrl(self, name: str, arr: np.ndarray) -> jax.Array:
         if self._chunk_shardings is None:
             return jnp.asarray(arr)
         return jax.device_put(jnp.asarray(arr), self._chunk_shardings[name])
 
-    def _prefill_step(self):
+    def _preempt(self, slot: int, queue: Deque[_Pending], now: int) -> None:
+        """Recompute-swap preemption of lane ``slot``: snapshot its
+        generated tokens, free its blocks + commitment, and re-enqueue
+        the request with prompt + generated-so-far as its resume prompt.
+        The trace stays OPEN (``preempted`` is not terminal) and records
+        ``admitted``/``re_prefill`` again on re-admission, so TTFT — the
+        span to the FIRST ``first_token`` — is unaffected."""
+        pool = self.pool
+        s = pool.slots[slot]
+        pend = self._lane_pend.pop(slot)
+        gen = list(s.prior or []) + list(s.tokens or [])
+        rows_lost = (s.filled if s.phase == "prefill"
+                     else len(s.prompt) + len(s.tokens) - 1)
+        self.obs.recorder.event(
+            s.uid, obs_trace.PREEMPTED, slot=slot, phase=s.phase,
+            generated=len(gen), blocks=len(s.blocks or ()),
+        )
+        self._c_preempt.labels(tier=s.tier).inc()
+        self._c_preempt_rows.inc(rows_lost)
+        pool.evict(slot)
+        queue.append(_Pending(pend.request, pend.arrival, enqueued_at=now,
+                              seq=pend.seq, prior=gen))
+
+    def _ensure_headroom(self, demand: Dict[int, int],
+                         queue: Deque[_Pending], now: int) -> Dict[int, int]:
+        """Make this step's block demand (lane -> target cache rows)
+        grantable in every shard, preempting victims where it is not —
+        the step that turns overcommit's IOU into progress.  Returns the
+        demand with preempted lanes dropped (a demanding lane may itself
+        be the victim).
+
+        Termination and deadlock-freedom: victims are drawn per shard in
+        :func:`preemption_order` from live lanes that either hold blocks
+        or are demanding (preempting anything else frees nothing), each
+        preemption strictly shrinks that candidate set, and a lane ALONE
+        in its shard always fits — its lifetime need is bounded by the
+        shard's physical blocks by the up-front rejection in
+        :meth:`stream` — so the loop cannot run dry while demand is
+        unmet, and the highest-priority lane is preempted last, i.e.
+        always runs to completion.  At ``overcommit == 1.0`` the
+        reservation invariant makes every demand fit up front and this
+        is a no-op."""
+        pool, alloc = self.pool, self.pool.allocator
+        demand = dict(demand)
+
+        def shard_need(sh: int) -> int:
+            return sum(
+                max(0, alloc.blocks_for_rows(rows) - len(pool.slots[i].blocks))
+                for i, rows in demand.items() if pool.lane_shard(i) == sh
+            )
+
+        for sh in range(alloc.n_shards):
+            while shard_need(sh) > alloc.free_in(sh):
+                cands = [
+                    (i, pool.slots[i])
+                    for i in dist_sharding.shard_lanes(
+                        sh, pool.n_slots, pool.table_shards)
+                    if pool.slots[i].uid is not None
+                    and (pool.slots[i].blocks or i in demand)
+                ]
+                if len(cands) < 2:
+                    raise RuntimeError(
+                        f"shard {sh}: demand {shard_need(sh)} blocks > free "
+                        f"{alloc.free_in(sh)} with {len(cands)} candidate "
+                        "lane(s) — the up-front per-request capacity check "
+                        "should make a sole lane always fit"
+                    )
+                victim = preemption_order(cands)[0][0]
+                self._preempt(victim, queue, now)
+                demand.pop(victim, None)
+        return demand
+
+    def _prefill_step(self, queue: Deque[_Pending], now: int):
         """One prefill_chunk dispatch: every prefilling lane consumes up to
         C prompt tokens; lanes whose prompt completes sample their first
         token and flip to the decode phase."""
         pool = self.pool
-        lanes = pool.prefilling()
-        remaining = {
-            i: len(pool.slots[i].prompt) - pool.slots[i].filled for i in lanes
-        }
-        C = self._pick_chunk(max(remaining.values()))
+        # Under overcommit the headroom pass may preempt lanes — including
+        # prefilling ones, which changes the lane set and the chunk-size
+        # choice — so recompute until the demand fits as-is.
+        while True:
+            lanes = pool.prefilling()
+            if not lanes:
+                return  # every prefilling lane was preempted this step
+            remaining = {
+                i: len(pool.slots[i].prompt) - pool.slots[i].filled
+                for i in lanes
+            }
+            C = self._pick_chunk(max(remaining.values()), pool.n_decoding)
+            if not self.policy.paged:
+                break
+            demand = {
+                i: pool.slots[i].filled + min(C, remaining[i]) for i in lanes
+            }
+            if self._ensure_headroom(demand, queue, now) == demand:
+                # alloc-on-demand: grant the blocks each lane's chunk rows
+                # [filled, filled + take) land in before dispatch (one
+                # batched table update for the whole chunk)
+                pool.grow_many(demand)
+                break
         toks = np.zeros((pool.n_slots, C), np.int32)
         # Non-prefilling lanes point past the cache: every write drops and
         # n_valid=0 makes their recurrence a no-op (see prefill_chunk).
         start = np.full((pool.n_slots,), self.engine.max_len, np.int32)
         nval = np.zeros((pool.n_slots,), np.int32)
-        if self.policy.paged:
-            # alloc-on-demand: grant the blocks each lane's chunk rows
-            # [filled, filled + take) land in before dispatch (one
-            # batched table update for the whole chunk)
-            pool.grow_many({
-                i: pool.slots[i].filled + min(C, remaining[i]) for i in lanes
-            })
         for i in lanes:
             s = pool.slots[i]
             take = min(C, remaining[i])
@@ -554,9 +804,17 @@ class ContinuousScheduler:
             tr.event(obs_trace.PREFILL_CHUNK, size=int(nval[i]))
             s.filled += int(nval[i])
             if s.filled == len(s.prompt):
-                tr.event(obs_trace.FIRST_TOKEN)
-                ttft_ms = tr.ttft_ms()
-                self._h_ttft.observe(ttft_ms)
+                if tr.find(obs_trace.FIRST_TOKEN) is None:
+                    # A lane resumed after a decode-phase preemption
+                    # already emitted its first token in its first life —
+                    # recording (and observing) TTFT again would double
+                    # count the request.
+                    tr.event(obs_trace.FIRST_TOKEN)
+                    ttft_ms = tr.ttft_ms()
+                    self._h_ttft.observe(ttft_ms)
+                    self._h_tier_ttft.labels(tier=s.tier).observe(ttft_ms)
+                else:
+                    ttft_ms = tr.ttft_ms()
                 pool.start_decode(i, int(sampled_host[i]), ttft_ms)
 
     # -- main loop ---------------------------------------------------------
@@ -579,6 +837,12 @@ class ContinuousScheduler:
                 f"{len(requests)} requests — zip would silently drop the excess"
             )
         for r in requests:
+            tier = getattr(r, "tier", "throughput")
+            if tier not in ("latency", "throughput"):
+                raise ValueError(
+                    f"request {r.uid}: unknown SLO tier {tier!r} — want "
+                    "'latency' or 'throughput'"
+                )
             if len(r.tokens) < 1:
                 raise ValueError(
                     f"request {r.uid}: empty prompt — there is no position to "
@@ -602,6 +866,12 @@ class ContinuousScheduler:
                     "be silently dropped and the output would be garbage"
                 )
             if self.policy.paged:
+                # Up-front rejection measures against the shard's PHYSICAL
+                # blocks, NOT the overcommitted commitment capacity — a
+                # request bigger than the pool could be committed but
+                # never grown, and this rule is also what guarantees a
+                # lane alone in its shard always fits (the base case of
+                # _ensure_headroom's deadlock-freedom argument).
                 cap = self.pool.allocator.shard_blocks  # == n_blocks unsharded
                 if self._lifetime_blocks(r) > cap:
                     raise ValueError(
@@ -616,6 +886,8 @@ class ContinuousScheduler:
             (_Pending(r, int(t)) for r, t in zip(requests, arrival_steps)),
             key=lambda p: p.arrival,
         )
+        for seq, pend in enumerate(incoming):
+            pend.seq = seq  # FIFO sequence, stable across preemption requeues
         incoming = deque(incoming)
         queue: Deque[_Pending] = deque()
         pool = self.pool
@@ -636,7 +908,7 @@ class ContinuousScheduler:
                     yield ev
                 worked = False
                 if self.policy.chunked_prefill and pool.prefilling():
-                    self._prefill_step()
+                    self._prefill_step(queue, now)
                     worked = True
                     # chunked max_new == 1: finished at first token
                     for ev in self._finished():
@@ -646,12 +918,15 @@ class ContinuousScheduler:
                     if self.policy.paged:
                         # decode growth: lanes crossing a block boundary
                         # need their next block granted before the write
-                        # (one batched table update for the whole step)
-                        pool.grow_many({
+                        # (one batched table update for the whole step).
+                        # Under overcommit the headroom pass may first
+                        # preempt victims — possibly every decode lane —
+                        # so the dispatch below re-checks n_decoding.
+                        pool.grow_many(self._ensure_headroom({
                             i: len(s.prompt) + len(s.tokens)
                             for i, s in enumerate(pool.slots)
                             if s.uid is not None and s.phase == "decode"
-                        })
+                        }, queue, now))
                         # blocks this step's attention actually reads: the
                         # decode lanes' live blocks (== the paged kernel's
                         # per-step HBM traffic; the gather path reads
@@ -660,6 +935,7 @@ class ContinuousScheduler:
                             len(s.blocks) for s in pool.slots
                             if s.uid is not None and s.phase == "decode"
                         ))
+                if pool.n_decoding:
                     t0 = time.perf_counter()
                     logits, pool.cache = self._decode(
                         self.engine.params, pool.cache, pool.tok, pool.pos, pool.act,
@@ -711,7 +987,10 @@ class ContinuousScheduler:
                                phase=s.phase, filled=s.filled)
                     self._c_req.labels(outcome="evicted").inc()
                     pool.evict(i)
+            self._lane_pend.clear()
             for pend in queue:
+                # Includes preempted requests waiting to resume — their
+                # trace is still open and gets its terminal here.
                 if pend.request.uid in rec.active:
                     rec.finish(pend.request.uid, obs_trace.ABANDONED)
                     self._c_req.labels(outcome="abandoned").inc()
@@ -729,12 +1008,16 @@ class ContinuousScheduler:
         for i, s in enumerate(pool.slots):
             if s.uid is not None and s.phase == "decode" and s.remaining <= 0:
                 done = pool.evict(i)
+                self._lane_pend.pop(i, None)
+                # A preempted-and-resumed lane's Result stitches the
+                # tokens of its earlier life back in front.
+                full = list(done.prior or []) + list(done.tokens)
                 rec.finish(done.uid, obs_trace.FINISHED,
-                           n_tokens=len(done.tokens))
+                           n_tokens=len(full))
                 self._c_req.labels(outcome="finished").inc()
                 yield Result(
                     uid=done.uid,
-                    tokens=np.asarray(done.tokens, np.int32),
+                    tokens=np.asarray(full, np.int32),
                     prefill_ms=done.prefill_ms,
                     decode_ms_per_tok=per_tok,
                 )
@@ -769,3 +1052,7 @@ class ContinuousScheduler:
         rows of each lane's last, partially-filled block.  Bounded above
         by ``block_size / (block_size + 1)``; small blocks waste less."""
         return self._h_frag.mean()
+
+    def preemptions_total(self) -> int:
+        """Lanes preempted (all tiers) since the last telemetry reset."""
+        return int(sum(c.value for _, c in self._c_preempt.children()))

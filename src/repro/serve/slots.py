@@ -38,7 +38,10 @@ on-demand as prefill chunks land and decode grows past a block boundary
 scales with the *live tokens* in flight, not ``n_slots * max_len``.
 Admission reserves each request's worst-case lifetime need up front
 (:meth:`BlockAllocator.reserve`), which is what makes on-demand growth
-infallible.  Ring buffers and recurrent state are already bounded per
+infallible at ``overcommit == 1.0``; past 1.0 the scheduler admits
+optimistically against ``BlockAllocator.commit_capacity`` and preempts
+a victim lane (recompute-based swap) when growth would exhaust a shard.
+Ring buffers and recurrent state are already bounded per
 lane and bypass paging.  Paged pools require chunked prefill (the
 batch-1 scatter admission path writes a contiguous lane row).
 
@@ -83,9 +86,18 @@ class BlockAllocator:
 
     ``reserve``/``release`` track *commitments*: the scheduler reserves a
     request's worst-case lifetime block need at admission (and releases
-    it at eviction), which guarantees every admitted lane can always grow
-    to its last decode row — on-demand allocation can then never fail, so
-    paged serving cannot deadlock on an exhausted pool.
+    it at eviction).  With ``overcommit == 1.0`` (the default) the
+    commitment capacity equals the physical pool, which guarantees every
+    admitted lane can always grow to its last decode row — on-demand
+    allocation can then never fail, so paged serving cannot deadlock on
+    an exhausted pool.  With ``overcommit > 1.0`` the scheduler admits
+    optimistically against ``commit_capacity = shard_blocks * overcommit``
+    per shard: most requests finish well before their worst case, so the
+    pool serves more concurrent lanes — but growth CAN now hit an
+    exhausted shard, and the scheduler must create headroom first by
+    preempting a victim lane (``serve.scheduler._ensure_headroom``).
+    The allocator itself stays oblivious: ``alloc`` still fails only
+    when a shard is physically out of blocks.
 
     **Sharded tables** (``n_shards > 1``): the pool's block id space is
     partitioned into ``n_shards`` contiguous ranges — shard ``s`` owns
@@ -99,17 +111,26 @@ class BlockAllocator:
     """
 
     def __init__(self, n_blocks: int, block_size: int, n_shards: int = 1,
-                 registry=None, labels: Optional[dict] = None):
+                 overcommit: float = 1.0, registry=None,
+                 labels: Optional[dict] = None):
         if n_blocks < 1 or block_size < 1:
             raise ValueError(f"need n_blocks >= 1 and block_size >= 1, got "
                              f"{n_blocks}, {block_size}")
         if n_shards < 1 or n_blocks % n_shards != 0:
             raise ValueError(
                 f"n_shards {n_shards} must be >= 1 and divide n_blocks {n_blocks}")
+        if overcommit < 1.0:
+            raise ValueError(
+                f"overcommit={overcommit}: factors below 1.0 would strand "
+                "physical blocks behind the commitment gate")
         self.n_blocks = n_blocks
         self.block_size = block_size
         self.n_shards = n_shards
         self.shard_blocks = n_blocks // n_shards
+        self.overcommit = overcommit
+        # Commitment ceiling per shard; == shard_blocks at overcommit 1.0
+        # (exact legacy behaviour: reservations can never exceed the pool).
+        self.commit_capacity = int(self.shard_blocks * overcommit)
         # Per-shard stacks; pop() grants low ids first within each shard.
         self._free = [
             list(range((s + 1) * self.shard_blocks - 1, s * self.shard_blocks - 1, -1))
@@ -198,9 +219,9 @@ class BlockAllocator:
                 self._g_free[sh].set(len(self._free[sh]))
 
     def reserve(self, k: int, shard: int = 0) -> bool:
-        """Commit ``k`` blocks of ``shard``'s future capacity; False if
-        over-committing that shard."""
-        if self._committed[shard] + k > self.shard_blocks:
+        """Commit ``k`` blocks of ``shard``'s future capacity; False past
+        the shard's commitment ceiling (``shard_blocks * overcommit``)."""
+        if self._committed[shard] + k > self.commit_capacity:
             return False
         self._committed[shard] += k
         if self._g_commit is not None:
@@ -307,6 +328,10 @@ class SlotState:
     # paged-KV bookkeeping
     blocks: Optional[List[int]] = None  # pool blocks owned, logical order
     committed: int = 0  # worst-case lifetime blocks reserved at admission
+    # overcommit / SLO bookkeeping
+    tier: str = "throughput"  # SLO class: "latency" outranks "throughput"
+    prior: Optional[List[int]] = None  # tokens generated before a preemption
+    admit_seq: int = 0  # monotone admission counter (LIFO victim order)
 
 
 class SlotPool:
@@ -315,7 +340,7 @@ class SlotPool:
     def __init__(self, cfg: ModelConfig, n_slots: int, max_len: int, mesh=None,
                  cache_dtype=jnp.bfloat16, paged: bool = False,
                  block_size: int = 32, n_blocks: Optional[int] = None,
-                 registry=None):
+                 overcommit: float = 1.0, registry=None):
         self.cfg = cfg
         self.n_slots = n_slots
         self.max_len = max_len
@@ -340,12 +365,15 @@ class SlotPool:
             # run shard-local (dist.sharding.block_table_spec).
             self.table_shards = dist_sharding.table_shards(
                 mesh, n_slots, self.n_blocks)
+            self.overcommit = overcommit
             self.allocator = BlockAllocator(
                 self.n_blocks, block_size, n_shards=self.table_shards,
-                registry=registry, labels=self._metric_labels)
+                overcommit=overcommit, registry=registry,
+                labels=self._metric_labels)
         else:
             self.n_blocks = None
             self.table_shards = 1
+            self.overcommit = 1.0
             self.allocator = None
         # Device state (enters the jitted decode step every iteration).
         self.cache = transformer.init_cache(
@@ -401,9 +429,10 @@ class SlotPool:
 
     def lane_shard(self, slot: int) -> int:
         """Which table shard lane ``slot`` belongs to (0 when the table is
-        replicated).  Contiguous lane groups, matching how shard_map
-        splits the lane axis."""
-        return slot * self.table_shards // self.n_slots
+        replicated).  Delegates to :func:`dist.sharding.lane_shard` so
+        the mapping can never drift from how shard_map splits the lane
+        axis (``dist.sharding.block_table_spec``)."""
+        return dist_sharding.lane_shard(slot, self.n_slots, self.table_shards)
 
     @property
     def active_mask(self) -> np.ndarray:
@@ -450,7 +479,9 @@ class SlotPool:
         self.act = self._pin("act", self.act.at[slot].set(True))
 
     def admit(self, slot: int, uid: int, prompt: np.ndarray, max_new: int,
-              temperature: float, now: int, wall: float):
+              temperature: float, now: int, wall: float,
+              tier: str = "throughput", prior: Optional[List[int]] = None,
+              admit_seq: int = 0):
         """Claim lane ``slot`` for chunked prefill: the prompt is staged
         host-side and streams through ``prefill_chunk`` dispatches; the
         lane joins the decode phase via :meth:`start_decode` once its
@@ -460,13 +491,22 @@ class SlotPool:
         Paged pools additionally reserve the request's worst-case
         lifetime block need (prompt + max_new - 1 rows) with the
         allocator — the scheduler's admission check guarantees the
-        reservation fits, and the reservation in turn guarantees every
-        later :meth:`grow_rows` call succeeds (no mid-decode deadlock)."""
+        reservation fits; with ``overcommit == 1.0`` the reservation in
+        turn guarantees every later :meth:`grow_rows` call succeeds (no
+        mid-decode deadlock), and past 1.0 the scheduler preempts to
+        create headroom before growing.
+
+        Re-admitting a preempted request passes ``prior`` (the tokens it
+        had generated) with ``prompt`` already extended by them — the
+        re-prefill recomputes their KV rows exactly, and the Result
+        stitches ``prior + tokens`` back together."""
         self.slots[slot] = SlotState(
             uid=uid, remaining=max_new, tokens=[], admitted_at=now,
             temperature=temperature, phase="prefill",
             prompt=np.asarray(prompt, np.int32), filled=0, admit_wall=wall,
             blocks=[] if self.paged else None,
+            tier=tier, prior=list(prior) if prior else None,
+            admit_seq=admit_seq,
         )
         if self.paged:
             s = self.slots[slot]
@@ -476,8 +516,8 @@ class SlotPool:
                 raise RuntimeError(
                     f"admitted lane {slot} cannot reserve {s.committed} blocks "
                     f"(shard {sh} committed {self.allocator.committed_in(sh)}"
-                    f"/{self.allocator.shard_blocks}) — the scheduler's paged "
-                    "admission check should have held it"
+                    f"/{self.allocator.commit_capacity}) — the scheduler's "
+                    "paged admission check should have held it"
                 )
         self.pos = self._pin("pos", self.pos.at[slot].set(0))
         self.temps = self._pin("temps", self.temps.at[slot].set(temperature))
@@ -494,9 +534,11 @@ class SlotPool:
         ONE block-table device update (lanes admitted together decode in
         lockstep and cross block boundaries on the same step — per-lane
         updates would cost one host->device dispatch each on the decode
-        hot path).  The admission-time reservation makes failure
-        impossible for admitted lanes (see :meth:`admit`); a failure is
-        therefore a bug, not a load condition, and raises."""
+        hot path).  At ``overcommit == 1.0`` the admission-time
+        reservation makes failure impossible for admitted lanes (see
+        :meth:`admit`); past 1.0 the scheduler must have preempted to
+        headroom first (``_ensure_headroom``).  Either way a failure
+        here is a bug, not a load condition, and raises."""
         rr, cc, vv = [], [], []
         for slot, rows in rows_by_slot.items():
             s = self.slots[slot]
@@ -509,8 +551,8 @@ class SlotPool:
                 raise RuntimeError(
                     f"lane {slot} needs {need} blocks but only "
                     f"{self.allocator.free_in(sh)} are free in shard {sh} — "
-                    "the commitment invariant was violated (allocator bug or "
-                    "out-of-band alloc)"
+                    "the headroom invariant was violated (allocator bug, "
+                    "out-of-band alloc, or a missing preemption pass)"
                 )
             base = len(s.blocks)
             rr += [slot] * need
@@ -586,7 +628,8 @@ class SlotPool:
         if self.paged:
             self.allocator = BlockAllocator(
                 self.n_blocks, self.block_size, n_shards=self.table_shards,
-                registry=self.registry, labels=self._metric_labels)
+                overcommit=self.overcommit, registry=self.registry,
+                labels=self._metric_labels)
             self.block_table = jnp.zeros_like(self.block_table)
         if self.shardings is not None:
             self.pos = jax.device_put(self.pos, self.shardings["pos"])

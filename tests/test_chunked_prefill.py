@@ -118,6 +118,78 @@ def test_prefill_program_count_bounded(granite):
     assert legacy.scheduler.compiled_prefill_programs() == n
 
 
+def _pick(chunk_sizes, max_remaining, n_decoding, n_slots=8, occupancy=True):
+    """Drive ContinuousScheduler._pick_chunk without an engine: it reads
+    only policy.chunk_sizes/occupancy_chunking and pool.n_slots."""
+    from types import SimpleNamespace
+
+    from repro.serve.scheduler import ContinuousScheduler
+
+    fake = SimpleNamespace(
+        policy=SimpleNamespace(chunk_sizes=chunk_sizes,
+                               occupancy_chunking=occupancy),
+        pool=SimpleNamespace(n_slots=n_slots),
+    )
+    return ContinuousScheduler._pick_chunk(fake, max_remaining, n_decoding)
+
+
+def test_chunk_picker_monotone_in_occupancy():
+    """The occupancy-aware picker: always a configured size (the
+    compiled set stays bounded by the table), monotone non-increasing as
+    more lanes decode, the legacy smallest-covering rule when the pool
+    is idle, and the smallest size at full decode occupancy."""
+    sizes = (128, 32, 8, 1)
+    for remaining in (1, 5, 40, 200):
+        picks = [_pick(sizes, remaining, d) for d in range(9)]
+        assert all(p in sizes for p in picks), picks
+        assert all(a >= b for a, b in zip(picks, picks[1:])), (remaining, picks)
+        cover = next((c for c in sorted(sizes) if c >= remaining), max(sizes))
+        assert picks[0] == cover, (remaining, picks)
+        assert picks[-1] == min(cover, min(sizes)), (remaining, picks)
+
+
+def test_chunk_picker_off_restores_static_rule(granite):
+    """occupancy_chunking=False is the exact legacy behaviour: the
+    smallest covering chunk regardless of decode occupancy — and the
+    engine under that flag still matches the oracle."""
+    sizes = (128, 32, 1)
+    for d in range(9):
+        assert _pick(sizes, 200, d, occupancy=False) == 128
+        assert _pick(sizes, 20, d, occupancy=False) == 32
+        assert _pick(sizes, 1, d, occupancy=False) == 1
+    cfg, params = granite
+    reqs = _mixed_requests(cfg)
+    ref = _reference(params, cfg, reqs)
+    eng = ServeEngine(params, cfg, max_len=64, continuous=True,
+                      policy=SchedulerPolicy(n_slots=3, chunked_prefill=True,
+                                             chunk_sizes=(8, 1),
+                                             occupancy_chunking=False))
+    for r in eng.generate(reqs, arrival_steps=[0, 0, 1, 2, 4, 6]):
+        np.testing.assert_array_equal(ref[r.uid], r.tokens)
+
+
+def test_chunk_picker_compile_set_stays_bounded(granite):
+    """Occupancy chunking picks VARYING sizes across a staggered
+    workload, but every pick comes from the table, so the compiled
+    prefill set keeps the len(chunk_sizes) + 1 bound the static rule
+    had."""
+    cfg, params = granite
+    n = 12
+    reqs = [Request(uid=i, tokens=(np.arange(2 + 2 * i, dtype=np.int32) * 3)
+                    % cfg.vocab_size, max_new=4)
+            for i in range(n)]
+    sizes = (16, 4, 1)
+    eng = ServeEngine(params, cfg, max_len=64, continuous=True,
+                      policy=SchedulerPolicy(n_slots=4, chunked_prefill=True,
+                                             chunk_sizes=sizes))
+    ref = _reference(params, cfg, reqs)
+    # staggered arrivals so prefill chunks interleave live decode lanes
+    # (n_decoding > 0) and the occupancy path actually engages
+    for r in eng.generate(reqs, arrival_steps=list(range(0, 2 * n, 2))):
+        np.testing.assert_array_equal(ref[r.uid], r.tokens)
+    assert eng.scheduler.compiled_prefill_programs() <= len(sizes) + 1
+
+
 def test_multi_admit_fuses_bursts(granite):
     """Every placeable queued request must claim its lane in ONE admission
     dispatch, not one prefill at a time."""

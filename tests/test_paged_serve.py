@@ -17,6 +17,7 @@ path).  Engines are module-scoped: lane/block state must also survive
 schedule after schedule on the SAME pool, which is exactly how a serving
 process lives.
 """
+import dataclasses
 import os
 import subprocess
 import sys
@@ -40,6 +41,11 @@ BLOCK_SIZE = 4
 # sometimes hold requests on block capacity (commitment check) even when
 # a lane is free — the randomized schedules cover both regimes.
 N_BLOCKS = 12
+# Tighter still for the overcommit harness: commit capacity is
+# int(8 * 2.0) = 16 > 8 physical blocks, so admission optimistically
+# overfills and the scheduler must preempt mid-flight to make headroom.
+OVERCOMMIT_BLOCKS = 8
+OVERCOMMIT = 2.0
 
 
 @pytest.fixture(scope="module")
@@ -86,6 +92,20 @@ def paged_kernel(granite):
                                               paged_kernel=True))
 
 
+@pytest.fixture(scope="module")
+def overcommitted(granite):
+    """Paged engine under overcommit pressure: same lane geometry as
+    `paged` but a pool too small for even two worst-case lanes, with the
+    commitment check doubled — preemption is the only way through."""
+    cfg, params = granite
+    return ServeEngine(params, cfg, max_len=MAX_LEN, continuous=True,
+                       policy=SchedulerPolicy(n_slots=N_SLOTS, chunked_prefill=True,
+                                              chunk_sizes=(8, 1), paged=True,
+                                              block_size=BLOCK_SIZE,
+                                              n_blocks=OVERCOMMIT_BLOCKS,
+                                              overcommit=OVERCOMMIT))
+
+
 def _random_schedule(rng, cfg, n_req=6, max_plen=12, max_new_hi=6):
     """Seeded random workload: mixed prompt lengths, staggered arrivals."""
     reqs = [
@@ -99,6 +119,22 @@ def _random_schedule(rng, cfg, n_req=6, max_plen=12, max_new_hi=6):
     ]
     arrivals = np.cumsum(rng.integers(0, 3, size=n_req)).tolist()
     return reqs, arrivals
+
+
+_SCHEDULES = {}
+
+
+def _schedule_and_ref(seed, cfg, oracle):
+    """Seeded schedule + its bucketed-oracle greedy reference, computed
+    once per seed and shared across the conformance harnesses (the
+    overcommit torture replays the exact schedules the paged harness
+    serves, so one oracle pass covers both)."""
+    if seed not in _SCHEDULES:
+        rng = np.random.default_rng(seed)
+        reqs, arrivals = _random_schedule(rng, cfg)
+        ref = {r.uid: r.tokens for r in oracle.generate(reqs)}
+        _SCHEDULES[seed] = (reqs, arrivals, ref)
+    return _SCHEDULES[seed]
 
 
 def _assert_zero_leaks(engine):
@@ -123,6 +159,7 @@ def _assert_span_accounting(engine):
             assert tr.find(obs_trace.FIRST_TOKEN) is not None, tr.uid
 
 
+@pytest.mark.conformance
 @pytest.mark.parametrize("seed", range(N_SEEDS))
 def test_randomized_schedule_conformance(seed, granite, oracle, unpaged, paged,
                                          paged_kernel):
@@ -130,9 +167,7 @@ def test_randomized_schedule_conformance(seed, granite, oracle, unpaged, paged,
     everywhere (kernel == gather == oracle) and the block pool must
     drain back to full."""
     cfg, _ = granite
-    rng = np.random.default_rng(seed)
-    reqs, arrivals = _random_schedule(rng, cfg)
-    ref = {r.uid: r.tokens for r in oracle.generate(reqs)}
+    reqs, arrivals, ref = _schedule_and_ref(seed, cfg, oracle)
 
     out_u = unpaged.generate(reqs, arrival_steps=arrivals)
     assert len(out_u) == len(reqs)
@@ -168,6 +203,130 @@ def test_randomized_schedule_conformance(seed, granite, oracle, unpaged, paged,
         _assert_span_accounting(paged)
         kinds = {t.terminal.kind for t in paged.obs.recorder.traces()}
         assert kinds & {obs_trace.EVICTED, obs_trace.ABANDONED, obs_trace.FINISHED}
+
+
+def _tiered(reqs):
+    """The harness SLO mix: every 4th uid is latency-tier."""
+    return [dataclasses.replace(r, tier="latency" if r.uid % 4 == 0
+                                else "throughput") for r in reqs]
+
+
+def _assert_preemption_lifecycle(engine):
+    """Every preempted-then-finished trace must show the full recompute
+    lifecycle: each ``preempted`` is followed by a re-``admitted`` and a
+    ``re_prefill`` (in that order), every ``re_prefill`` is preceded by
+    a ``preempted``, and the trace still reaches ``first_token``."""
+    for tr in engine.obs.recorder.traces():
+        kinds = [e.kind for e in tr.events]
+        if obs_trace.RE_PREFILL in kinds:
+            assert kinds.index(obs_trace.PREEMPTED) < kinds.index(
+                obs_trace.RE_PREFILL), (tr.uid, kinds)
+        if tr.terminal.kind != obs_trace.FINISHED:
+            continue  # abandoned/evicted mid-queue: no resume owed
+        for i, k in enumerate(kinds):
+            if k != obs_trace.PREEMPTED:
+                continue
+            rest = kinds[i + 1:]
+            assert obs_trace.ADMITTED in rest, (tr.uid, kinds)
+            assert obs_trace.RE_PREFILL in rest, (tr.uid, kinds)
+            assert (rest.index(obs_trace.ADMITTED)
+                    < rest.index(obs_trace.RE_PREFILL)), (tr.uid, kinds)
+        if obs_trace.PREEMPTED in kinds:
+            assert obs_trace.FIRST_TOKEN in kinds, (tr.uid, kinds)
+
+
+def _preemptions_by_tier(sched):
+    return {lbls["tier"]: int(c.value)
+            for lbls, c in sched._c_preempt.children()}
+
+
+@pytest.mark.conformance
+@pytest.mark.parametrize("seed", range(N_SEEDS))
+def test_randomized_overcommit_preemption_conformance(seed, granite, oracle,
+                                                      overcommitted):
+    """The preemption torture: the same seeded schedules as the paged
+    harness, tiered, through a pool whose commit capacity (16) doubles
+    its physical blocks (8) — mid-flight preemption + recompute must
+    stay greedy-token-identical to the oracle, drain the allocator
+    completely, leak zero spans, and record the full preempted ->
+    re-admitted -> re_prefill lifecycle on every resumed trace."""
+    cfg, _ = granite
+    reqs, arrivals, ref = _schedule_and_ref(seed, cfg, oracle)
+    out = overcommitted.generate(_tiered(reqs), arrival_steps=arrivals)
+    assert len(out) == len(reqs)
+    for r in out:
+        np.testing.assert_array_equal(ref[r.uid], r.tokens)
+    _assert_zero_leaks(overcommitted)
+    _assert_span_accounting(overcommitted)
+    _assert_preemption_lifecycle(overcommitted)
+
+    if seed % 5 == 0:
+        # mid-stream abandon while lanes may be preempted/queued for
+        # recompute: teardown must still retire every span and return
+        # every block — the next seed's clean run is the proof
+        it = overcommitted.stream(_tiered(reqs), arrival_steps=arrivals)
+        for _ in range(len(reqs) // 2):
+            next(it)
+        it.close()
+        _assert_zero_leaks(overcommitted)
+        _assert_span_accounting(overcommitted)
+
+
+@pytest.mark.conformance
+def test_overcommit_torture_actually_preempted(overcommitted):
+    """Meta-check on the module-scoped torture engine: across the 25
+    seeded schedules the overcommitted pool really did preempt (many
+    times), and — victims being drawn throughput-first — the latency
+    tier saw at most a sliver of them."""
+    sched = overcommitted.scheduler
+    total = sched.preemptions_total()
+    assert total > 0, "overcommit torture never preempted a lane"
+    by_tier = _preemptions_by_tier(sched)
+    assert by_tier.get("throughput", 0) > 0, by_tier
+
+
+def test_forced_preemption_deterministic(granite):
+    """Deterministic preemption pin: three 5-block requests on an
+    8-block pool with overcommit 2.0 (commit capacity 16 admits all
+    three, physical 8 holds one and a bit) — every lane must be
+    preempted and recomputed at least once, outputs stay oracle-
+    identical, the latency-tier request is never the victim while a
+    throughput lane is live, and the allocator drains to zero."""
+    cfg, params = granite
+    rng = np.random.default_rng(3)
+    reqs = [
+        Request(uid=i,
+                tokens=rng.integers(0, cfg.vocab_size, size=10).astype(np.int32),
+                max_new=11,
+                tier="latency" if i == 0 else "throughput")
+        for i in range(3)
+    ]
+    ref = {r.uid: r.tokens for r in
+           ServeEngine(params, cfg, max_len=MAX_LEN).generate(reqs)}
+    eng = ServeEngine(params, cfg, max_len=MAX_LEN, continuous=True,
+                      policy=SchedulerPolicy(n_slots=N_SLOTS, chunked_prefill=True,
+                                             chunk_sizes=(8, 1), paged=True,
+                                             block_size=BLOCK_SIZE,
+                                             n_blocks=OVERCOMMIT_BLOCKS,
+                                             overcommit=OVERCOMMIT))
+    out = eng.generate(reqs)
+    assert len(out) == len(reqs)
+    for r in out:
+        np.testing.assert_array_equal(ref[r.uid], r.tokens)
+    sched = eng.scheduler
+    assert sched.preemptions_total() > 0
+    by_tier = _preemptions_by_tier(sched)
+    # With 3 lanes in one shard, a latency lane can only be the chosen
+    # victim once no throughput lane is live — and alone it always fits
+    # (up-front rejection bounds lifetime <= physical pool), so it is
+    # never preempted in this workload.
+    assert by_tier.get("latency", 0) == 0, by_tier
+    assert by_tier.get("throughput", 0) == sched.preemptions_total()
+    _assert_zero_leaks(eng)
+    _assert_span_accounting(eng)
+    _assert_preemption_lifecycle(eng)
+    kinds = [e.kind for tr in eng.obs.recorder.traces() for e in tr.events]
+    assert obs_trace.RE_PREFILL in kinds
 
 
 @pytest.mark.parametrize("arch", ["gemma3-12b", "recurrentgemma-9b", "mamba2-130m"])
@@ -265,6 +424,7 @@ def test_paged_cache_bytes_scale_with_blocks(granite):
     assert attn_bytes(dense) == 4 * attn_bytes(small)
 
 
+@pytest.mark.slow
 def test_paged_packed_decode_on_2x4_mesh_matches_single_device():
     """Acceptance: paged decode over PACKED weights on a ("data",
     "model") mesh is token-identical to the single-device bucketed
@@ -315,6 +475,129 @@ def test_paged_packed_decode_on_2x4_mesh_matches_single_device():
     )
     assert out.returncode == 0, out.stderr[-3000:]
     assert "PAGED_MESH_OK" in out.stdout
+
+
+@pytest.mark.slow
+@pytest.mark.conformance
+def test_paged_overcommit_preemption_on_2x4_mesh_matches_single_device():
+    """Acceptance: overcommitted admission + recompute preemption on a
+    ("data", "model") mesh with PACKED weights stays token-identical to
+    the single-device bucketed oracle for both decode paths.  The pool
+    (8 blocks over 2 table shards = 4 physical per shard, commit
+    capacity 8 per shard) cannot hold any two lanes of this workload at
+    once, so every schedule preempts; the allocator must still drain to
+    zero on every shard."""
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(repo, "src")
+    out = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent("""
+            import jax, numpy as np
+            from repro.configs import reduced_config
+            from repro.core.packing import pack_model_params
+            from repro.models import init_params
+            from repro.serve import Request, ServeEngine
+            cfg = reduced_config("granite-3-2b")
+            packed = pack_model_params(init_params(jax.random.PRNGKey(0), cfg), 6)
+            mesh = jax.make_mesh((2, 4), ("data", "model"))
+            def reqs():
+                return [Request(uid=i, tokens=(np.arange(4 + 2 * i, dtype=np.int32) + i)
+                                % cfg.vocab_size, max_new=5,
+                                tier="latency" if i % 4 == 0 else "throughput")
+                        for i in range(5)]
+            ref = {r.uid: r.tokens
+                   for r in ServeEngine(packed, cfg, max_len=32).generate(reqs())}
+            for use_kernel in (False, True):
+                eng = ServeEngine(packed, cfg, max_len=32, mesh=mesh, continuous=True,
+                                  n_slots=4, paged=True, block_size=4, n_blocks=8,
+                                  overcommit=2.0, paged_kernel=use_kernel)
+                for r in eng.generate(reqs(), arrival_steps=[0, 0, 1, 3, 5]):
+                    np.testing.assert_array_equal(ref[r.uid], r.tokens)
+                pool = eng.scheduler.pool
+                assert pool.table_shards == 2, pool.table_shards
+                assert pool.allocator.free_count == pool.n_blocks
+                assert pool.allocator.committed == 0
+                assert eng.scheduler.preemptions_total() > 0, "never preempted"
+                assert not eng.obs.recorder.leaked, eng.obs.recorder.leaked
+            print("PAGED_PREEMPT_MESH_OK")
+        """)],
+        capture_output=True, text=True, env=env, timeout=900,
+    )
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "PAGED_PREEMPT_MESH_OK" in out.stdout
+
+
+def test_overcommit_preemption_randomized_interleavings():
+    """Non-hypothesis twin of test_property.py's overcommit interleaving
+    test (hypothesis is an optional dep): seeded random admit/grow/finish
+    sequences against the overcommitted allocator, mirroring the
+    scheduler's discipline — whenever a grow must preempt, a victim
+    exists (no deadlock), a latency-tier lane is never the victim while
+    a throughput-tier candidate is live, blocks are never double-
+    assigned, and everything drains to zero."""
+    from types import SimpleNamespace
+
+    from repro.serve.scheduler import preemption_order
+
+    rng = np.random.default_rng(0)
+    for trial in range(40):
+        n_slots = int(rng.integers(2, 6))
+        n_blocks = int(rng.integers(2, 21))
+        a = BlockAllocator(n_blocks, 4,
+                           overcommit=float(rng.uniform(1.0, 3.0)))
+        lanes, live_blocks, admit_seq = {}, set(), 0
+
+        def preempt(slot):
+            lane = lanes.pop(slot)
+            live_blocks.difference_update(lane.blocks)
+            if lane.blocks:
+                a.free(lane.blocks)
+            a.release(lane.lifetime)
+
+        for _ in range(60):
+            kind = int(rng.integers(0, 3))
+            if kind == 0 and len(lanes) < n_slots:  # admit
+                lifetime = int(rng.integers(1, n_blocks + 1))
+                if not a.reserve(lifetime):
+                    assert a.committed + lifetime > a.commit_capacity
+                    continue
+                slot = next(s for s in range(n_slots) if s not in lanes)
+                admit_seq += 1
+                lanes[slot] = SimpleNamespace(
+                    tier="latency" if rng.integers(0, 4) == 0 else "throughput",
+                    admit_seq=admit_seq, lifetime=lifetime, blocks=[])
+            elif kind == 1 and lanes:  # grow one lane by one block
+                slot = sorted(lanes)[int(rng.integers(0, len(lanes)))]
+                lane = lanes[slot]
+                if len(lane.blocks) >= lane.lifetime:
+                    continue
+                for _ in range(n_slots + 1):
+                    got = a.alloc(1, owner=slot)
+                    if got is not None:
+                        assert not set(got) & live_blocks
+                        live_blocks.update(got)
+                        lane.blocks.extend(got)
+                        break
+                    cands = [(s, l) for s, l in lanes.items()
+                             if l.blocks or s == slot]
+                    assert len(cands) >= 2, "headroom deadlock"
+                    victim_slot, victim = preemption_order(cands)[0]
+                    if victim.tier == "latency":
+                        assert all(l.tier == "latency" for _, l in cands)
+                    preempt(victim_slot)
+                    if victim_slot == slot:
+                        break
+                else:
+                    raise AssertionError("headroom loop did not terminate")
+            elif kind == 2 and lanes:  # finish
+                preempt(sorted(lanes)[int(rng.integers(0, len(lanes)))])
+
+        for slot in sorted(lanes):
+            preempt(slot)
+        assert a.free_count == n_blocks, trial
+        assert a.committed == 0, trial
+        assert not live_blocks, trial
 
 
 def test_block_allocator_randomized_interleavings():

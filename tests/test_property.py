@@ -135,6 +135,136 @@ def test_block_allocator_alloc_free_interleavings(n_blocks, ops):
 
 @_settings
 @given(
+    cands=st.lists(
+        st.tuples(st.integers(0, 31), st.booleans(), st.integers(0, 100)),
+        min_size=1, max_size=16,
+    )
+)
+def test_preemption_order_throughput_first_then_lifo(cands):
+    """The victim-selection policy over ARBITRARY candidate sets: the
+    ordering is a permutation, every throughput-tier lane precedes every
+    latency-tier lane (a latency lane is never the chosen victim while a
+    throughput one is available), and within a tier the most recently
+    admitted lane goes first (LIFO = least recompute debt, and the
+    oldest lane always progresses)."""
+    from types import SimpleNamespace
+
+    from repro.serve.scheduler import preemption_order
+
+    lanes = [
+        (slot, SimpleNamespace(tier="latency" if lat else "throughput",
+                               admit_seq=seq))
+        for slot, lat, seq in cands
+    ]
+    order = preemption_order(lanes)
+    assert sorted(map(id, (s for _, s in order))) == sorted(
+        map(id, (s for _, s in lanes)))
+    tiers = [s.tier for _, s in order]
+    first_latency = next(
+        (i for i, t in enumerate(tiers) if t == "latency"), len(tiers))
+    assert all(t == "latency" for t in tiers[first_latency:]), tiers
+    for tier in ("throughput", "latency"):
+        seqs = [s.admit_seq for _, s in order if s.tier == tier]
+        assert seqs == sorted(seqs, reverse=True), (tier, seqs)
+
+
+@_settings
+@given(
+    n_slots=st.integers(2, 5),
+    n_blocks=st.integers(2, 20),
+    overcommit=st.floats(1.0, 3.0),
+    ops=st.lists(
+        st.tuples(st.integers(0, 2), st.integers(0, 2**16), st.integers(0, 2**16)),
+        min_size=1, max_size=60,
+    ),
+)
+def test_overcommit_preemption_interleavings(n_slots, n_blocks, overcommit, ops):
+    """Overcommitted-scheduler safety under ARBITRARY admit/grow/finish
+    interleavings, mirroring the scheduler's discipline (reserve the
+    worst-case lifetime at admission against ``commit_capacity``,
+    allocate physically block-by-block, preempt per
+    ``preemption_order`` when a grow finds the pool dry):
+
+    * progress: whenever a grow must preempt, a victim exists — the
+      headroom loop never deadlocks, because admission rejects
+      lifetime > n_blocks up front, so a lane alone in the pool always
+      fits (the scheduler's ``len(candidates) >= 2`` guard);
+    * a latency-tier lane is never preempted while a throughput-tier
+      candidate is live;
+    * blocks are never double-assigned across preemption churn;
+    * commitment and blocks drain to exactly zero once every lane is
+      finished or preempted-and-dropped.
+    """
+    from types import SimpleNamespace
+
+    from repro.serve.scheduler import preemption_order
+    from repro.serve.slots import BlockAllocator
+
+    a = BlockAllocator(n_blocks, 4, overcommit=overcommit)
+    lanes = {}  # slot -> lane state
+    live_blocks = set()
+    admit_seq = 0
+
+    def preempt(slot):
+        lane = lanes.pop(slot)
+        for b in lane.blocks:
+            live_blocks.discard(b)
+        if lane.blocks:
+            a.free(lane.blocks)
+        a.release(lane.lifetime)
+
+    for kind, x, y in ops:
+        if kind == 0 and len(lanes) < n_slots:  # admit
+            lifetime = x % n_blocks + 1  # up-front rule: <= pool size
+            if a.committed + lifetime > a.commit_capacity:
+                assert not a.reserve(lifetime)  # admission holds the line
+                continue
+            assert a.reserve(lifetime)
+            slot = next(s for s in range(n_slots) if s not in lanes)
+            admit_seq += 1
+            lanes[slot] = SimpleNamespace(
+                tier="latency" if y % 4 == 0 else "throughput",
+                admit_seq=admit_seq, lifetime=lifetime, blocks=[])
+        elif kind == 1 and lanes:  # grow one lane by one block
+            slot = sorted(lanes)[x % len(lanes)]
+            lane = lanes[slot]
+            if len(lane.blocks) >= lane.lifetime:
+                continue
+            for _ in range(n_slots + 1):  # headroom loop must terminate
+                got = a.alloc(1, owner=slot)
+                if got is not None:
+                    assert not set(got) & live_blocks, "double-assigned block"
+                    live_blocks.update(got)
+                    lane.blocks.extend(got)
+                    break
+                # pool dry: preempt per policy — a victim must exist
+                cands = [(s, l) for s, l in lanes.items()
+                         if l.blocks or s == slot]
+                assert len(cands) >= 2, (
+                    "headroom deadlock: a lone lane within the up-front "
+                    "bound must always fit")
+                victim_slot, victim = preemption_order(cands)[0]
+                if victim.tier == "latency":
+                    assert all(l.tier == "latency" for _, l in cands), (
+                        "latency lane preempted while a throughput "
+                        "victim was live")
+                preempt(victim_slot)
+                if victim_slot == slot:
+                    break  # the grower itself was the best victim
+            else:
+                raise AssertionError("headroom loop did not terminate")
+        elif kind == 2 and lanes:  # finish a lane
+            preempt(sorted(lanes)[x % len(lanes)])
+
+    for slot in sorted(lanes):
+        preempt(slot)
+    assert a.free_count == n_blocks
+    assert a.committed == 0
+    assert not live_blocks
+
+
+@_settings
+@given(
     seed=st.integers(0, 2**16),
     n_bits=st.integers(2, 8),
     rows=st.integers(1, 6),

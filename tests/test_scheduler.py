@@ -157,6 +157,56 @@ def test_scheduler_rejects_invalid_workloads(granite):
         SchedulerPolicy(n_slots=2, min_admit=2, max_wait=0)
 
 
+def test_overcommit_and_tier_validation(granite):
+    """Overcommit knobs fail fast: factors below 1.0 would strand
+    blocks, overcommit without paging has no preemption escape hatch,
+    aging at 0 steps would flatten the tier ordering, and an unknown
+    SLO tier is a caller bug, not a silent throughput default."""
+    cfg, params = granite
+    with pytest.raises(ValueError, match="overcommit"):
+        SchedulerPolicy(n_slots=2, overcommit=0.5)
+    with pytest.raises(ValueError, match="paged"):
+        SchedulerPolicy(n_slots=2, overcommit=2.0)
+    with pytest.raises(ValueError, match="aging_steps"):
+        SchedulerPolicy(n_slots=2, aging_steps=0)
+    eng = ServeEngine(params, cfg, max_len=16, continuous=True, n_slots=2)
+    with pytest.raises(ValueError, match="tier"):
+        eng.generate([Request(uid=0, tokens=np.arange(4, dtype=np.int32),
+                              max_new=2, tier="gold")])
+
+
+def test_latency_tier_admitted_first_with_aging(granite):
+    """SLO ordering at the admission gate: through a single lane, a
+    late-arriving latency-tier request jumps a throughput request that
+    queued before it — unless that waiter has aged past ``aging_steps``,
+    in which case it is promoted and holds its FIFO position instead of
+    starving."""
+    cfg, params = granite
+
+    def reqs():
+        return [
+            Request(uid=0, tokens=np.arange(4, dtype=np.int32), max_new=3),
+            Request(uid=1, tokens=np.arange(4, dtype=np.int32) + 1, max_new=3),
+            Request(uid=2, tokens=np.arange(4, dtype=np.int32) + 2, max_new=3,
+                    tier="latency"),
+        ]
+
+    def completion_order(aging_steps):
+        eng = ServeEngine(params, cfg, max_len=16, continuous=True,
+                          policy=SchedulerPolicy(n_slots=1, chunked_prefill=True,
+                                                 chunk_sizes=(4, 1),
+                                                 aging_steps=aging_steps))
+        # uid 0 takes the lane; uid 1 queues behind it; the latency
+        # request arrives one step later, while uid 1 is still waiting
+        return [r.uid for r in eng.stream(reqs(), arrival_steps=[0, 0, 1])]
+
+    # default-ish aging (large): latency jumps the queued throughput
+    assert completion_order(aging_steps=64) == [0, 2, 1]
+    # aging_steps=1: uid 1 has aged by the time the lane frees — it is
+    # promoted into the urgent class and FIFO order wins
+    assert completion_order(aging_steps=1) == [0, 1, 2]
+
+
 def test_vector_pos_decode_matches_scalar(granite):
     """Model-layer invariant under the scheduler: decode_step with a (B,)
     position vector of EQUAL entries matches the scalar-position path."""
