@@ -81,6 +81,22 @@ goodput at the top rate stays within 2.5x of the sweep's best, the top
 rate actually preempts (counters visible), and the latency tier's p99
 TTFT beats the throughput tier's.
 
+``--spec-decode`` (with ``--paged`` and ``--packed-bits``) serves the
+workload through bit-plane speculative decoding at each draft depth in
+the ``draft_planes`` sweep {1, 2, 3} — ONE engine serves the whole
+sweep (the plane count is a runtime operand into the draft-step
+program, so changing it compiles nothing) — checks token identity
+against the bucketed reference at every point, and emits one
+``serve_spec`` row per draft depth::
+
+    serve_spec,<us_total>,draft_planes=...;gamma=...;accept_rate=...;rounds=...;committed=...;toks_per_s=...;speedup_x=...;spec_programs=...;leaked_blocks=0
+
+``speedup_x`` is tokens/sec against the non-speculative paged run of
+the same packed engine; under ``--smoke`` the best sweep point must
+clear 1.2x and the whole sweep must stay within ``gamma`` compiled
+programs (it compiles exactly 2: one draft step reused at every round
+depth and precision level, plus one fixed-width verify chunk).
+
 ``--json PATH`` dumps a stable, versioned JSON document
 (``schema_version`` 1): the emitted rows, a metrics-registry snapshot
 per serving mode (the same counters/histograms ``launch.serve
@@ -374,6 +390,17 @@ def main(argv=None):
                          "tight-pool overcommit=2.0 engine with SLO tiers — "
                          "one serve_overload row (goodput + per-tier p99 "
                          "TTFT/TPOT + preemption counters) per offered rate")
+    ap.add_argument("--spec-decode", action="store_true",
+                    help="with --paged and --packed-bits: also serve through "
+                         "bit-plane speculative decoding, sweeping the draft "
+                         "depth over draft_planes in {1,2,3} on ONE engine "
+                         "(runtime plane dispatch — no recompile between "
+                         "points), and emit a serve_spec row per depth with "
+                         "the acceptance rate and the speedup vs the "
+                         "non-speculative paged run")
+    ap.add_argument("--gamma", type=int, default=4,
+                    help="max draft steps per speculative round "
+                         "(--spec-decode)")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="dump all emitted rows as JSON to PATH")
     ap.add_argument("--packed-bits", type=int, default=0,
@@ -392,6 +419,16 @@ def main(argv=None):
         raise SystemExit("--paged-kernel requires --paged")
     if args.overload and not args.paged:
         raise SystemExit("--overload requires --paged")
+    if args.spec_decode and not args.paged:
+        raise SystemExit("--spec-decode requires --paged")
+    if args.spec_decode and args.packed_bits < 2:
+        raise SystemExit("--spec-decode requires --packed-bits >= 2 (drafting "
+                         "truncates the packed weight's bit planes)")
+    if args.spec_decode and args.smoke:
+        # spec decode amortises dispatches over decode rounds — give the
+        # CI workload enough decode steps for the speedup to be signal,
+        # not noise, while staying small
+        args.max_new = 24
     if bool(args.data_parallel) != bool(args.model_parallel):
         raise SystemExit("--data-parallel and --model-parallel must be given together")
     n_dev = args.data_parallel * args.model_parallel
@@ -428,6 +465,7 @@ def main(argv=None):
     snapshots = {}
     quality_rows = []
     overload_stats = []
+    spec_stats = []
 
     # Same requests, greedy: outputs must agree token-for-token.
     ref = {r.uid: r.tokens for r in b_results}
@@ -550,6 +588,70 @@ def main(argv=None):
                 params, cfg, reqs, ref, args.max_len, args.slots,
                 args.block_size, rates, arrival_seed=0, smoke=args.smoke)
             snapshots["overload"] = osched.obs.registry.snapshot()
+        if args.spec_decode:
+            from repro.serve import ServeEngine
+
+            p_tps = p_toks / p_wall
+            # dp == n_bits is the degenerate-but-legal top point: drafts
+            # are bitwise-exact (acceptance 1.0), isolating the fused
+            # round's dispatch amortisation from the precision tradeoff.
+            sweep = tuple(dp for dp in (1, 2, 3) if dp <= args.packed_bits)
+            s_engine = ServeEngine(
+                params, cfg, max_len=args.max_len, continuous=True,
+                n_slots=args.slots, mesh=mesh, paged=True, block_size=bs,
+                n_blocks=n_blocks, spec_decode=True,
+                draft_planes=sweep[0], gamma=args.gamma)
+            ssched = s_engine.scheduler
+            for dp in sweep:
+                # The draft depth is a RUNTIME operand into the fused
+                # draft+verify program: the whole sweep reuses one
+                # engine and compiles nothing new between points.
+                ssched.policy.draft_planes = dp
+                s_engine.generate(reqs(), arrival_steps=arrivals)  # warmup
+                ssched.pool.reset()
+                ssched.reset_telemetry()
+                t0 = time.perf_counter()
+                s_results = s_engine.generate(reqs(), arrival_steps=arrivals)
+                s_wall = time.perf_counter() - t0
+                # Speculation must never change a greedy token.
+                for r in s_results:
+                    np.testing.assert_array_equal(ref[r.uid], r.tokens)
+                s_alloc = ssched.pool.allocator
+                s_leaked = s_alloc.n_blocks - s_alloc.free_count
+                s_toks = sum(len(r.tokens) for r in s_results)
+                s_tps = s_toks / s_wall
+                accept = ssched.spec_accept_rate()
+                emit("serve_spec", s_wall * 1e6,
+                     f"draft_planes={dp};gamma={args.gamma};"
+                     f"accept_rate={accept:.3f};rounds={ssched.spec_rounds};"
+                     f"drafted={ssched.spec_drafted};"
+                     f"committed={ssched.spec_committed};"
+                     f"toks_per_s={s_tps:.1f};"
+                     f"speedup_x={s_tps / p_tps:.2f};"
+                     f"spec_programs={ssched.compiled_spec_programs()};"
+                     f"leaked_blocks={s_leaked}")
+                spec_stats.append({
+                    "draft_planes": dp, "gamma": args.gamma,
+                    "accept_rate": accept, "rounds": ssched.spec_rounds,
+                    "drafted": ssched.spec_drafted,
+                    "committed": ssched.spec_committed,
+                    "toks_per_s": s_tps, "speedup_x": s_tps / p_tps,
+                })
+                if args.smoke:
+                    assert s_leaked == 0, f"{s_leaked} blocks leaked"
+                    assert s_alloc.committed == 0, s_alloc.committed
+                    assert ssched.spec_rounds > 0
+            snapshots["spec"] = ssched.obs.registry.snapshot()
+            if args.smoke:
+                # one fused program per round depth — NOT per (depth x
+                # precision); the sweep would have tripled this if the
+                # plane count were compiled in
+                assert ssched.compiled_spec_programs() <= args.gamma, (
+                    ssched.compiled_spec_programs(), args.gamma)
+                best = max(s["speedup_x"] for s in spec_stats)
+                assert best >= 1.2, (
+                    f"spec decode best speedup {best:.2f}x < 1.2x over the "
+                    f"non-speculative paged run ({p_tps:.1f} tok/s)")
     if args.packed_bits:
         glob, per_dev = packed_hbm_stats(sched.engine)
         shrink = glob / max(per_dev, 1)
@@ -618,6 +720,10 @@ def main(argv=None):
             # Additive (schema_version stays 1): per-rate overload sweep
             # stats, one object per offered rate, empty without --overload.
             "overload": overload_stats,
+            # Additive: the spec-decode draft_planes sweep, one object per
+            # draft depth (acceptance rate + speedup vs the non-spec paged
+            # run), empty without --spec-decode.
+            "spec": spec_stats,
         }
         with open(args.json, "w") as f:
             json.dump(doc, f, indent=2, sort_keys=True)

@@ -44,10 +44,23 @@ class PackedWeight:
     kn_spec: Optional[Tuple] = dataclasses.field(
         default=None, metadata=dict(static=True)
     )
+    # Bit width of the dequantisation denominator ``2^denom_bits - 1``.
+    # None = n_bits (a freshly packed weight).  A truncated view
+    # (truncate_packed) keeps the ORIGINAL denominator and folds the
+    # dropped planes' shift into the scale as a pure power of two, so
+    # the truncated static path is bitwise-identical to the kernels'
+    # runtime active-plane masking (powers of two scale floats exactly).
+    denom_bits: Optional[int] = dataclasses.field(
+        default=None, metadata=dict(static=True)
+    )
 
     @property
     def shape(self) -> Tuple[int, ...]:
         return self.planes.shape[:-3] + (self.k, self.planes.shape[-1])
+
+    @property
+    def eff_denom_bits(self) -> int:
+        return self.n_bits if self.denom_bits is None else self.denom_bits
 
     def hbm_bytes(self) -> int:
         return int(self.planes.size + self.sign.size + self.scale.size * 4)
@@ -160,12 +173,46 @@ def unpack_to_float(pw: PackedWeight, dtype=jnp.float32) -> jax.Array:
         for b in range(pw.n_bits)
     )
     sgn = 1 - 2 * unpack_bits_axis0(pw.sign, k).astype(jnp.int32)
-    denom = 2.0**pw.n_bits - 1.0
+    denom = 2.0**pw.eff_denom_bits - 1.0
     s = jnp.asarray(pw.scale, dtype)
     n = mag.shape[-1]
     if s.ndim and s.shape[-1] not in (1, n):
         s = jnp.repeat(s, n // s.shape[-1], axis=-1)
     return (sgn * mag).astype(dtype) * (s / denom)
+
+
+def truncate_packed(pw: PackedWeight, k: int) -> PackedWeight:
+    """Keep the ``k`` most significant magnitude planes of a PackedWeight.
+
+    The truncated integer code is ``q' = (q >> (n-k)) << (n-k)`` (the
+    dropped LSB planes zeroed); re-expressed over the kept planes::
+
+        W_trunc = sign * scale * q' / (2^n - 1)
+                = sign * [scale * 2^(n-k)] * q_k / (2^n - 1)
+
+    so the fold is a pure power of two and the ORIGINAL denominator
+    rides along in ``denom_bits`` — which makes this view *bitwise*
+    identical to the kernels' runtime ``active_planes=k`` masking
+    (power-of-two scaling is exact in float and distributes through
+    the matmul and the epilogue).  No re-quantisation, no second copy
+    of the planes (the plane slice is a view of the same bytes).
+    ``k >= n_bits`` returns ``pw`` unchanged.
+    """
+    if k < 1:
+        raise ValueError(f"need k >= 1 active planes, got {k}")
+    n = pw.n_bits
+    if k >= n:
+        return pw
+    # planes axis is the third-from-last: (..., n_bits, K//8, N); plane b
+    # holds bit b (LSB-first), so the top-k planes are the last k.
+    planes = pw.planes[..., n - k:, :, :]
+    return dataclasses.replace(
+        pw,
+        planes=planes,
+        scale=pw.scale * float(2 ** (n - k)),
+        n_bits=k,
+        denom_bits=pw.eff_denom_bits,
+    )
 
 
 def pack_from_float(w: jax.Array, n_bits: int, group_cols: int | None = None) -> PackedWeight:

@@ -33,7 +33,7 @@ from jax.experimental.pallas import tpu as pltpu
 
 
 def _kernel(x_ref, planes_ref, sign_ref, scale_ref, out_ref, acc_ref, *, n_bits: int,
-            nsteps_k: int, out_dtype):
+            denom_bits: int, nsteps_k: int, out_dtype):
     k = pl.program_id(2)
 
     @pl.when(k == 0)
@@ -62,26 +62,64 @@ def _kernel(x_ref, planes_ref, sign_ref, scale_ref, out_ref, acc_ref, *, n_bits:
 
     @pl.when(k == nsteps_k - 1)
     def _finish():
-        denom = 2.0**n_bits - 1.0
+        denom = 2.0**denom_bits - 1.0
         s = scale_ref[...] * (1.0 / denom)  # (1, bn) f32 epilogue row
         out_ref[...] = (acc_ref[...] * s).astype(out_dtype)
 
 
-@functools.partial(
-    jax.jit, static_argnames=("n_bits", "block_m", "block_n", "block_k", "interpret")
-)
-def bitserial_matmul_pallas(
-    x: jax.Array,  # (M, K)
-    planes: jax.Array,  # (n_bits, K/8, N) uint8
-    sign: jax.Array,  # (K/8, N) uint8
-    scale: jax.Array,  # (1, N) f32 per-output-column scale row
-    *,
-    n_bits: int,
-    block_m: int = 128,
-    block_n: int = 128,
-    block_k: int = 512,
-    interpret: bool = False,
-) -> jax.Array:
+def _kernel_dyn(active_ref, x_ref, planes_ref, sign_ref, scale_ref, out_ref, acc_ref,
+                *, n_bits: int, denom_bits: int, nsteps_k: int, out_dtype):
+    """Runtime-active-plane variant: ``active_ref`` is a (1, 1) int32 SMEM
+    scalar selecting the ``a`` most significant planes.  Skipped planes'
+    contributions are masked to exact zeros and the dropped LSB shift
+    folds into the epilogue as ``2^(n-a)`` — a power of two, so the
+    output is bitwise-equal to the static kernel over
+    ``core.packing.truncate_packed(pw, a)``.  DMA traffic is unchanged
+    (every plane tile still lands in VMEM); the win this kernel buys is
+    ONE compiled program serving every precision level.
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    a = jnp.clip(active_ref[0, 0], 1, n_bits)
+    lo = n_bits - a  # first live plane (traced scalar)
+    lo_f = lo.astype(jnp.float32)
+
+    x = x_ref[...]  # (bm, bk)
+    sign = sign_ref[...]  # (bk/8, bn) uint8
+    bk8, bn = sign.shape
+
+    shifts = jnp.arange(8, dtype=jnp.uint8).reshape(1, 8, 1)
+
+    def unpack(p):  # (bk/8, bn) -> (bk, bn) {0,1} int8
+        bits = (p[:, None, :] >> shifts) & 1
+        return bits.reshape(bk8 * 8, bn)
+
+    mag = jnp.zeros((bk8 * 8, bn), jnp.float32)
+    for b in range(n_bits):
+        # live planes reweight to 2^(b-lo); dead planes contribute 0.0
+        wgt = jnp.where(b >= lo, jnp.exp2(jnp.float32(b) - lo_f), 0.0)
+        mag = mag + unpack(planes_ref[b]).astype(jnp.float32) * wgt
+    sgn = 1.0 - 2.0 * unpack(sign).astype(jnp.float32)
+    w = (sgn * mag).astype(x.dtype)  # (bk, bn)
+
+    acc_ref[...] += jax.lax.dot(
+        x, w, preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == nsteps_k - 1)
+    def _finish():
+        denom = 2.0**denom_bits - 1.0
+        # (scale * 2^lo) first — exact — then the reciprocal multiply,
+        # the same rounding sequence as the static kernel's epilogue.
+        s = (scale_ref[...] * jnp.exp2(lo_f)) * (1.0 / denom)
+        out_ref[...] = (acc_ref[...] * s).astype(out_dtype)
+
+
+def _grid_blocks(x, sign, scale, block_m, block_n, block_k):
     M, K = x.shape
     N = sign.shape[-1]
     block_m = min(block_m, M)
@@ -91,10 +129,34 @@ def bitserial_matmul_pallas(
     assert M % block_m == 0 and N % block_n == 0, (M, N, block_m, block_n)
     assert scale.shape == (1, N), (scale.shape, N)
     nk = K // block_k
+    return (M, N, nk, block_m, block_n, block_k)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("n_bits", "denom_bits", "block_m", "block_n", "block_k", "interpret"),
+)
+def bitserial_matmul_pallas(
+    x: jax.Array,  # (M, K)
+    planes: jax.Array,  # (n_bits, K/8, N) uint8
+    sign: jax.Array,  # (K/8, N) uint8
+    scale: jax.Array,  # (1, N) f32 per-output-column scale row
+    *,
+    n_bits: int,
+    denom_bits: int | None = None,
+    block_m: int = 128,
+    block_n: int = 128,
+    block_k: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    M, N, nk, block_m, block_n, block_k = _grid_blocks(
+        x, sign, scale, block_m, block_n, block_k
+    )
     grid = (M // block_m, N // block_n, nk)
     kern = functools.partial(
         _kernel,
         n_bits=n_bits,
+        denom_bits=n_bits if denom_bits is None else denom_bits,
         nsteps_k=nk,
         out_dtype=x.dtype,
     )
@@ -112,3 +174,53 @@ def bitserial_matmul_pallas(
         scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32)],
         interpret=interpret,
     )(x, planes, sign, scale.astype(jnp.float32))
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("n_bits", "denom_bits", "block_m", "block_n", "block_k", "interpret"),
+)
+def bitserial_matmul_pallas_dyn(
+    x: jax.Array,  # (M, K)
+    planes: jax.Array,  # (n_bits, K/8, N) uint8
+    sign: jax.Array,  # (K/8, N) uint8
+    scale: jax.Array,  # (1, N) f32 per-output-column scale row
+    active: jax.Array,  # (1, 1) int32 runtime active-plane count
+    *,
+    n_bits: int,
+    denom_bits: int | None = None,
+    block_m: int = 128,
+    block_n: int = 128,
+    block_k: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    """One compiled program for every precision level: ``active`` rides
+    in SMEM as a runtime scalar, so draft (few-plane) and full-precision
+    dispatches hit the same executable."""
+    M, N, nk, block_m, block_n, block_k = _grid_blocks(
+        x, sign, scale, block_m, block_n, block_k
+    )
+    grid = (M // block_m, N // block_n, nk)
+    kern = functools.partial(
+        _kernel_dyn,
+        n_bits=n_bits,
+        denom_bits=n_bits if denom_bits is None else denom_bits,
+        nsteps_k=nk,
+        out_dtype=x.dtype,
+    )
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i, j, k: (0, 0), memory_space=pltpu.SMEM),
+            pl.BlockSpec((block_m, block_k), lambda i, j, k: (i, k)),
+            pl.BlockSpec((planes.shape[0], block_k // 8, block_n), lambda i, j, k: (0, k, j)),
+            pl.BlockSpec((block_k // 8, block_n), lambda i, j, k: (k, j)),
+            pl.BlockSpec((1, block_n), lambda i, j, k: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), x.dtype),
+        scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32)],
+        interpret=interpret,
+    )(jnp.asarray(active, jnp.int32).reshape(1, 1), x, planes, sign,
+      scale.astype(jnp.float32))

@@ -14,7 +14,7 @@ from jax.sharding import PartitionSpec as P
 from ..core.packing import PackedWeight, scale_row
 from . import ref
 from .bgl_norm import bgl_sumsq_pallas
-from .bitserial_matmul import bitserial_matmul_pallas
+from .bitserial_matmul import bitserial_matmul_pallas, bitserial_matmul_pallas_dyn
 from .flash_attention import flash_attention_pallas
 from .paged_attention import paged_attention_pallas
 
@@ -24,13 +24,22 @@ def _on_tpu() -> bool:
 
 
 def bitserial_matmul(
-    x: jax.Array, pw: PackedWeight, *, use_pallas: bool | None = None, interpret: bool | None = None
+    x: jax.Array, pw: PackedWeight, *, active_planes=None,
+    use_pallas: bool | None = None, interpret: bool | None = None
 ) -> jax.Array:
     """x (..., K) @ packed weight (K, N) with on-the-fly dequantisation.
 
     The per-group scale row is applied as an output-column epilogue
     (inside the Pallas kernel's final k step; same formula on the ref
     path), so per-group exports dequantise exactly on both backends.
+
+    ``active_planes`` — a *runtime* (not compiled) int32 scalar — keeps
+    only the ``a`` most significant planes in the accumulation; the
+    dropped planes' shift folds into the epilogue as an exact power of
+    two, so the output is bitwise-equal to the static path over
+    ``core.packing.truncate_packed(pw, a)`` while ONE compiled program
+    serves every precision level (the spec-decode draft dispatch).
+    ``None`` keeps the fully static path untouched.
     """
     lead = x.shape[:-1]
     x2 = x.reshape(-1, x.shape[-1])
@@ -42,12 +51,24 @@ def bitserial_matmul(
         bm = 128 if M % 128 == 0 else (8 if M % 8 == 0 else M)
         bn = 128 if N % 128 == 0 else N
         bk = 512 if K % 512 == 0 else (128 if K % 128 == 0 else K)
-        out = bitserial_matmul_pallas(
-            x2, pw.planes, pw.sign, scale_row(pw.scale, N), n_bits=pw.n_bits,
-            block_m=bm, block_n=bn, block_k=bk, interpret=interpret,
-        )
+        if active_planes is None:
+            out = bitserial_matmul_pallas(
+                x2, pw.planes, pw.sign, scale_row(pw.scale, N), n_bits=pw.n_bits,
+                denom_bits=pw.denom_bits,
+                block_m=bm, block_n=bn, block_k=bk, interpret=interpret,
+            )
+        else:
+            out = bitserial_matmul_pallas_dyn(
+                x2, pw.planes, pw.sign, scale_row(pw.scale, N),
+                jnp.asarray(active_planes, jnp.int32).reshape(1, 1),
+                n_bits=pw.n_bits, denom_bits=pw.denom_bits,
+                block_m=bm, block_n=bn, block_k=bk, interpret=interpret,
+            )
     else:
-        out = ref.bitserial_matmul_ref(x2, pw.planes, pw.sign, pw.scale, pw.n_bits)
+        out = ref.bitserial_matmul_ref(
+            x2, pw.planes, pw.sign, pw.scale, pw.n_bits,
+            denom_bits=pw.denom_bits, active_planes=active_planes,
+        )
     return out.reshape(*lead, -1)
 
 
@@ -66,6 +87,7 @@ def bitserial_matmul_sharded(
     pw: PackedWeight,
     mesh,
     *,
+    active_planes=None,
     use_pallas: bool | None = None,
     interpret: bool | None = None,
 ) -> jax.Array:
@@ -116,7 +138,8 @@ def bitserial_matmul_sharded(
             "packed bytes will be gathered at the kernel call",
             stacklevel=2,
         )
-        return bitserial_matmul(x, pw, use_pallas=use_pallas, interpret=interpret)
+        return bitserial_matmul(x, pw, active_planes=active_planes,
+                                use_pallas=use_pallas, interpret=interpret)
 
     from ..dist.collectives import shard_map_compat
 
@@ -132,16 +155,35 @@ def bitserial_matmul_sharded(
         pw, planes=P(None, k_ax, n_ax), sign=P(k_ax, n_ax), scale=s_spec
     )
 
-    def local(xl, pwl):
-        y = bitserial_matmul(xl, pwl, use_pallas=use_pallas, interpret=interpret)
+    if active_planes is None:
+        def local(xl, pwl):
+            y = bitserial_matmul(xl, pwl, use_pallas=use_pallas, interpret=interpret)
+            if k_ax is not None:
+                y = jax.lax.psum(y, k_ax)
+            return y
+
+        f = shard_map_compat(
+            local, mesh, in_specs=(P(None, k_ax), spec_pw), out_specs=P(None, n_ax)
+        )
+        return f(x2, pw).reshape(*lead, -1)
+
+    # Runtime active-plane count: a replicated (1, 1) scalar operand —
+    # every shard masks the same planes of its LOCAL packed bytes, so
+    # the packed sharding (and the psum stitching) is unchanged.
+    def local_dyn(xl, pwl, al):
+        y = bitserial_matmul(xl, pwl, active_planes=al,
+                             use_pallas=use_pallas, interpret=interpret)
         if k_ax is not None:
             y = jax.lax.psum(y, k_ax)
         return y
 
     f = shard_map_compat(
-        local, mesh, in_specs=(P(None, k_ax), spec_pw), out_specs=P(None, n_ax)
+        local_dyn, mesh,
+        in_specs=(P(None, k_ax), spec_pw, P(None, None)),
+        out_specs=P(None, n_ax),
     )
-    return f(x2, pw).reshape(*lead, -1)
+    a2 = jnp.asarray(active_planes, jnp.int32).reshape(1, 1)
+    return f(x2, pw, a2).reshape(*lead, -1)
 
 
 def bgl_sumsq(x: jax.Array, *, use_pallas: bool | None = None, interpret: bool | None = None):

@@ -7,21 +7,51 @@ import jax.numpy as jnp
 from ..core.packing import scale_row, unpack_bits_axis0
 
 
-def bitserial_matmul_ref(x, planes, sign, scale, n_bits: int):
-    """x (M,K) @ dequant(planes, sign) * scale_row / (2^n - 1).
+def bitserial_matmul_ref(x, planes, sign, scale, n_bits: int,
+                         denom_bits: int | None = None, active_planes=None):
+    """x (M,K) @ dequant(planes, sign) * scale_row / (2^denom_bits - 1).
 
     ``scale`` may be a scalar or a per-group ``(1, G)`` row (G dividing
     N); either way it is applied as an output-column epilogue, matching
-    the Pallas kernel's final-k step exactly.
+    the Pallas kernel's final-k step exactly.  ``denom_bits`` (default
+    ``n_bits``) carries a truncated view's original denominator.
+
+    ``active_planes`` — a *runtime* int32 scalar — restricts the
+    accumulation to the ``a`` most significant planes: the plane loop
+    is statically unrolled with a per-plane mask (a dynamic-bound
+    ``fori_loop`` defeats XLA's unroll-and-fuse and costs ~2x per
+    dispatch on CPU hosts; real plane-skipping lives in the Pallas dyn
+    kernel), and the dropped planes' shift folds into the epilogue as
+    ``2^(n-a)`` — a power of two.  Masked planes contribute exact
+    zeros added in the same order as the truncated static path, so the
+    result is BITWISE equal to running the static path on
+    ``core.packing.truncate_packed(pw, a)``.
     """
     K = x.shape[1]
-    mag = sum(
-        unpack_bits_axis0(planes[b], K).astype(jnp.float32) * (2.0**b) for b in range(n_bits)
-    )
+    denom = 2.0 ** (n_bits if denom_bits is None else denom_bits) - 1.0
+    N = sign.shape[-1]
+    if active_planes is None:
+        mag = sum(
+            unpack_bits_axis0(planes[b], K).astype(jnp.float32) * (2.0**b)
+            for b in range(n_bits)
+        )
+        s = scale_row(scale, N) / denom
+    else:
+        a = jnp.clip(jnp.asarray(active_planes, jnp.int32).reshape(()), 1, n_bits)
+        lo = n_bits - a  # first live plane; kept planes reweight to 2^(b-lo)
+        lo_f = lo.astype(jnp.float32)
+        mag = jnp.zeros((K, N), jnp.float32)
+        for b in range(n_bits):
+            t = unpack_bits_axis0(planes[b], K).astype(jnp.float32)
+            # 0.0 for a dropped plane: t >= 0, so t * 0.0 is +0.0 and
+            # the accumulation order/values match the truncated path.
+            w_b = jnp.where(b >= lo, jnp.exp2(jnp.float32(b) - lo_f), 0.0)
+            mag = mag + t * w_b
+        # (scale * 2^(n-a)) first — exact — then the denom divide, the
+        # same rounding sequence as the static truncated path.
+        s = (scale_row(scale, N) * jnp.exp2(lo_f)) / denom
     sgn = 1.0 - 2.0 * unpack_bits_axis0(sign, K).astype(jnp.float32)
     w = (sgn * mag).astype(x.dtype)
-    denom = 2.0**n_bits - 1.0
-    s = scale_row(scale, w.shape[-1]) / denom
     return (x @ w) * s.astype(x.dtype)
 
 

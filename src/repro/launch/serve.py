@@ -41,6 +41,15 @@ Scheduling modes:
   ``--tier {throughput,latency,mixed}`` assigns request SLO classes:
   latency-tier requests are admitted first and preempted last (mixed
   marks every 4th request latency).
+* ``--spec-decode`` (with ``--paged`` and ``--packed-bits``): bit-plane
+  speculative decoding — decode lanes self-draft up to ``--gamma``
+  tokens per round running the SAME packed weights at
+  ``--draft-planes`` active bit planes (a runtime operand into the
+  bitserial matmuls, no second model), then one full-precision
+  chunked-prefill verify scores every drafted position in the same
+  fused program.  Accepted prefixes commit; rejected tails rewind lane
+  positions through the block tables (greedy verify makes the output
+  token-identical to non-speculative decode).
 
 With --data-parallel/--model-parallel the engine serves on a real
 ("data", "model") mesh: params, the KV cache and the slot pool are
@@ -122,6 +131,23 @@ def main():
                          "under pressure a victim lane's blocks are reclaimed "
                          "and the request re-prefills prompt + generated "
                          "tokens (token-identical recompute swap)")
+    ap.add_argument("--spec-decode", action="store_true",
+                    help="bit-plane speculative decoding (with --paged and "
+                         "--packed-bits): decode lanes self-draft --gamma "
+                         "steps from the --draft-planes most significant bit "
+                         "planes of the same packed weights (a runtime "
+                         "operand — one compiled program per round depth), "
+                         "then one full-precision verify chunk scores every "
+                         "drafted position; greedy output is token-identical "
+                         "to non-speculative decode")
+    ap.add_argument("--draft-planes", type=int, default=2,
+                    help="active bit planes during draft steps (with "
+                         "--spec-decode); must be < --packed-bits to draft "
+                         "cheaper than full precision")
+    ap.add_argument("--gamma", type=int, default=4,
+                    help="max draft steps per speculative round (with "
+                         "--spec-decode); per-lane depth backs off on "
+                         "rejections")
     ap.add_argument("--tier", choices=("throughput", "latency", "mixed"),
                     default="throughput",
                     help="SLO class stamped on requests: latency-tier is "
@@ -161,6 +187,18 @@ def main():
     if args.overcommit != 1.0 and not args.paged:
         raise SystemExit("--overcommit requires --paged (only the block pool "
                          "has commitment accounting)")
+    if args.spec_decode and not args.paged:
+        raise SystemExit("--spec-decode requires --paged (draft rollback "
+                         "rewinds lane positions through the block tables)")
+    if args.spec_decode and not args.packed_bits:
+        raise SystemExit("--spec-decode requires --packed-bits (drafting "
+                         "truncates the packed weight's bit planes)")
+    if args.spec_decode and args.temperature > 0:
+        raise SystemExit("--spec-decode requires --temperature 0 (greedy "
+                         "verify is what makes spec output token-identical)")
+    if args.spec_decode and not 1 <= args.draft_planes < args.packed_bits:
+        raise SystemExit(f"--draft-planes {args.draft_planes} must be in "
+                         f"[1, --packed-bits {args.packed_bits})")
 
     from ..configs import reduced_config
     from ..data import MarkovLM
@@ -209,7 +247,10 @@ def main():
                          block_size=args.block_size,
                          n_blocks=args.blocks or None,
                          paged_kernel=args.paged_kernel,
-                         overcommit=args.overcommit, obs=obs)
+                         overcommit=args.overcommit,
+                         spec_decode=args.spec_decode,
+                         draft_planes=args.draft_planes, gamma=args.gamma,
+                         obs=obs)
     task = MarkovLM(vocab=cfg.vocab_size, seed=3)
     if args.mixed_lens:
         lens = [max(2, args.prompt_len * m // 2) for m in (1, 2, 3, 4)]
@@ -262,6 +303,14 @@ def main():
                       f"commit_capacity={pool.allocator.commit_capacity}"
                       f"x{pool.allocator.n_shards} "
                       f"preemptions={sched.preemptions_total()}")
+            if args.spec_decode:
+                print(f"[spec] draft_planes={args.draft_planes} "
+                      f"gamma={args.gamma} rounds={sched.spec_rounds} "
+                      f"drafted={sched.spec_drafted} "
+                      f"accepted={sched.spec_accepted} "
+                      f"committed={sched.spec_committed} "
+                      f"accept_rate={sched.spec_accept_rate():.2f} "
+                      f"spec_programs={sched.compiled_spec_programs()}")
     if args.trace_out:
         n = obs.recorder.dump_jsonl(args.trace_out)
         print(f"[obs] {n} request traces -> {args.trace_out}")
@@ -294,6 +343,8 @@ def _obs_smoke(args, obs, server):
         required += ["serve_occupancy", "serve_decode_step_ms"]
     if args.paged:
         required += ["serve_blocks_alloc_total", "serve_block_pool_free"]
+    if args.spec_decode:
+        required += ["serve_spec_rounds_total", "serve_spec_accept_total"]
     missing = [f for f in required
                if f not in families or not families[f]["samples"]]
     if missing:

@@ -77,6 +77,32 @@ def paged_mesh():
     return _paged_mesh_var.get()
 
 
+# Runtime active-plane count for packed matmuls (None = all planes).
+# Set for the duration of a trace by the spec-decode draft dispatch via
+# active_plane_count(); read by dense_apply at trace time.  The value is
+# typically a TRACED int32 scalar (a jitted program operand), which is
+# the whole point: one compiled decode program serves every precision
+# level — draft steps pass draft_planes, verify passes n_bits — with no
+# recompilation.  Same ContextVar discipline as _packed_mesh_var.
+_active_planes_var: contextvars.ContextVar = contextvars.ContextVar(
+    "active_plane_count", default=None
+)
+
+
+@contextlib.contextmanager
+def active_plane_count(n):
+    """Trace the enclosed computation with packed matmuls restricted to
+    the ``n`` most significant bit planes at RUNTIME (bitwise-equal to
+    statically truncating via ``core.packing.truncate_packed``; see
+    ``kernels.ops.bitserial_matmul``).  ``n=None`` is a no-op (full
+    precision)."""
+    token = _active_planes_var.set(n)
+    try:
+        yield
+    finally:
+        _active_planes_var.reset(token)
+
+
 def dense_apply(x: jax.Array, w) -> jax.Array:
     """x @ w, dispatching on representation: plain array, or a BSQ
     PackedWeight (sign+magnitude bit-planes) dequantised on the fly —
@@ -88,15 +114,16 @@ def dense_apply(x: jax.Array, w) -> jax.Array:
 
     if isinstance(w, PackedWeight):
         mesh = _packed_mesh_var.get()
+        active = _active_planes_var.get()
         if (
             mesh is not None
             and w.kn_spec is not None
             and any(a is not None for a in w.kn_spec)
         ):
-            return ops.bitserial_matmul_sharded(x, w, mesh)
+            return ops.bitserial_matmul_sharded(x, w, mesh, active_planes=active)
         # use_pallas=None -> ops dispatches by backend (Pallas kernel on
         # TPU, fused-unpack XLA ref elsewhere).
-        return ops.bitserial_matmul(x, w, use_pallas=None)
+        return ops.bitserial_matmul(x, w, active_planes=active, use_pallas=None)
     return x @ w.astype(x.dtype)
 
 

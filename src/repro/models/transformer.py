@@ -589,6 +589,7 @@ def prefill_chunk(
     cache_dtype=jnp.bfloat16,
     cross_embeds: Optional[jax.Array] = None,
     block_table: Optional[jax.Array] = None,
+    return_all_logits: bool = False,
 ):
     """One fixed-size prefill chunk over the whole slot pool.
 
@@ -614,7 +615,12 @@ def prefill_chunk(
     logits at lane b's last real token of this chunk — the scheduler
     samples the first generated token from it when the chunk completes
     the lane's prompt (rows of lanes that didn't finish are garbage and
-    must be ignored)."""
+    must be ignored).
+
+    ``return_all_logits=True`` returns ``(logits (B, C, V), new_cache)``
+    instead — the logits at EVERY chunk position (positions >= n_valid
+    are garbage).  This is the spec-decode verify step: one chunk pass
+    at full precision scores every drafted position at once."""
     dt = cfg.compute_dtype
     x = embed_apply(params["embed"], tokens, dt) * jnp.asarray(cfg.d_model**0.5, dt)
     cross_src = None if cross_embeds is None else cross_embeds.astype(dt)
@@ -641,10 +647,12 @@ def prefill_chunk(
             new_tail.append(c)
         new_cache["tail"] = new_tail
     x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    if return_all_logits:
+        return logits_apply(head, x, cfg.logit_softcap), new_cache
     # logits only at each lane's last real token (same row math as
     # prefill's x[:, -1:], so greedy stays token-identical to the oracle)
     last = jnp.clip(n_valid - 1, 0, tokens.shape[1] - 1)
     x_last = jnp.take_along_axis(x, last[:, None, None], axis=1)
-    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
     logits = logits_apply(head, x_last, cfg.logit_softcap)
     return logits[:, 0], new_cache

@@ -42,32 +42,12 @@ LAYER_GROUPS: Dict[str, Tuple[str, ...]] = {
 
 
 def truncate_packed(pw, k: int):
-    """Keep the ``k`` most significant magnitude planes of a PackedWeight.
+    """Re-export shim: the truncation now lives in ``core.packing`` (the
+    serve path — spec-decode drafting — must not import the obs package
+    for it).  See :func:`repro.core.packing.truncate_packed`."""
+    from ..core.packing import truncate_packed as _truncate
 
-    The truncated integer code is ``q' = (q >> (n-k)) << (n-k)`` (the
-    dropped LSB planes zeroed); re-expressed as a k-bit PackedWeight its
-    scale row absorbs the shift exactly::
-
-        W_trunc = sign * scale * q' / (2^n - 1)
-                = sign * [scale * 2^(n-k) * (2^k - 1) / (2^n - 1)] * q_k / (2^k - 1)
-
-    so ``unpack_to_float(truncate_packed(pw, k))`` equals the full
-    dequantisation with the low planes zeroed — no re-quantisation, no
-    second copy of the planes (the plane slice is a view of the same
-    bytes).  ``k >= n_bits`` returns ``pw`` unchanged.
-    """
-    import dataclasses as _dc
-
-    if k < 1:
-        raise ValueError(f"need k >= 1 active planes, got {k}")
-    n = pw.n_bits
-    if k >= n:
-        return pw
-    # planes axis is the third-from-last: (..., n_bits, K//8, N); plane b
-    # holds bit b (LSB-first), so the top-k planes are the last k.
-    planes = pw.planes[..., n - k:, :, :]
-    factor = (2.0 ** (n - k)) * (2.0 ** k - 1.0) / (2.0 ** n - 1.0)
-    return _dc.replace(pw, planes=planes, scale=pw.scale * factor, n_bits=k)
+    return _truncate(pw, k)
 
 
 def truncate_model_planes(params, k: int,

@@ -14,6 +14,12 @@ its recompute chunks.  A preempted-and-resumed trace therefore reads::
     ... decode_step* -> preempted -> admitted -> re_prefill
                      -> prefill_chunk* -> decode_step* -> finished
 
+Speculative decoding replaces the per-token ``decode_step`` events on a
+spec lane with one ``draft`` + ``verify`` pair per round (and a
+``rollback`` when drafts were rejected)::
+
+    ... first_token -> (draft -> verify [-> rollback])* -> finished
+
 Every path that serves a request (bucketed engine, legacy continuous,
 chunked/paged continuous) records the same events through one
 :class:`FlightRecorder`, which keeps the in-flight traces plus a ring of
@@ -60,9 +66,20 @@ EVICTED = "evicted"
 # still measures the original admitted -> first_token span.
 PREEMPTED = "preempted"
 RE_PREFILL = "re_prefill"
+# Bit-plane speculative decoding: each spec round records one DRAFT
+# event (steps = pooled draft steps the lane rode at draft precision)
+# and one VERIFY event (accepted / committed counts from the
+# full-precision chunk scoring).  A round that rejected drafts also
+# records ROLLBACK (rejected draft count + tail blocks returned to the
+# pool) — position rewind is pure bookkeeping, so these three replace
+# the per-token DECODE_STEP events on spec lanes.
+DRAFT = "draft"
+VERIFY = "verify"
+ROLLBACK = "rollback"
 
 TERMINAL = frozenset({FINISHED, ABANDONED, EVICTED})
 KINDS = (ENQUEUED, ADMITTED, PREFILL_CHUNK, FIRST_TOKEN, DECODE_STEP,
+         DRAFT, VERIFY, ROLLBACK,
          PREEMPTED, RE_PREFILL, FINISHED, ABANDONED, EVICTED)
 
 
@@ -233,7 +250,8 @@ class FlightRecorder:
                     "dur": max(us(b.ts) - us(a.ts), 0.0),
                 })
             for ev in tr.events:
-                if ev.kind in (PREFILL_CHUNK, PREEMPTED, RE_PREFILL):
+                if ev.kind in (PREFILL_CHUNK, PREEMPTED, RE_PREFILL,
+                               DRAFT, VERIFY, ROLLBACK):
                     events.append({
                         "ph": "i", "pid": 0, "tid": tid, "name": ev.kind,
                         "cat": "serve", "ts": us(ev.ts), "s": "t",

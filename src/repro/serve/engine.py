@@ -96,7 +96,8 @@ class ServeEngine:
                  chunked_prefill: bool = False, paged: bool = False,
                  block_size: int = 32, n_blocks: Optional[int] = None,
                  paged_kernel: bool = False, overcommit: float = 1.0,
-                 obs: Optional[Observability] = None):
+                 spec_decode: bool = False, draft_planes: int = 2,
+                 gamma: int = 4, obs: Optional[Observability] = None):
         self.cfg = cfg
         self.max_len = max_len
         self.key = jax.random.PRNGKey(seed)
@@ -132,6 +133,10 @@ class ServeEngine:
         if (paged or paged_kernel) and not continuous:
             raise ValueError("paged=True requires continuous=True (the block "
                              "pool lives in the slot-pool scheduler)")
+        if spec_decode and not continuous:
+            raise ValueError("spec_decode=True requires continuous=True (the "
+                             "draft/verify rounds live in the slot-pool "
+                             "scheduler)")
         if paged_kernel and not paged:
             raise ValueError("paged_kernel=True requires paged=True — the "
                              "kernel walks the block table a dense cache "
@@ -145,7 +150,10 @@ class ServeEngine:
                                          paged=paged, block_size=block_size,
                                          n_blocks=n_blocks,
                                          paged_kernel=paged_kernel,
-                                         overcommit=overcommit)
+                                         overcommit=overcommit,
+                                         spec_decode=spec_decode,
+                                         draft_planes=draft_planes,
+                                         gamma=gamma)
             else:
                 if chunked_prefill and not policy.chunked_prefill:
                     policy = dataclasses.replace(policy, chunked_prefill=True)
@@ -161,6 +169,11 @@ class ServeEngine:
                 if overcommit != 1.0 and policy.overcommit == 1.0:
                     # requires paged (policy validates)
                     policy = dataclasses.replace(policy, overcommit=overcommit)
+                if spec_decode and not policy.spec_decode:
+                    # requires paged (policy validates)
+                    policy = dataclasses.replace(
+                        policy, spec_decode=True, draft_planes=draft_planes,
+                        gamma=gamma)
             self.scheduler = ContinuousScheduler(self, policy)
 
     # -- sharding ---------------------------------------------------------

@@ -79,6 +79,26 @@ lane alone in its shard can always grow; and admission still gates the
 first chunk's demand against free blocks, so a fresh admit always
 makes progress before it can be chosen as a victim.
 
+**Bit-plane speculative decoding** (``SchedulerPolicy(spec_decode=True)``,
+requires paged): decode lanes self-draft from truncated bit planes of
+the SAME PackedWeights — no second model.  Each round chains up to
+``gamma`` async dispatches of ONE jitted draft step (``_spec_draft_fn``:
+a pooled decode step traced under ``models.common.active_plane_count``
+with ``draft_planes`` as a *runtime* operand and a donated cache, so
+the chain reuses buffers in place with no host sync between steps),
+then one full-precision ``prefill_chunk`` with ``return_all_logits``
+scoring every drafted position at once (``_spec_verify_fn``, fixed
+chunk width ``gamma`` with ``nval`` masking shallower rounds) — two
+compiled programs total, regardless of round depth or precision level.  The longest draft prefix matching the verify argmax
+commits (plus the verify's correction token on a rejection — so every
+round commits >= 1 token per lane), the verify's KV writes overwrite
+every draft-precision row, and rejected rows rewind by a position
+decrement plus tail-block free (``SlotPool.commit_spec`` — no data
+movement).  Greedy verify makes the output token-identical to
+non-speculative decode; per-lane draft depth backs off on rejections
+(``SlotState.spec_gamma``).  Preemption can only fire at round setup,
+so a preempted lane's snapshot never contains an unverified draft.
+
 Time is measured in scheduler steps (one pooled decode = one step);
 arrival times for simulated workloads are expressed on that clock.
 
@@ -111,7 +131,8 @@ import numpy as np
 
 from ..dist import sharding as dist_sharding
 from ..models import transformer
-from ..models.common import packed_shard_mesh, paged_shard_mesh
+from ..models.common import (active_plane_count, packed_shard_mesh,
+                             paged_shard_mesh)
 from ..obs import metrics as obs_metrics
 from ..obs import trace as obs_trace
 from .slots import SlotPool, SlotState, reset_recurrent_slots, scatter_slot
@@ -162,6 +183,19 @@ class SchedulerPolicy:
     # prefill set stays bounded.  False restores the static
     # smallest-covering-chunk rule.
     occupancy_chunking: bool = True
+    # Bit-plane speculative decoding (paged only): decode lanes
+    # self-draft up to ``gamma`` pooled steps per round with only the
+    # ``draft_planes`` most significant bit planes of every PackedWeight
+    # active (a RUNTIME operand of the same compiled programs — see
+    # models.common.active_plane_count), then ONE full-precision
+    # chunked-prefill-style verify pass scores every drafted position at
+    # once.  Greedy verify makes the output token-identical to
+    # non-speculative decode; rejected drafts rewind positions through
+    # the block tables (no data movement).  Requires paged serving,
+    # attention-only layer patterns and all-greedy requests.
+    spec_decode: bool = False
+    draft_planes: int = 2  # active bit planes during draft steps
+    gamma: int = 4  # max draft steps per round (per-lane depth backs off)
     # Bounded-telemetry capacity: per-step observations (occupancy,
     # decode-step ms, block usage, ...) live in fixed-size reservoirs of
     # this many entries (obs.metrics.Histogram), so a long-lived server
@@ -214,6 +248,22 @@ class SchedulerPolicy:
                 f"aging_steps={self.aging_steps}: need >= 1 (aging at 0 "
                 "steps would flatten the tier ordering entirely)"
             )
+        if self.spec_decode:
+            if not self.paged:
+                raise ValueError(
+                    "spec_decode=True requires paged=True — the draft/verify "
+                    "rewind frees rejected rows through the block tables, "
+                    "which a dense per-lane cache does not have"
+                )
+            if self.draft_planes < 1:
+                raise ValueError(
+                    f"draft_planes={self.draft_planes}: need >= 1 (zero "
+                    "active planes is not a model)"
+                )
+            if self.gamma < 1:
+                raise ValueError(
+                    f"gamma={self.gamma}: need >= 1 draft step per round"
+                )
 
 
 @dataclasses.dataclass
@@ -303,6 +353,27 @@ class ContinuousScheduler:
         )
         pk = policy.paged_kernel
 
+        if policy.spec_decode:
+            # Draft rows are rewound by decrementing positions and
+            # freeing tail blocks — state that cannot be rewound that
+            # way (sliding-window ring buffers wrap, recurrent state
+            # integrates every token, MoE routing is fine but cross
+            # attention reads per-request frontend embeddings the pooled
+            # draft scan does not thread) is gated out up front.
+            bad = [k for k in cfg.layer_pattern
+                   if k.split("+")[0] != "attn" or "+" in k]
+            if bad:
+                raise ValueError(
+                    f"spec_decode=True requires an attention-only layer "
+                    f"pattern (rewind is a position decrement); got "
+                    f"{cfg.layer_pattern!r} with non-rewindable kinds {bad!r}"
+                )
+            if cfg.n_experts:
+                raise ValueError(
+                    "spec_decode=True does not support MoE layers "
+                    f"(n_experts={cfg.n_experts})"
+                )
+
         def _decode_fn(p, cache, tok, pos, act, table):
             with packed_shard_mesh(engine._packed_mesh), \
                  paged_shard_mesh(self._paged_mesh):
@@ -312,6 +383,12 @@ class ContinuousScheduler:
         self._decode = jax.jit(_decode_fn, out_shardings=out_sh)
         self._prefill_cache: Dict[int, Callable] = {}  # legacy: per prompt length
         self._chunk_cache: Dict[int, Callable] = {}  # chunked: per chunk size
+        # Spec decode: ONE draft-step program (round depth = dispatch
+        # count, draft_planes a RUNTIME operand) plus ONE fixed-width
+        # verify program — the set grows with neither gamma nor
+        # precision levels.
+        self._spec_draft_jit: Optional[Callable] = None
+        self._spec_verify_jit: Optional[Callable] = None
         # Chunked multi-admit: ONE program for every burst size — the slot
         # vector is fixed-size (n_slots,), padded with the out-of-bounds
         # index n_slots whose writes drop.
@@ -376,6 +453,24 @@ class ContinuousScheduler:
             labels=("tier",), capacity=tcap)
         self._c_steps = reg.counter(
             "serve_decode_steps_total", "pooled decode step dispatches")
+        # Speculative decoding: per-lane draft steps, accept/reject
+        # outcomes of the full-precision verify, and the running
+        # acceptance rate (accepted / drafted) as a gauge.
+        self._c_spec_rounds = reg.counter(
+            "serve_spec_rounds_total",
+            "speculative draft+verify round dispatches")
+        self._c_spec_draft = reg.counter(
+            "serve_spec_draft_steps_total",
+            "per-lane draft steps run at draft precision")
+        self._c_spec_accept = reg.counter(
+            "serve_spec_accept_total",
+            "drafted tokens accepted by the full-precision verify")
+        self._c_spec_reject = reg.counter(
+            "serve_spec_reject_total",
+            "drafted tokens rejected by the full-precision verify")
+        self._g_spec_rate = reg.gauge(
+            "serve_spec_accept_rate",
+            "running draft acceptance rate (accepted / drafted)")
         self._g_queue = reg.gauge(
             "serve_queue_depth", "requests waiting for a lane")
         self._g_progs = reg.gauge(
@@ -409,6 +504,11 @@ class ContinuousScheduler:
         self.decode_ms_total = 0.0
         self.decode_steps = 0
         self.prefill_chunks = 0
+        # Spec-decode scalar telemetry (bench/CI reads these directly).
+        self.spec_rounds = 0
+        self.spec_drafted = 0  # per-lane draft steps (drafted tokens)
+        self.spec_accepted = 0  # drafted tokens the verify accepted
+        self.spec_committed = 0  # tokens committed (accepts + corrections)
         # Overcommit bookkeeping: which _Pending occupies each lane (so a
         # preemption can rebuild the queue entry) and a monotone admission
         # counter driving the LIFO leg of preemption_order.
@@ -452,6 +552,87 @@ class ContinuousScheduler:
             self._chunk_cache[chunk] = fn
         return fn
 
+    def _spec_draft_fn(self) -> Callable:
+        """ONE jitted draft step shared by every round: a pooled
+        ``decode_step`` traced under ``active_plane_count`` (greedy
+        argmax feeds each dispatch's token into the next through the
+        on-device ``tok``/``pos`` carry — no host sync between steps),
+        with the per-step ``act`` row freezing lanes whose depth or
+        phase excludes them.  Round depth is just the number of
+        dispatches, so no program is compiled per ``gamma``; ``planes``
+        is a TRACED int32 operand, so no program is compiled per
+        precision level either — the kernel-level runtime-active-plane
+        dispatch surfacing at the scheduler.  The cache operand is
+        DONATED: each step overwrites the previous step's buffers in
+        place instead of allocating a fresh pool, which is most of the
+        per-step win over a fused ``lax.scan`` (whose carry defeats
+        buffer reuse)."""
+        fn = self._spec_draft_jit
+        if fn is None:
+            engine = self.engine
+            cfg = engine.cfg
+            pk = self.policy.paged_kernel
+            V = cfg.vocab_size
+
+            def draft_step(p, cache, tok, pos, act, table, planes):
+                with packed_shard_mesh(engine._packed_mesh), \
+                     paged_shard_mesh(self._paged_mesh):
+                    with active_plane_count(planes):
+                        logits, cache = transformer.decode_step(
+                            p, cache, tok, pos, cfg, active=act,
+                            block_table=table, paged_kernel=pk)
+                    nxt = jnp.argmax(logits[:, :V], axis=-1).astype(jnp.int32)
+                    tok = jnp.where(act[:, None], nxt[:, None], tok)
+                    pos = pos + act.astype(jnp.int32)
+                return cache, tok, pos, nxt
+
+            out_sh = None
+            if engine.mesh is not None:
+                sh = self.pool.shardings
+                out_sh = (sh["cache"], sh["tok"], sh["pos"], None)
+            fn = jax.jit(draft_step, out_shardings=out_sh, donate_argnums=(1,))
+            self._spec_draft_jit = fn
+        return fn
+
+    def _spec_verify_fn(self) -> Callable:
+        """ONE jitted verify program at fixed chunk width
+        ``policy.gamma``: a full-precision ``prefill_chunk`` over the
+        round's entry token ``d_0`` plus drafts ``d_1..`` with
+        ``return_all_logits``, whose argmax row is each position's true
+        next token.  Shallower rounds (per-lane gamma backoff) pad the
+        draft operands and mask through ``nval`` — per-lane validity is
+        already how ragged chunked prefill works — so the width never
+        forks a second program.  The chunk's KV writes overwrite every
+        draft-precision row at full precision, so the cache a later
+        step reads never depends on the draft planes.  The cache
+        operand is donated, same as the draft step."""
+        fn = self._spec_verify_jit
+        if fn is None:
+            engine = self.engine
+            cfg = engine.cfg
+            V = cfg.vocab_size
+            cache_dtype = self.pool.cache_dtype
+
+            def verify(p, cache, tok0, drafts, start, nval, table):
+                with packed_shard_mesh(engine._packed_mesh), \
+                     paged_shard_mesh(self._paged_mesh):
+                    vin = jnp.concatenate(
+                        [tok0] + [d[:, None] for d in drafts], axis=1)
+                    all_logits, cache = transformer.prefill_chunk(
+                        p, cache, vin, start, nval, cfg,
+                        cache_dtype=cache_dtype, block_table=table,
+                        return_all_logits=True)
+                    verified = jnp.argmax(
+                        all_logits[..., :V], axis=-1).astype(jnp.int32)
+                return cache, verified
+
+            out_sh = None
+            if engine.mesh is not None:
+                out_sh = (self.pool.shardings["cache"], None)
+            fn = jax.jit(verify, out_shardings=out_sh, donate_argnums=(1,))
+            self._spec_verify_jit = fn
+        return fn
+
     def compiled_decode_programs(self) -> int:
         return int(self._decode._cache_size())
 
@@ -468,6 +649,15 @@ class ContinuousScheduler:
         """Chunked multi-admit programs (fixed-size padded slot vector =>
         stays 1 regardless of burst sizes)."""
         return int(self._reset_slots._cache_size())
+
+    def compiled_spec_programs(self) -> int:
+        """Spec-round compiled programs: ONE draft step (round depth is
+        the dispatch count, draft precision a runtime operand) plus ONE
+        fixed-width verify chunk — 2 total, independent of ``gamma``
+        and ``draft_planes``."""
+        return sum(int(fn._cache_size())
+                   for fn in (self._spec_draft_jit, self._spec_verify_jit)
+                   if fn is not None)
 
     # -- admission ---------------------------------------------------------
     def _first_chunk_blocks(self, plen: int) -> int:
@@ -626,6 +816,10 @@ class ContinuousScheduler:
                 req.temperature, now, wall, tier=pend.tier, prior=pend.prior,
                 admit_seq=self._admit_seq,
             )
+            if self.policy.spec_decode:
+                # Fresh lanes (and preempted resumes) start at the full
+                # policy draft depth; per-round backoff takes over.
+                self.pool.slots[slot].spec_gamma = self.policy.gamma
             self._lane_pend[slot] = pend
             attrs = {"slot": slot}
             if self.policy.paged:
@@ -817,6 +1011,167 @@ class ContinuousScheduler:
                     ttft_ms = tr.ttft_ms()
                 pool.start_decode(i, int(sampled_host[i]), ttft_ms)
 
+    # -- speculative decoding ----------------------------------------------
+    def _spec_round(self, queue: Deque[_Pending], now: int) -> None:
+        """One draft+verify round over every decode-phase lane.
+
+        Lane ``i`` at ``pos0 = plen + g - 1`` (last token ``d_0`` sampled
+        but its KV row unwritten — the pool's steady-state convention)
+        drafts ``gamma_i = min(spec_gamma, remaining)`` tokens at draft
+        precision, then the verify chunk scores rows ``pos0 ..
+        pos0+gamma_i-1`` (inputs ``d_0..d_{gamma_i-1}``) at full
+        precision, overwriting every draft-precision KV row.  With
+        ``a`` = longest prefix where draft ``d_{j+1}`` equals verified
+        ``v_j``, the lane commits ``d_1..d_a`` plus the correction
+        ``v_a`` when a draft was rejected (``a < gamma_i``) — always
+        >= 1 token, so every round makes progress — and rewinds past
+        the rejected rows by decrementing its position and returning
+        tail blocks (``SlotPool.commit_spec``).  Committed tokens are
+        verify outputs given an exactly-reproduced prefix, so greedy
+        output is token-identical to non-speculative decode.
+
+        Round setup is the ONLY point this path can preempt: the verify
+        writes no row the draft demand did not cover, and draft tokens
+        live in round-local state until commit — a preemption snapshot
+        (``prior + s.tokens``) can never contain an unverified draft."""
+        pool = self.pool
+        # Under overcommit the headroom pass may preempt lanes —
+        # including round participants — so recompute until the demand
+        # fits as-is (same discipline as _prefill_step).
+        while True:
+            lanes = [i for i, s in enumerate(pool.slots)
+                     if s.uid is not None and s.phase == "decode"]
+            if not lanes:
+                return  # every decode lane was preempted this step
+            gam: Dict[int, int] = {}
+            demand: Dict[int, int] = {}
+            for i in lanes:
+                s = pool.slots[i]
+                gam[i] = max(1, min(s.spec_gamma, s.remaining))
+                # Last verify write row is plen+g+gamma_i-2, so rows
+                # [0, plen+g+gamma_i-1) must be granted; gamma_i <=
+                # remaining keeps this within the lifetime reservation
+                # (the headroom/deadlock-freedom argument is unchanged).
+                demand[i] = len(s.prompt) + len(s.tokens) + gam[i] - 1
+            if self._ensure_headroom(demand, queue, now) == demand:
+                pool.grow_many(demand)
+                break
+        gamma_r = max(gam.values())
+        B = pool.n_slots
+        act_rows = np.zeros((gamma_r, B), np.bool_)
+        start = np.full((B,), self.engine.max_len, np.int32)
+        nval = np.zeros((B,), np.int32)
+        for i in lanes:
+            s = pool.slots[i]
+            act_rows[: gam[i], i] = True
+            start[i] = len(s.prompt) + len(s.tokens) - 1  # pos0
+            nval[i] = gam[i]
+        self._h_attn.observe(sum(len(pool.slots[i].blocks) for i in lanes))
+        t0 = time.perf_counter()
+        draft_fn = self._spec_draft_fn()
+        verify_fn = self._spec_verify_fn()
+        params = self.engine.params
+        planes = jnp.int32(self.policy.draft_planes)
+        table = pool.block_table
+        tok0 = pool.tok  # round entry token d_0 per lane (verify col 0)
+        cache, tok, pos = pool.cache, tok0, pool.pos
+        # gamma_r async draft dispatches chained on device (tok/pos
+        # carry), then one verify dispatch, then ONE host sync.  The
+        # cache flows through donated operands the whole way, so
+        # pool.cache is dead from the first dispatch until the
+        # reassignment below — nothing in between may touch it.
+        drafts = []
+        for j in range(gamma_r):
+            cache, tok, pos, nxt = draft_fn(
+                params, cache, tok, pos,
+                pool._pin("act", jnp.asarray(act_rows[j])), table, planes)
+            drafts.append(nxt)
+        # Pad the verify's draft operands to the fixed program width
+        # with a handle that is already live; nval masks them out.
+        width = self.policy.gamma - 1
+        vdrafts = tuple(drafts[: gamma_r - 1]) + \
+            (drafts[-1],) * (width - (gamma_r - 1))
+        pool.cache, verified = verify_fn(
+            params, cache, tok0, vdrafts,
+            self._place_ctrl("start", start),
+            self._place_ctrl("nvalid", nval),
+            table,
+        )
+        # drafts_h[j][i] = d_{j+1} for lane i; ver_h[i, j] = v_j (columns
+        # past gam[i] are padding and never read).
+        drafts_h, ver_h = jax.device_get((drafts, verified))
+        step_ms = (time.perf_counter() - t0) * 1e3
+        rec = self.obs.recorder
+        tok_fix, tok_vals, pos_vals = [], [], []
+        acc_total = rej_total = commit_total = 0
+        for i in lanes:
+            s = pool.slots[i]
+            g_i = gam[i]
+            a = 0
+            while a < g_i and int(drafts_h[a][i]) == int(ver_h[i, a]):
+                a += 1
+            if a < g_i:
+                committed = [int(drafts_h[j][i]) for j in range(a)]
+                committed.append(int(ver_h[i, a]))  # the correction v_a
+            else:
+                committed = [int(drafts_h[j][i]) for j in range(g_i)]
+            freed = pool.commit_spec(i, committed)
+            # Per-lane depth backoff: a fully-accepted round earns a
+            # deeper next draft (up to the policy gamma); a fully
+            # rejected one halves it (floor 1).
+            if a == g_i:
+                s.spec_gamma = min(s.spec_gamma + 1, self.policy.gamma)
+            elif a == 0:
+                s.spec_gamma = max(1, s.spec_gamma // 2)
+            if a < g_i:
+                # Rejection: the draft chain's tok/pos overshot this
+                # lane — rewind to the correction and committed length.
+                tok_fix.append(i)
+                tok_vals.append(committed[-1])
+                pos_vals.append(len(s.prompt) + len(s.tokens) - 1)
+            rec.event(s.uid, obs_trace.DRAFT, steps=g_i)
+            rec.event(s.uid, obs_trace.VERIFY, accepted=a,
+                      committed=len(committed))
+            if a < g_i:
+                rec.event(s.uid, obs_trace.ROLLBACK, rejected=g_i - a,
+                          freed_blocks=freed)
+            acc_total += a
+            rej_total += g_i - a
+            commit_total += len(committed)
+        # The draft chain's final tok/pos are already correct for
+        # fully-accepted lanes (last draft = last committed, pos
+        # advanced gamma_i) and untouched for inactive lanes, so a
+        # full-accept round — the steady state once acceptance is high
+        # — needs ZERO scatter dispatches here.
+        if tok_fix:
+            fix_idx = jnp.asarray(tok_fix)
+            tok = tok.at[fix_idx, 0].set(jnp.asarray(tok_vals, jnp.int32))
+            pos = pos.at[fix_idx].set(jnp.asarray(pos_vals, jnp.int32))
+        pool.tok = pool._pin("tok", tok)
+        pool.pos = pool._pin("pos", pos)
+        # One round = one pooled dispatch on the decode clock.
+        self.decode_ms_total += step_ms
+        self._h_step.observe(step_ms)
+        self.decode_steps += 1
+        self._c_steps.inc()
+        self.spec_rounds += 1
+        self.spec_drafted += acc_total + rej_total
+        self.spec_accepted += acc_total
+        self.spec_committed += commit_total
+        self._c_spec_rounds.inc()
+        self._c_spec_draft.inc(acc_total + rej_total)
+        self._c_spec_accept.inc(acc_total)
+        self._c_spec_reject.inc(rej_total)
+        if self.spec_drafted:
+            self._g_spec_rate.set(self.spec_accepted / self.spec_drafted)
+        self._h_occ.observe(len(lanes))
+        used = pool.allocator.used_count
+        live = pool.live_rows()
+        self._h_blocks.observe(used)
+        self._h_rows.observe(live)
+        if used:
+            self._h_frag.observe(1.0 - live / (used * pool.block_size))
+
     # -- main loop ---------------------------------------------------------
     def stream(
         self,
@@ -847,6 +1202,13 @@ class ContinuousScheduler:
                 raise ValueError(
                     f"request {r.uid}: empty prompt — there is no position to "
                     "prefill and the lane would never leave the prefill phase"
+                )
+            if self.policy.spec_decode and r.temperature > 0:
+                raise ValueError(
+                    f"request {r.uid}: temperature={r.temperature} — "
+                    "spec_decode accepts drafts by greedy verify; a sampled "
+                    "lane would silently diverge from its non-speculative "
+                    "output"
                 )
             if r.max_new < 1:
                 raise ValueError(
@@ -913,7 +1275,16 @@ class ContinuousScheduler:
                     # chunked max_new == 1: finished at first token
                     for ev in self._finished():
                         yield ev
-                if pool.n_decoding:
+                if self.policy.spec_decode and pool.n_decoding:
+                    # Speculative rounds replace the single pooled decode
+                    # step: gamma draft steps + one verify per dispatch,
+                    # committing 1..gamma tokens per lane (block growth,
+                    # headroom preemption and rewind live inside).
+                    worked = True
+                    self._spec_round(queue, now)
+                    for ev in self._finished():
+                        yield ev
+                elif pool.n_decoding:
                     worked = True
                     if self.policy.paged:
                         # decode growth: lanes crossing a block boundary
@@ -935,7 +1306,7 @@ class ContinuousScheduler:
                             len(s.blocks) for s in pool.slots
                             if s.uid is not None and s.phase == "decode"
                         ))
-                if pool.n_decoding:
+                if not self.policy.spec_decode and pool.n_decoding:
                     t0 = time.perf_counter()
                     logits, pool.cache = self._decode(
                         self.engine.params, pool.cache, pool.tok, pool.pos, pool.act,
@@ -998,6 +1369,8 @@ class ContinuousScheduler:
             self._g_progs.labels(kind="decode").set(self.compiled_decode_programs())
             self._g_progs.labels(kind="prefill").set(self.compiled_prefill_programs())
             self._g_progs.labels(kind="admit").set(self.compiled_admit_programs())
+            if self.policy.spec_decode:
+                self._g_progs.labels(kind="spec").set(self.compiled_spec_programs())
 
     def _finished(self):
         from .engine import Result
@@ -1038,6 +1411,10 @@ class ContinuousScheduler:
         self.prefill_chunks = 0
         self.decode_ms_total = 0.0
         self.decode_steps = 0
+        self.spec_rounds = 0
+        self.spec_drafted = 0
+        self.spec_accepted = 0
+        self.spec_committed = 0
 
     def mean_occupancy(self) -> float:
         """Mean fraction of lanes live per decode step (bench metric)."""
@@ -1056,3 +1433,8 @@ class ContinuousScheduler:
     def preemptions_total(self) -> int:
         """Lanes preempted (all tiers) since the last telemetry reset."""
         return int(sum(c.value for _, c in self._c_preempt.children()))
+
+    def spec_accept_rate(self) -> float:
+        """Fraction of drafted tokens the full-precision verify accepted
+        (spec decode; 0.0 before the first round)."""
+        return self.spec_accepted / self.spec_drafted if self.spec_drafted else 0.0

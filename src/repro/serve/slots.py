@@ -332,6 +332,11 @@ class SlotState:
     tier: str = "throughput"  # SLO class: "latency" outranks "throughput"
     prior: Optional[List[int]] = None  # tokens generated before a preemption
     admit_seq: int = 0  # monotone admission counter (LIFO victim order)
+    # speculative decoding: per-lane draft depth (dynamic backoff — full
+    # accepts grow it toward the policy gamma, zero accepts halve it).
+    # 0 on non-spec lanes.  Reset at (re-)admission, so a preempted lane
+    # restarts from the policy default.
+    spec_gamma: int = 0
 
 
 class SlotPool:
@@ -609,6 +614,35 @@ class SlotPool:
         self.temps = self._pin("temps", self.temps.at[slot].set(0.0))
         self.act = self._pin("act", self.act.at[slot].set(False))
         return done
+
+    def commit_spec(self, slot: int, tokens: List[int]) -> int:
+        """Commit a spec round's accepted tokens on lane ``slot`` and
+        rewind past the rejected draft rows.
+
+        Appends ``tokens``, then returns any tail blocks granted solely
+        for rejected draft rows to the allocator: after committing, the
+        lane's written cache rows are ``[0, plen + g' - 1)`` with ``g' =
+        len(s.tokens)`` (the last committed token's KV — like ``tok``
+        after a normal decode step — is not written until the next
+        round), so the lane keeps ``blocks_for_rows(plen + g' - 1)``
+        blocks and frees the rest.  The freed blocks' table entries go
+        stale exactly like an evicted lane's (reads sit beyond the
+        causal position bound; writes only flow through entries a later
+        grow re-grants), so the rewind moves no cache data.  The
+        device-side ``pos``/``tok`` rewind is the scheduler's batched
+        update.  Returns the number of blocks freed."""
+        s = self.slots[slot]
+        s.tokens.extend(tokens)
+        s.remaining -= len(tokens)
+        if not self.paged or not s.blocks:
+            return 0
+        keep = self.allocator.blocks_for_rows(len(s.prompt) + len(s.tokens) - 1)
+        if keep >= len(s.blocks):
+            return 0
+        dead = s.blocks[keep:]
+        del s.blocks[keep:]
+        self.allocator.free(dead)
+        return len(dead)
 
     def advance(self, sampled: np.ndarray, active: np.ndarray):
         """After one pool decode step: record each active lane's token and

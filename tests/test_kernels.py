@@ -39,6 +39,31 @@ def test_bitserial_matmul_vs_dense():
     np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-4, rtol=1e-4)
 
 
+@pytest.mark.parametrize("n_bits", [3, 4, 8])
+def test_runtime_active_planes_bitwise_equals_truncate(n_bits):
+    """The spec-decode draft contract: ``active_planes=k`` as a RUNTIME
+    scalar must be bitwise-identical (not merely close) to the static
+    path over ``truncate_packed(pw, k)`` for every k, on both the ref
+    fori-loop path and the Pallas dyn kernel — the dropped planes' shift
+    folds into the epilogue as an exact power of two, so one compiled
+    program serves every precision level."""
+    from repro.core.packing import truncate_packed
+
+    w = jax.random.normal(KEY, (64, 128)) * 0.2
+    x = jax.random.normal(jax.random.fold_in(KEY, 4), (8, 64))
+    pw = pack_from_float(w, n_bits)
+    for k in range(1, n_bits + 1):
+        tr = truncate_packed(pw, k)
+        for pallas in (False, True):
+            got = np.asarray(ops.bitserial_matmul(
+                x, pw, active_planes=k, use_pallas=pallas, interpret=pallas))
+            want = np.asarray(ops.bitserial_matmul(
+                x, tr, use_pallas=pallas, interpret=pallas))
+            np.testing.assert_array_equal(
+                got.view(np.uint32), want.view(np.uint32),
+                err_msg=f"k={k} pallas={pallas}")
+
+
 @pytest.mark.parametrize("R,C", [(8, 4096), (16, 8192), (2, 512), (40, 1024)])
 def test_bgl_sumsq_sweep(R, C):
     x = jax.random.normal(KEY, (R, C))

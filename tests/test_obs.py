@@ -18,6 +18,7 @@ The quality-probe tests pack a tiny model and check the two anchors the
 probe is useful for: full planes reproduce full precision exactly
 (top-1 == 1.0, MSE == 0), and fewer planes never *improve* logit MSE.
 """
+import dataclasses
 import json
 
 import jax
@@ -25,7 +26,7 @@ import numpy as np
 import pytest
 
 from repro.configs import reduced_config
-from repro.core.packing import pack_model_params, packed_leaves
+from repro.core.packing import pack_model_params, packed_leaves, unpack_to_float
 from repro.models import init_params
 from repro.obs import metrics as obs_metrics
 from repro.obs import trace as obs_trace
@@ -441,12 +442,21 @@ def test_truncate_packed_view_semantics(packed_granite):
     n, k = pw.n_bits, 2
     t = truncate_packed(pw, k)
     assert t.n_bits == k
-    # top-k planes kept (LSB-first layout: the last k), scale folds the
-    # dropped LSBs' factor exactly
+    # top-k planes kept (LSB-first layout: the last k); the dropped LSBs
+    # fold into the scale as a PURE power of two (exact in float) while
+    # the original denominator rides in denom_bits — the property that
+    # makes the static view bitwise-equal to the kernels' runtime
+    # active-plane masking.
     np.testing.assert_array_equal(np.asarray(t.planes),
                                   np.asarray(pw.planes[..., n - k:, :, :]))
-    factor = (2.0 ** (n - k)) * (2.0 ** k - 1.0) / (2.0 ** n - 1.0)
-    np.testing.assert_allclose(np.asarray(t.scale),
-                               np.asarray(pw.scale) * factor, rtol=1e-6)
+    assert t.denom_bits == n
+    np.testing.assert_array_equal(np.asarray(t.scale),
+                                  np.asarray(pw.scale) * 2.0 ** (n - k))
+    # the dequantised view equals the full dequantisation with the low
+    # planes zeroed
+    zeroed = dataclasses.replace(
+        pw, planes=pw.planes.at[..., : n - k, :, :].set(0))
+    np.testing.assert_array_equal(np.asarray(unpack_to_float(t)),
+                                  np.asarray(unpack_to_float(zeroed)))
     with pytest.raises(ValueError, match="k >= 1"):
         truncate_packed(pw, 0)

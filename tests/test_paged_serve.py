@@ -528,6 +528,319 @@ def test_paged_overcommit_preemption_on_2x4_mesh_matches_single_device():
     assert "PAGED_PREEMPT_MESH_OK" in out.stdout
 
 
+# -- bit-plane speculative decoding --------------------------------------
+#
+# The spec-decode contract (scheduler._spec_round): drafting from a
+# truncated view of the SAME packed weights + greedy full-precision
+# verify must stay token-identical to the bucketed oracle across the
+# same 25 randomized schedules, while every rejected draft's rows are
+# rewound (tail blocks freed) and the pool still drains to zero.  The
+# engines run 6-bit packed weights with 2-plane drafts so the verify
+# really rejects (a float engine's "drafts" would be exact and the
+# rollback path would never fire).
+
+SPEC_BITS = 6
+SPEC_DRAFT_PLANES = 2
+SPEC_GAMMA = 3
+
+
+@pytest.fixture(scope="module")
+def packed_granite():
+    from repro.core.packing import pack_model_params
+
+    cfg = reduced_config("granite-3-2b")
+    return cfg, pack_model_params(init_params(jax.random.PRNGKey(0), cfg),
+                                  SPEC_BITS)
+
+
+@pytest.fixture(scope="module")
+def packed_oracle(packed_granite):
+    cfg, params = packed_granite
+    return ServeEngine(params, cfg, max_len=MAX_LEN)
+
+
+@pytest.fixture(scope="module")
+def packed_paged(packed_granite):
+    """Non-speculative packed paged engine: the direct baseline the spec
+    engine must match token-for-token (spec == non-spec == oracle)."""
+    cfg, params = packed_granite
+    return ServeEngine(params, cfg, max_len=MAX_LEN, continuous=True,
+                       policy=SchedulerPolicy(n_slots=N_SLOTS, chunked_prefill=True,
+                                              chunk_sizes=(8, 1), paged=True,
+                                              block_size=BLOCK_SIZE,
+                                              n_blocks=N_BLOCKS))
+
+
+@pytest.fixture(scope="module")
+def spec(packed_granite):
+    cfg, params = packed_granite
+    return ServeEngine(params, cfg, max_len=MAX_LEN, continuous=True,
+                       policy=SchedulerPolicy(n_slots=N_SLOTS, chunked_prefill=True,
+                                              chunk_sizes=(8, 1), paged=True,
+                                              block_size=BLOCK_SIZE,
+                                              n_blocks=N_BLOCKS,
+                                              spec_decode=True,
+                                              draft_planes=SPEC_DRAFT_PLANES,
+                                              gamma=SPEC_GAMMA))
+
+
+_SPEC_SCHEDULES = {}
+
+
+def _spec_schedule_and_ref(seed, cfg, packed_oracle):
+    """Same seeded schedules as the paged harness (same rng stream), with
+    the PACKED oracle's greedy reference."""
+    if seed not in _SPEC_SCHEDULES:
+        rng = np.random.default_rng(seed)
+        reqs, arrivals = _random_schedule(rng, cfg)
+        ref = {r.uid: r.tokens for r in packed_oracle.generate(reqs)}
+        _SPEC_SCHEDULES[seed] = (reqs, arrivals, ref)
+    return _SPEC_SCHEDULES[seed]
+
+
+def _assert_spec_round_spans(engine):
+    """Spec lanes trade DECODE_STEP for DRAFT/VERIFY pairs: every DRAFT
+    is followed by a VERIFY whose committed count is in [1, steps], and
+    a ROLLBACK (rejected + freed bookkeeping) only ever follows a
+    partial accept."""
+    for tr in engine.obs.recorder.traces():
+        evs = tr.events
+        for i, ev in enumerate(evs):
+            if ev.kind == obs_trace.DRAFT:
+                assert i + 1 < len(evs) and evs[i + 1].kind == obs_trace.VERIFY, \
+                    (tr.uid, [e.kind for e in evs])
+                steps = ev.attrs["steps"]
+                ver = evs[i + 1].attrs
+                assert 0 <= ver["accepted"] <= steps, (tr.uid, ver)
+                assert 1 <= ver["committed"] <= steps, (tr.uid, ver)
+            if ev.kind == obs_trace.ROLLBACK:
+                ver = evs[i - 1]
+                assert ver.kind == obs_trace.VERIFY, (tr.uid, [e.kind for e in evs])
+                assert ev.attrs["rejected"] > 0
+                assert ver.attrs["accepted"] + ev.attrs["rejected"] \
+                    == evs[i - 2].attrs["steps"]
+
+
+@pytest.mark.conformance
+@pytest.mark.parametrize("seed", range(N_SEEDS))
+def test_randomized_spec_decode_conformance(seed, packed_granite, packed_oracle,
+                                            packed_paged, spec):
+    """One seeded schedule, three packed engines: speculative decode must
+    agree with the non-speculative paged engine AND the bucketed oracle
+    token-for-token, drain the block pool, and keep span accounting."""
+    cfg, _ = packed_granite
+    reqs, arrivals, ref = _spec_schedule_and_ref(seed, cfg, packed_oracle)
+
+    out_n = packed_paged.generate(reqs, arrival_steps=arrivals)
+    assert len(out_n) == len(reqs)
+    for r in out_n:
+        np.testing.assert_array_equal(ref[r.uid], r.tokens)
+    _assert_zero_leaks(packed_paged)
+    _assert_span_accounting(packed_paged)
+
+    out_s = spec.generate(reqs, arrival_steps=arrivals)
+    assert len(out_s) == len(reqs)
+    for r in out_s:
+        np.testing.assert_array_equal(ref[r.uid], r.tokens)
+    _assert_zero_leaks(spec)
+    _assert_span_accounting(spec)
+    _assert_spec_round_spans(spec)
+
+    if seed % 5 == 0:
+        # mid-stream abandon while lanes may be mid-round: teardown must
+        # still retire every span and return every block (including any
+        # granted for drafts that will never be verified)
+        it = spec.stream(reqs, arrival_steps=arrivals)
+        for _ in range(len(reqs) // 2):
+            next(it)
+        it.close()
+        _assert_zero_leaks(spec)
+        _assert_span_accounting(spec)
+
+
+@pytest.mark.conformance
+def test_spec_torture_actually_drafted_and_rejected(spec):
+    """Meta-check on the module-scoped spec engine: across the 25 seeded
+    schedules the verify really did both accept and reject drafts (the
+    2-of-6-plane drafts are coarse enough to miss), so the conformance
+    above exercised commit AND rewind, not just the happy path."""
+    sched = spec.scheduler
+    assert sched.spec_rounds > 0
+    assert sched.spec_accepted > 0, "verify never accepted a draft"
+    assert sched.spec_drafted > sched.spec_accepted, "verify never rejected"
+    assert 0.0 < sched.spec_accept_rate() < 1.0
+    assert sched.spec_committed > 0
+    kinds = {e.kind for tr in spec.obs.recorder.traces() for e in tr.events}
+    assert {obs_trace.DRAFT, obs_trace.VERIFY, obs_trace.ROLLBACK} <= kinds
+    # the whole point: one fused program per round depth, not per
+    # (depth x precision) — the plane count is a runtime operand
+    assert sched.compiled_spec_programs() <= SPEC_GAMMA
+
+
+def test_spec_decode_under_overcommit_preemption(packed_granite):
+    """Preemption can only fire at round setup, so a preempted lane's
+    recompute snapshot never contains an unverified draft token: spec
+    decode + overcommit 2.0 on a pool too small for two worst-case lanes
+    must preempt mid-flight and STILL be token-identical to the oracle,
+    with the full preempted -> re-admitted -> re_prefill lifecycle and
+    zero leaked blocks."""
+    cfg, params = packed_granite
+    rng = np.random.default_rng(3)
+    reqs = [
+        Request(uid=i,
+                tokens=rng.integers(0, cfg.vocab_size, size=10).astype(np.int32),
+                max_new=11,
+                tier="latency" if i == 0 else "throughput")
+        for i in range(3)
+    ]
+    ref = {r.uid: r.tokens for r in
+           ServeEngine(params, cfg, max_len=MAX_LEN).generate(reqs)}
+    eng = ServeEngine(params, cfg, max_len=MAX_LEN, continuous=True,
+                      policy=SchedulerPolicy(n_slots=N_SLOTS, chunked_prefill=True,
+                                             chunk_sizes=(8, 1), paged=True,
+                                             block_size=BLOCK_SIZE,
+                                             n_blocks=OVERCOMMIT_BLOCKS,
+                                             overcommit=OVERCOMMIT,
+                                             spec_decode=True,
+                                             draft_planes=SPEC_DRAFT_PLANES,
+                                             gamma=SPEC_GAMMA))
+    out = eng.generate(reqs)
+    assert len(out) == len(reqs)
+    for r in out:
+        np.testing.assert_array_equal(ref[r.uid], r.tokens)
+    sched = eng.scheduler
+    assert sched.preemptions_total() > 0, "never preempted mid-spec"
+    assert sched.spec_rounds > 0
+    _assert_zero_leaks(eng)
+    _assert_span_accounting(eng)
+    _assert_preemption_lifecycle(eng)
+    _assert_spec_round_spans(eng)
+    kinds = [e.kind for tr in eng.obs.recorder.traces() for e in tr.events]
+    assert obs_trace.RE_PREFILL in kinds
+
+
+def test_spec_decode_mode_validation(packed_granite):
+    cfg, params = packed_granite
+    with pytest.raises(ValueError, match="paged"):
+        SchedulerPolicy(n_slots=2, spec_decode=True)
+    with pytest.raises(ValueError, match="continuous"):
+        ServeEngine(params, cfg, max_len=32, spec_decode=True)
+    eng = ServeEngine(params, cfg, max_len=32, continuous=True, n_slots=2,
+                      paged=True, block_size=4, spec_decode=True)
+    with pytest.raises(ValueError, match="greedy"):
+        eng.generate([Request(uid=0, tokens=np.arange(4, dtype=np.int32),
+                              max_new=2, temperature=0.7)])
+
+
+def test_spec_commit_rewind_never_leaks_blocks():
+    """Pool-level accept/reject/rewind property: seeded random spec-round
+    sequences (grow to the round's draft demand, commit a random 1..gamma
+    prefix, rewind the rest) against a live SlotPool — after every round
+    the lane holds EXACTLY the blocks covering its verified rows, and
+    admit/round/evict interleavings always drain the allocator to zero."""
+    cfg = reduced_config("granite-3-2b")
+    rng = np.random.default_rng(0)
+    for trial in range(10):
+        n_blocks = int(rng.integers(8, 17))
+        pool = SlotPool(cfg, 3, MAX_LEN, cache_dtype=np.float32, paged=True,
+                        block_size=BLOCK_SIZE, n_blocks=n_blocks)
+        alloc = pool.allocator
+        uid = 0
+        for _ in range(40):
+            kind = int(rng.integers(0, 3))
+            free = pool.free_slots()
+            if kind == 0 and free:  # admit + (simulated) prefill
+                plen = int(rng.integers(1, 9))
+                max_new = int(rng.integers(1, 9))
+                need = alloc.blocks_for_rows(plen + max_new - 1)
+                if alloc.committed + need > alloc.commit_capacity:
+                    continue
+                slot = free[0]
+                pool.admit(slot, uid, np.arange(plen, dtype=np.int32),
+                           max_new, 0.0, now=0, wall=0.0)
+                uid += 1
+                # chunked prefill lands rows [0, plen), emits the first
+                # token -> steady state: g=1, row plen-1+1 unwritten
+                pool.grow_rows(slot, plen)
+                s = pool.slots[slot]
+                s.phase, s.tokens, s.remaining = "decode", [0], max_new - 1
+            elif kind == 1:  # one spec round on a random decoding lane
+                lanes = [i for i in range(pool.n_slots)
+                         if pool.slots[i].uid is not None
+                         and pool.slots[i].remaining > 0]
+                if not lanes:
+                    continue
+                slot = lanes[int(rng.integers(0, len(lanes)))]
+                s = pool.slots[slot]
+                plen, g = len(s.prompt), len(s.tokens)
+                gam = int(rng.integers(1, min(SPEC_GAMMA, s.remaining) + 1))
+                pool.grow_many({slot: plen + g + gam - 1})
+                c = int(rng.integers(1, gam + 1))  # accepted prefix (+corr)
+                pool.commit_spec(
+                    slot, rng.integers(0, cfg.vocab_size, size=c).tolist())
+                assert len(s.blocks) == alloc.blocks_for_rows(
+                    plen + len(s.tokens) - 1), (trial, slot)
+                if s.remaining == 0:
+                    pool.evict(slot)
+            elif kind == 2:  # preempt/abandon mid-flight
+                live = [i for i in range(pool.n_slots)
+                        if pool.slots[i].uid is not None]
+                if live:
+                    pool.evict(live[int(rng.integers(0, len(live)))])
+        for i in range(pool.n_slots):
+            if pool.slots[i].uid is not None:
+                pool.evict(i)
+        assert alloc.free_count == n_blocks, trial
+        assert alloc.committed == 0, trial
+
+
+@pytest.mark.slow
+@pytest.mark.conformance
+def test_spec_decode_on_2x4_mesh_matches_single_device():
+    """Acceptance: speculative decode over PACKED weights on a ("data",
+    "model") mesh — the fused draft-scan + verify program runs shard_map'd
+    with the plane count as a replicated runtime scalar — stays
+    token-identical to the single-device bucketed oracle, with the block
+    pool sharded and drained."""
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(repo, "src")
+    out = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent("""
+            import jax, numpy as np
+            from repro.configs import reduced_config
+            from repro.core.packing import pack_model_params
+            from repro.models import init_params
+            from repro.serve import Request, ServeEngine
+            cfg = reduced_config("granite-3-2b")
+            packed = pack_model_params(init_params(jax.random.PRNGKey(0), cfg), 6)
+            mesh = jax.make_mesh((2, 4), ("data", "model"))
+            def reqs():
+                return [Request(uid=i, tokens=(np.arange(4 + 2 * i, dtype=np.int32) + i)
+                                % cfg.vocab_size, max_new=5) for i in range(5)]
+            ref = {r.uid: r.tokens
+                   for r in ServeEngine(packed, cfg, max_len=32).generate(reqs())}
+            eng = ServeEngine(packed, cfg, max_len=32, mesh=mesh, continuous=True,
+                              n_slots=4, paged=True, block_size=4, n_blocks=14,
+                              spec_decode=True, draft_planes=2, gamma=3)
+            for r in eng.generate(reqs(), arrival_steps=[0, 0, 1, 3, 5]):
+                np.testing.assert_array_equal(ref[r.uid], r.tokens)
+            sched = eng.scheduler
+            pool = sched.pool
+            assert pool.allocator.free_count == pool.n_blocks
+            assert pool.allocator.committed == 0
+            assert pool.table_shards == 2, pool.table_shards
+            assert sched.spec_rounds > 0
+            assert sched.spec_committed > 0
+            print("SPEC_MESH_OK")
+        """)],
+        capture_output=True, text=True, env=env, timeout=900,
+    )
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "SPEC_MESH_OK" in out.stdout
+
+
 def test_overcommit_preemption_randomized_interleavings():
     """Non-hypothesis twin of test_property.py's overcommit interleaving
     test (hypothesis is an optional dep): seeded random admit/grow/finish
