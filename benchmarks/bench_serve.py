@@ -97,13 +97,34 @@ clear 1.2x and the whole sweep must stay within ``gamma`` compiled
 programs (it compiles exactly 2: one draft step reused at every round
 depth and precision level, plus one fixed-width verify chunk).
 
+``--degrade`` (with ``--overload`` and ``--packed-bits``) replays the
+overload sweep through the SAME tight pool with the load-triggered
+degrade loop armed: under pressure the scheduler sheds active bit
+planes (every token gets cheaper) before shedding requests
+(preemption/recompute), restoring with hysteresis as the queue drains.
+One ``serve_degrade`` row per offered rate, with the rate-matched
+no-degrade overload goodput as the request-shedding baseline::
+
+    serve_degrade,<us_total>,rate=...;goodput_tok_s=...;baseline_goodput_tok_s=...;sheds=...;restores=...;preemptions=...;min_active_planes=...;leaked_blocks=0
+
+Under ``--smoke`` the sweep must shed AND restore, drain with zero
+leaks, never recompile (the plane count is a runtime operand), and hold
+goodput within 25% of the baseline — a regression floor, not a speedup
+claim: the CPU reference bitserial path masks planes in a statically
+unrolled loop, so fewer active planes save no host compute; on TPU the
+shed planes cut HBM weight traffic directly.
+
 ``--json PATH`` dumps a stable, versioned JSON document
 (``schema_version`` 1): the emitted rows, a metrics-registry snapshot
 per serving mode (the same counters/histograms ``launch.serve
 --metrics-port`` scrapes — every derived row statistic is recomputable
 from it), and the quantization-quality probe rows when ``--packed-bits``
 is set (``repro.obs.quality``: logit MSE + top-1 agreement per active
-plane count).  CI uploads it as the ``BENCH_serve.json`` artifact.
+plane count).  CI uploads it as the ``BENCH_serve.json`` artifact and
+re-validates it with :func:`validate_bench_json`.  Versioning policy
+(see ``BENCH_JSON_KEYS``): new top-level keys with neutral defaults are
+ADDITIVE and keep ``schema_version`` 1 — consumers must tolerate
+unknown keys; renaming/removing/retyping an existing key bumps it.
 """
 from __future__ import annotations
 
@@ -358,6 +379,146 @@ def run_overload(params, cfg, reqs, ref, max_len, n_slots, block_size,
     return sched, stats
 
 
+def run_degrade(params, cfg, reqs, max_len, n_slots, block_size, rates,
+                arrival_seed, baseline_stats, smoke):
+    """Degrade overload sweep: the same tiered workload, tight pool, and
+    offered rates as :func:`run_overload`, but with the load-triggered
+    degrade loop armed — under pressure the scheduler sheds bit planes
+    (cheaper tokens) before shedding requests (preemption/recompute).
+    One ``serve_degrade`` row per rate, with the rate-matched no-degrade
+    overload stats as the request-shedding baseline.  Returns the last
+    rate's scheduler plus the per-rate stats for the --json document."""
+    import dataclasses
+
+    from benchmarks.common import emit
+    from repro.launch.serve import poisson_arrivals
+    from repro.serve import BlockAllocator, ServeEngine
+
+    def tiered():
+        return [dataclasses.replace(r, tier=overload_tier(r.uid))
+                for r in reqs()]
+
+    base = tiered()
+    # Identical pool sizing to run_overload: the comparison isolates the
+    # degrade loop, not the pool geometry.
+    rows = BlockAllocator(1, block_size).blocks_for_rows
+    max_need = max(rows(len(r.tokens) + r.max_new - 1) for r in base)
+    n_blocks = max(int(0.6 * paged_pool_size(base, n_slots, block_size)),
+                   max_need)
+    # hysteresis 2: the bench schedules' calm tails are short, and the
+    # row should show the restore path, not just the shed ramp
+    engine = ServeEngine(params, cfg, max_len=max_len, continuous=True,
+                         n_slots=n_slots, paged=True, block_size=block_size,
+                         n_blocks=n_blocks, overcommit=2.0, degrade=True,
+                         degrade_queue_depth=1, degrade_hysteresis=2)
+    sched = engine.scheduler
+    engine.generate(tiered(),
+                    arrival_steps=poisson_arrivals(len(base), rates[0],
+                                                   seed=arrival_seed))
+    programs = (sched.compiled_decode_programs(),
+                sched.compiled_prefill_programs())
+
+    baseline_by_rate = {s["rate"]: s["goodput"] for s in baseline_stats}
+    stats = []
+    for rate in rates:
+        sched.pool.reset()
+        sched.reset_telemetry()
+        arrivals = poisson_arrivals(len(base), rate, seed=arrival_seed)
+        t0 = time.perf_counter()
+        results = engine.generate(tiered(), arrival_steps=arrivals)
+        wall = time.perf_counter() - t0
+        # Degraded tokens legitimately differ from the full-precision
+        # reference — token consistency vs the logged plane counts is the
+        # conformance suite's job (static-truncation replay).  Here the
+        # contract is lifecycle + accounting:
+        alloc = sched.pool.allocator
+        leaked = alloc.n_blocks - alloc.free_count
+        assert leaked == 0, f"rate={rate}: {leaked} blocks leaked"
+        assert alloc.committed == 0, (rate, alloc.committed)
+        assert not sched.obs.recorder.leaked, sched.obs.recorder.leaked
+        assert (sched.compiled_decode_programs(),
+                sched.compiled_prefill_programs()) == programs, (
+            "degrade transitions recompiled a program — the plane count "
+            "must stay a runtime operand")
+        for r in results:
+            assert r.plane_log is not None and len(r.plane_log) == len(r.tokens)
+        goodput = sum(len(r.tokens) for r in results) / wall
+        min_planes = int(min(min(r.plane_log) for r in results))
+        baseline = baseline_by_rate.get(rate, float("nan"))
+        stats.append({"rate": rate, "goodput": goodput,
+                      "baseline_goodput": baseline,
+                      "sheds": sched.degrade_sheds,
+                      "restores": sched.degrade_restores,
+                      "preemptions": sched.preemptions_total(),
+                      "min_active_planes": min_planes})
+        emit("serve_degrade", wall * 1e6,
+             f"rate={rate:g};goodput_tok_s={goodput:.1f};"
+             f"baseline_goodput_tok_s={baseline:.1f};"
+             f"sheds={sched.degrade_sheds};restores={sched.degrade_restores};"
+             f"preemptions={sched.preemptions_total()};"
+             f"min_active_planes={min_planes};"
+             f"n_blocks={n_blocks};overcommit=2.0;"
+             f"leaked_blocks={leaked}")
+
+    if smoke:
+        top = stats[-1]
+        # The loop must actually fire both directions across the sweep
+        # (the top rate sheds; drain tails restore) ...
+        assert sum(s["sheds"] for s in stats) > 0, "degrade never shed a plane"
+        assert sum(s["restores"] for s in stats) > 0, "degrade never restored"
+        assert top["min_active_planes"] < max(
+            s["min_active_planes"] for s in stats) or top["sheds"] > 0
+        # ... and shedding planes must not UNDERPERFORM shedding requests.
+        # On the CPU reference path the bitserial matmul masks planes in a
+        # statically-unrolled loop, so fewer active planes save no compute
+        # — the floor is a regression guard (no pathological overhead from
+        # plane grouping/bookkeeping), not a speedup claim; on TPU the
+        # shed planes cut HBM weight traffic directly.
+        assert top["goodput"] >= 0.75 * top["baseline_goodput"], (
+            f"degrade goodput {top['goodput']:.1f} tok/s fell more than 25% "
+            f"below the request-shedding baseline "
+            f"{top['baseline_goodput']:.1f} tok/s at rate {top['rate']:g}")
+    return sched, stats
+
+
+BENCH_JSON_KEYS = {
+    # schema_version 1 layout: key -> required type.  VERSIONING POLICY:
+    # adding a NEW top-level key (with an empty/neutral default when its
+    # flag is off) is additive and does NOT bump schema_version —
+    # consumers must tolerate unknown keys.  Renaming, removing, or
+    # changing the type/meaning of an existing key is breaking and bumps
+    # schema_version.  "overload", "spec", and "degrade" were all added
+    # additively under version 1.
+    "schema_version": int,
+    "workload": dict,
+    "rows": list,
+    "metrics": dict,
+    "quality": list,
+    "overload": list,
+    "spec": list,
+    "degrade": list,
+}
+
+
+def validate_bench_json(doc: dict) -> None:
+    """Schema check for the --json document (also run by CI over the
+    uploaded artifact): version 1, every required key present with the
+    right type, and rows shaped name/us_per_call/derived."""
+    if doc.get("schema_version") != 1:
+        raise ValueError(f"schema_version {doc.get('schema_version')!r} != 1 "
+                         "— breaking layout change without a consumer update?")
+    for key, typ in BENCH_JSON_KEYS.items():
+        if key not in doc:
+            raise ValueError(f"--json document missing required key {key!r}")
+        if not isinstance(doc[key], typ):
+            raise ValueError(f"--json key {key!r}: expected {typ.__name__}, "
+                             f"got {type(doc[key]).__name__}")
+    for row in doc["rows"]:
+        if set(row) != {"name", "us_per_call", "derived"}:
+            raise ValueError(f"malformed bench row {row!r}")
+        float(row["us_per_call"])  # numeric
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="granite-3-2b")
@@ -390,6 +551,14 @@ def main(argv=None):
                          "tight-pool overcommit=2.0 engine with SLO tiers — "
                          "one serve_overload row (goodput + per-tier p99 "
                          "TTFT/TPOT + preemption counters) per offered rate")
+    ap.add_argument("--degrade", action="store_true",
+                    help="with --overload and --packed-bits: replay the "
+                         "overload sweep through the same tight pool with "
+                         "the load-triggered degrade loop armed (shed bit "
+                         "planes before shedding requests) — one "
+                         "serve_degrade row per rate with shed/restore "
+                         "counters and the rate-matched overload goodput as "
+                         "the request-shedding baseline")
     ap.add_argument("--spec-decode", action="store_true",
                     help="with --paged and --packed-bits: also serve through "
                          "bit-plane speculative decoding, sweeping the draft "
@@ -421,6 +590,12 @@ def main(argv=None):
         raise SystemExit("--overload requires --paged")
     if args.spec_decode and not args.paged:
         raise SystemExit("--spec-decode requires --paged")
+    if args.degrade and not args.overload:
+        raise SystemExit("--degrade requires --overload (the sweep's "
+                         "no-degrade run is the request-shedding baseline)")
+    if args.degrade and args.packed_bits < 2:
+        raise SystemExit("--degrade requires --packed-bits >= 2 (shedding "
+                         "truncates the packed weight's bit planes)")
     if args.spec_decode and args.packed_bits < 2:
         raise SystemExit("--spec-decode requires --packed-bits >= 2 (drafting "
                          "truncates the packed weight's bit planes)")
@@ -429,6 +604,11 @@ def main(argv=None):
         # CI workload enough decode steps for the speedup to be signal,
         # not noise, while staying small
         args.max_new = 24
+    if args.degrade and args.smoke:
+        # the degrade loop needs decode-heavy lanes: pressure steps to
+        # ramp the shed and a calm drain tail long enough for the
+        # hysteresis to restore
+        args.max_new = max(args.max_new, 24)
     if bool(args.data_parallel) != bool(args.model_parallel):
         raise SystemExit("--data-parallel and --model-parallel must be given together")
     n_dev = args.data_parallel * args.model_parallel
@@ -466,6 +646,7 @@ def main(argv=None):
     quality_rows = []
     overload_stats = []
     spec_stats = []
+    degrade_stats = []
 
     # Same requests, greedy: outputs must agree token-for-token.
     ref = {r.uid: r.tokens for r in b_results}
@@ -588,6 +769,12 @@ def main(argv=None):
                 params, cfg, reqs, ref, args.max_len, args.slots,
                 args.block_size, rates, arrival_seed=0, smoke=args.smoke)
             snapshots["overload"] = osched.obs.registry.snapshot()
+            if args.degrade:
+                dsched, degrade_stats = run_degrade(
+                    params, cfg, reqs, args.max_len, args.slots,
+                    args.block_size, rates, arrival_seed=0,
+                    baseline_stats=overload_stats, smoke=args.smoke)
+                snapshots["degrade"] = dsched.obs.registry.snapshot()
         if args.spec_decode:
             from repro.serve import ServeEngine
 
@@ -724,7 +911,13 @@ def main(argv=None):
             # draft depth (acceptance rate + speedup vs the non-spec paged
             # run), empty without --spec-decode.
             "spec": spec_stats,
+            # Additive: the degrade sweep, one object per offered rate
+            # (shed/restore counters + goodput vs the request-shedding
+            # overload baseline), empty without --degrade.  See
+            # BENCH_JSON_KEYS for the additive-key versioning policy.
+            "degrade": degrade_stats,
         }
+        validate_bench_json(doc)  # the artifact CI consumes must parse
         with open(args.json, "w") as f:
             json.dump(doc, f, indent=2, sort_keys=True)
     if args.smoke:

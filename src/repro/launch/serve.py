@@ -50,6 +50,14 @@ Scheduling modes:
   fused program.  Accepted prefixes commit; rejected tails rewind lane
   positions through the block tables (greedy verify makes the output
   token-identical to non-speculative decode).
+* ``--precision-tier {full,economy,mixed}`` (with ``--packed-bits`` and a
+  chunked continuous engine): per-request precision classes — economy
+  requests decode at ``--economy-planes`` active bit planes through the
+  same compiled program (planes is a runtime operand); prefill is always
+  full precision.  ``--degrade`` adds load-triggered plane shedding:
+  under queue/occupancy/preemption pressure the scheduler sheds one
+  plane per pressured step (never below each class's floor) instead of
+  shedding requests, restoring after ``--degrade-hysteresis`` calm steps.
 
 With --data-parallel/--model-parallel the engine serves on a real
 ("data", "model") mesh: params, the KV cache and the slot pool are
@@ -153,6 +161,31 @@ def main():
                     help="SLO class stamped on requests: latency-tier is "
                          "admitted first and preempted last; 'mixed' marks "
                          "every 4th request latency-tier")
+    ap.add_argument("--precision-tier", choices=("full", "economy", "mixed"),
+                    default="full",
+                    help="precision class stamped on requests (with "
+                         "--packed-bits and a chunked continuous engine): "
+                         "economy-class lanes decode at --economy-planes "
+                         "active bit planes through the SAME compiled "
+                         "program; 'mixed' marks every other request economy")
+    ap.add_argument("--economy-planes", type=int, default=0,
+                    help="active bit planes for the economy precision class "
+                         "(0 = max(1, --packed-bits // 2)); must be in "
+                         "[1, --packed-bits] and above --draft-planes under "
+                         "--spec-decode")
+    ap.add_argument("--degrade", action="store_true",
+                    help="load-triggered plane shedding: when queue depth / "
+                         "occupancy / preemption rate cross the policy "
+                         "thresholds the engine sheds one active bit plane "
+                         "per pressured step (floor-clamped per precision "
+                         "class) instead of shedding requests, restoring "
+                         "with hysteresis as pressure drops")
+    ap.add_argument("--degrade-queue-depth", type=int, default=2,
+                    help="queue depth (post-admission) at which the degrade "
+                         "loop sheds a plane (with --degrade)")
+    ap.add_argument("--degrade-hysteresis", type=int, default=4,
+                    help="consecutive calm steps before the degrade loop "
+                         "restores a shed plane (with --degrade)")
     ap.add_argument("--arrival-rate", type=float, default=0.0,
                     help="simulate Poisson arrivals at this mean rate per decode "
                          "step (continuous mode; 0 = all requests at step 0)")
@@ -199,6 +232,23 @@ def main():
     if args.spec_decode and not 1 <= args.draft_planes < args.packed_bits:
         raise SystemExit(f"--draft-planes {args.draft_planes} must be in "
                          f"[1, --packed-bits {args.packed_bits})")
+    tiered = args.precision_tier != "full" or args.degrade
+    if tiered and not args.packed_bits:
+        raise SystemExit("--precision-tier/--degrade require --packed-bits "
+                         "(float weights have no bit planes to shed)")
+    if tiered and not (args.chunked_prefill or args.paged):
+        raise SystemExit("--precision-tier/--degrade require a chunked "
+                         "continuous engine (--continuous with "
+                         "--chunked-prefill or --paged)")
+    econ_planes = args.economy_planes or max(1, args.packed_bits // 2)
+    if args.precision_tier != "full":
+        if not 1 <= econ_planes <= args.packed_bits:
+            raise SystemExit(f"--economy-planes {econ_planes} must be in "
+                             f"[1, --packed-bits {args.packed_bits}]")
+        if args.spec_decode and econ_planes <= args.draft_planes:
+            raise SystemExit(f"--economy-planes {econ_planes} must exceed "
+                             f"--draft-planes {args.draft_planes} (the "
+                             "verify must add information over the draft)")
 
     from ..configs import reduced_config
     from ..data import MarkovLM
@@ -250,6 +300,12 @@ def main():
                          overcommit=args.overcommit,
                          spec_decode=args.spec_decode,
                          draft_planes=args.draft_planes, gamma=args.gamma,
+                         precision_tiers=({"economy": econ_planes}
+                                          if args.precision_tier != "full"
+                                          else None),
+                         degrade=args.degrade,
+                         degrade_queue_depth=args.degrade_queue_depth,
+                         degrade_hysteresis=args.degrade_hysteresis,
                          obs=obs)
     task = MarkovLM(vocab=cfg.vocab_size, seed=3)
     if args.mixed_lens:
@@ -261,6 +317,11 @@ def main():
             return "latency" if i % 4 == 0 else "throughput"
         return args.tier
 
+    def req_precision(i: int) -> str:
+        if args.precision_tier == "mixed":
+            return "economy" if i % 2 else "full"
+        return args.precision_tier
+
     reqs = [
         Request(
             uid=i,
@@ -269,6 +330,7 @@ def main():
             max_new=args.max_new,
             temperature=args.temperature,
             tier=req_tier(i),
+            precision=req_precision(i),
         )
         for i in range(args.requests)
     ]
@@ -291,6 +353,19 @@ def main():
             print(f"[chunked] chunk_dispatches={sched.prefill_chunks} "
                   f"admit_bursts={len(sched.admit_bursts)} "
                   f"admit_programs={sched.compiled_admit_programs()}")
+        if tiered:
+            econ = (f"economy={sched.active_planes('economy')}/"
+                    f"{econ_planes}" if args.precision_tier != "full"
+                    else "economy=-")
+            print(f"[tiers] precision_tier={args.precision_tier} "
+                  f"full={sched.active_planes('full')}/{args.packed_bits} "
+                  f"{econ}")
+        if args.degrade:
+            print(f"[degrade] sheds={sched.degrade_sheds} "
+                  f"restores={sched.degrade_restores} "
+                  f"events={sched.degrade_events_total()} "
+                  f"queue_depth_trigger={args.degrade_queue_depth} "
+                  f"hysteresis={args.degrade_hysteresis}")
         if args.paged:
             pool = sched.pool
             print(f"[paged] block_size={pool.block_size} n_blocks={pool.n_blocks} "
@@ -318,16 +393,19 @@ def main():
         obs.recorder.dump_chrome_trace(args.chrome_trace_out)
         print(f"[obs] chrome trace -> {args.chrome_trace_out}")
     if args.smoke:
-        _obs_smoke(args, obs, server)
+        _obs_smoke(args, obs, server, engine)
     if server is not None:
         server.close()
 
 
-def _obs_smoke(args, obs, server):
+def _obs_smoke(args, obs, server, engine):
     """CI self-check: scrape once over HTTP (or render directly when no
     endpoint was requested), validate the exposition parses, the expected
     metric families are populated, no span leaked, and the JSONL trace
-    file (if written) passes the schema check.  Prints OBS_SMOKE_OK."""
+    file (if written) passes the schema check.  With ``--degrade`` the
+    smoke additionally requires the shed-and-restore cycle to have fired
+    (the CI invocation must overload the pool) with zero leaked blocks.
+    Prints OBS_SMOKE_OK."""
     from urllib.request import urlopen
 
     from ..obs import trace as obs_trace
@@ -345,12 +423,30 @@ def _obs_smoke(args, obs, server):
         required += ["serve_blocks_alloc_total", "serve_block_pool_free"]
     if args.spec_decode:
         required += ["serve_spec_rounds_total", "serve_spec_accept_total"]
+    if args.precision_tier != "full" or args.degrade:
+        required += ["serve_active_planes"]
+    if args.degrade:
+        required += ["serve_degrade_events_total"]
     missing = [f for f in required
                if f not in families or not families[f]["samples"]]
     if missing:
         raise SystemExit(f"[obs] smoke FAILED: empty/missing families {missing}")
     if obs.recorder.leaked:
         raise SystemExit(f"[obs] smoke FAILED: leaked spans {obs.recorder.leaked}")
+    if args.degrade:
+        sched = engine.scheduler
+        if sched.degrade_sheds < 1 or sched.degrade_restores < 1:
+            raise SystemExit(
+                f"[obs] smoke FAILED: --degrade ran without a full "
+                f"shed-and-restore cycle (sheds={sched.degrade_sheds}, "
+                f"restores={sched.degrade_restores}) — overload the pool "
+                "(more requests than slots, arrivals at step 0)")
+        if args.paged:
+            pool = sched.pool
+            leaked = pool.n_blocks - pool.allocator.free_count
+            if leaked:
+                raise SystemExit(f"[obs] smoke FAILED: {leaked} leaked KV "
+                                 "blocks after degrade run")
     if args.trace_out:
         n = obs_trace.validate_jsonl(args.trace_out)
         if n < args.requests:

@@ -258,6 +258,19 @@ class Family:
             self._children[key] = child
         return child
 
+    def ensure_capacity(self, n: int) -> None:
+        """Raise the cardinality cap to at least ``n`` children.
+
+        For callers that know their label space up front (the quality
+        probe enumerates ``planes x group`` combinations): bounding the
+        cap to the enumerated size keeps the leak protection while never
+        raising mid-run.  The cap only ever grows — a later caller cannot
+        shrink it under an earlier one's children.
+        """
+        if n < 1:
+            raise ValueError(f"family capacity must be >= 1, got {n}")
+        self.max_children = max(self.max_children, int(n))
+
     def children(self) -> Iterable[Tuple[Dict[str, str], object]]:
         for key, child in self._children.items():
             yield dict(zip(self.label_names, key)), child
@@ -308,11 +321,27 @@ class Registry:
             }
             return obj
 
-    def counter(self, name: str, help: str = "", labels: Sequence[str] = ()):
-        return self._get("counter", name, help, labels)
+    @staticmethod
+    def _family_kwargs(labels, max_children):
+        if max_children is None:
+            return {}
+        if not labels:
+            raise ValueError("max_children only applies to labeled families")
+        return {"max_children": int(max_children)}
 
-    def gauge(self, name: str, help: str = "", labels: Sequence[str] = ()):
-        return self._get("gauge", name, help, labels)
+    def counter(self, name: str, help: str = "", labels: Sequence[str] = (),
+                max_children: Optional[int] = None):
+        """``max_children`` bounds a labeled family's cardinality cap at
+        creation time (ignored on idempotent re-gets, like histogram
+        ``capacity``); use :meth:`Family.ensure_capacity` to grow an
+        existing family."""
+        return self._get("counter", name, help, labels,
+                         **self._family_kwargs(labels, max_children))
+
+    def gauge(self, name: str, help: str = "", labels: Sequence[str] = (),
+              max_children: Optional[int] = None):
+        return self._get("gauge", name, help, labels,
+                         **self._family_kwargs(labels, max_children))
 
     def histogram(self, name: str, help: str = "", labels: Sequence[str] = (),
                   capacity: int = DEFAULT_HISTOGRAM_CAPACITY):

@@ -135,14 +135,22 @@ def quality_probe(params, cfg, tokens, plane_counts: Optional[Sequence[int]] = N
     rows: List[QualityRow] = []
     g_mse = g_top1 = None
     if registry is not None:
+        # The probe's label space is enumerable up front: planes x group.
+        # Size the families to it explicitly — a wide probe (many plane
+        # counts x all layer groups) must never trip the default 64-child
+        # cardinality cap and raise mid-serve.  ensure_capacity() also
+        # grows a family an earlier, narrower probe already registered.
+        needed = len(plane_counts) * len(groups)
         g_mse = registry.gauge(
             "serve_quality_logit_mse",
             "logit MSE vs full-precision packed weights at k active planes",
-            labels=("planes", "group"))
+            labels=("planes", "group"), max_children=needed)
         g_top1 = registry.gauge(
             "serve_quality_top1",
             "greedy top-1 agreement vs full precision at k active planes",
-            labels=("planes", "group"))
+            labels=("planes", "group"), max_children=needed)
+        g_mse.ensure_capacity(len(g_mse._children) + needed)
+        g_top1.ensure_capacity(len(g_top1._children) + needed)
     for group in groups:
         suffixes = None if group == "all" else LAYER_GROUPS[group]
         for k in plane_counts:
@@ -157,3 +165,91 @@ def quality_probe(params, cfg, tokens, plane_counts: Optional[Sequence[int]] = N
                 g_top1.labels(planes=str(k), group=group).set(top1)
     rows.sort(key=lambda r: (r.group, r.planes))
     return rows
+
+
+def replay_plane_log(params, cfg, prompt, plane_log, max_len: int):
+    """Re-generate one lane's greedy tokens by STATIC plane truncation.
+
+    The tiered scheduler serves every precision level through one
+    compiled program with the active-plane count as a *runtime* operand
+    (``models.common.active_plane_count``), and records the count each
+    token was computed at in ``Result.plane_log``.  This replay is the
+    independent oracle for that path: token ``t`` is produced by a
+    single-lane greedy decode step whose packed weights are statically
+    truncated to ``plane_log[t]`` planes (:func:`truncate_model_planes`
+    — a different param tree, a different compiled program), carrying
+    the KV/recurrent cache across every switch.  Because the runtime
+    dispatch is bitwise-equal to static truncation (pinned in
+    tests/test_kernels.py), the replay must reproduce the served tokens
+    exactly — mid-stream tier transitions and degrade sheds included.
+    ``plane_log[0]`` is the prefill's count (full precision by policy).
+    """
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from ..core.packing import packed_leaves
+    from ..models import transformer
+
+    plane_log = [int(k) for k in plane_log]
+    if not plane_log:
+        return np.zeros((0,), np.int32)
+    packed = packed_leaves(params)
+    if not packed:
+        raise ValueError("replay_plane_log needs a packed model")
+    n_bits = max(pw.n_bits for pw in packed)
+    views = {n_bits: params}
+
+    def at(k):
+        if k not in views:
+            views[k] = truncate_model_planes(params, k)
+        return views[k]
+
+    cache_dtype = jnp.dtype(cfg.kv_cache_dtype)
+    prefill = jax.jit(lambda p, t: transformer.prefill(
+        p, {"tokens": t}, cfg, max_len, cache_dtype=cache_dtype))
+    step = jax.jit(lambda p, c, t, pos: transformer.decode_step(
+        p, c, t, pos, cfg))
+    toks = jnp.asarray(np.asarray(prompt, np.int32))[None, :]
+    logits, cache = prefill(at(plane_log[0]), toks)
+    out = [int(jnp.argmax(logits[0, : cfg.vocab_size]))]
+    plen = len(prompt)
+    for t, k in enumerate(plane_log[1:], start=1):
+        logits, cache = step(at(k), cache,
+                             jnp.asarray([[out[-1]]], jnp.int32),
+                             jnp.int32(plen + t - 1))
+        out.append(int(jnp.argmax(logits[0, : cfg.vocab_size])))
+    return np.asarray(out, np.int32)
+
+
+def precision_tiers_from_probe(rows: Sequence[QualityRow],
+                               thresholds: Dict[str, float]) -> Dict[str, int]:
+    """Choose a serve-time precision-tier table from quality-probe rows.
+
+    ``thresholds`` maps a precision-class name to the minimum greedy
+    top-1 agreement (vs full precision) the class tolerates, e.g.
+    ``{"economy": 0.95}``.  For each class the SMALLEST probed plane
+    count whose all-layers agreement meets the threshold is picked —
+    the cheapest view that still clears the quality bar — falling back
+    to the largest probed count when nothing clears it.  The result is
+    exactly what ``SchedulerPolicy(precision_tiers=...)`` /
+    ``ServeEngine(precision_tiers=...)`` take, so tier choices are
+    grounded in measured data rather than guesswork::
+
+        rows = quality_probe(params, cfg, tokens)
+        tiers = precision_tiers_from_probe(rows, {"economy": 0.95})
+        engine = ServeEngine(params, cfg, ..., precision_tiers=tiers)
+    """
+    all_rows = sorted((r for r in rows if r.group == "all"),
+                      key=lambda r: r.planes)
+    if not all_rows:
+        raise ValueError("precision_tiers_from_probe needs 'all'-group rows "
+                         "(run quality_probe with groups containing 'all')")
+    tiers: Dict[str, int] = {}
+    for name, thr in thresholds.items():
+        if not 0.0 <= float(thr) <= 1.0:
+            raise ValueError(f"tier {name!r}: threshold {thr} not in [0, 1]")
+        tiers[name] = next((r.planes for r in all_rows
+                            if r.top1_agreement >= float(thr)),
+                           all_rows[-1].planes)
+    return tiers

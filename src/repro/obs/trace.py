@@ -76,10 +76,16 @@ RE_PREFILL = "re_prefill"
 DRAFT = "draft"
 VERIFY = "verify"
 ROLLBACK = "rollback"
+# Precision-tier degrade loop: the engine shed (or restored) active bit
+# planes under load.  Non-terminal, recorded on every live lane at the
+# transition step with the lane's NEW effective plane count — a trace
+# reads exactly which precision each of its decode steps ran at.
+PLANES_SHED = "planes_shed"
+PLANES_RESTORED = "planes_restored"
 
 TERMINAL = frozenset({FINISHED, ABANDONED, EVICTED})
 KINDS = (ENQUEUED, ADMITTED, PREFILL_CHUNK, FIRST_TOKEN, DECODE_STEP,
-         DRAFT, VERIFY, ROLLBACK,
+         DRAFT, VERIFY, ROLLBACK, PLANES_SHED, PLANES_RESTORED,
          PREEMPTED, RE_PREFILL, FINISHED, ABANDONED, EVICTED)
 
 
@@ -251,7 +257,8 @@ class FlightRecorder:
                 })
             for ev in tr.events:
                 if ev.kind in (PREFILL_CHUNK, PREEMPTED, RE_PREFILL,
-                               DRAFT, VERIFY, ROLLBACK):
+                               DRAFT, VERIFY, ROLLBACK,
+                               PLANES_SHED, PLANES_RESTORED):
                     events.append({
                         "ph": "i", "pid": 0, "tid": tid, "name": ev.kind,
                         "cat": "serve", "ts": us(ev.ts), "s": "t",

@@ -77,6 +77,12 @@ class Request:
     # "throughput" at admission and are preempted last under overcommit
     # pressure; the bucketed engine ignores the field.
     tier: str = "throughput"
+    # Precision class (continuous scheduler with precision tiers):
+    # "full", a key of the policy's precision_tiers table, or an
+    # explicit active-plane count (int) — validated at stream() like
+    # ``tier``.  The bucketed engine ignores the field; an untiered
+    # continuous engine rejects anything but "full".
+    precision: object = "full"
 
 
 @dataclasses.dataclass
@@ -87,6 +93,12 @@ class Result:
     # admitted -> first_token span (obs.trace.RequestTrace.ttft_ms).
     prefill_ms: float
     decode_ms_per_tok: float
+    # Tiered engines only: per-token active bit-plane count each token
+    # was computed at, parallel to ``tokens`` (prefill's first token at
+    # full precision, decode tokens at the step's effective count after
+    # any degrade shed).  None on untiered paths.  The token-identity
+    # oracle replays this log against static plane truncation.
+    plane_log: Optional[np.ndarray] = None
 
 
 class ServeEngine:
@@ -97,7 +109,10 @@ class ServeEngine:
                  block_size: int = 32, n_blocks: Optional[int] = None,
                  paged_kernel: bool = False, overcommit: float = 1.0,
                  spec_decode: bool = False, draft_planes: int = 2,
-                 gamma: int = 4, obs: Optional[Observability] = None):
+                 gamma: int = 4, precision_tiers: Optional[Dict[str, int]] = None,
+                 degrade: bool = False, degrade_queue_depth: int = 2,
+                 degrade_hysteresis: int = 4,
+                 obs: Optional[Observability] = None):
         self.cfg = cfg
         self.max_len = max_len
         self.key = jax.random.PRNGKey(seed)
@@ -153,7 +168,11 @@ class ServeEngine:
                                          overcommit=overcommit,
                                          spec_decode=spec_decode,
                                          draft_planes=draft_planes,
-                                         gamma=gamma)
+                                         gamma=gamma,
+                                         precision_tiers=precision_tiers,
+                                         degrade=degrade,
+                                         degrade_queue_depth=degrade_queue_depth,
+                                         degrade_hysteresis=degrade_hysteresis)
             else:
                 if chunked_prefill and not policy.chunked_prefill:
                     policy = dataclasses.replace(policy, chunked_prefill=True)
@@ -174,6 +193,15 @@ class ServeEngine:
                     policy = dataclasses.replace(
                         policy, spec_decode=True, draft_planes=draft_planes,
                         gamma=gamma)
+                if precision_tiers is not None and policy.precision_tiers is None:
+                    # requires chunked prefill (policy validates)
+                    policy = dataclasses.replace(
+                        policy, precision_tiers=precision_tiers)
+                if degrade and not policy.degrade:
+                    policy = dataclasses.replace(
+                        policy, degrade=True,
+                        degrade_queue_depth=degrade_queue_depth,
+                        degrade_hysteresis=degrade_hysteresis)
             self.scheduler = ContinuousScheduler(self, policy)
 
     # -- sharding ---------------------------------------------------------

@@ -99,6 +99,27 @@ non-speculative decode; per-lane draft depth backs off on rejections
 (``SlotState.spec_gamma``).  Preemption can only fire at round setup,
 so a preempted lane's snapshot never contains an unverified draft.
 
+**Precision tiers + load-triggered degrade**
+(``SchedulerPolicy(precision_tiers={...})`` / ``degrade=True``, packed
+models with chunked prefill): BSQ's packed planes make serving
+precision a per-step runtime knob, and this layer is the policy on top.
+``Request.precision`` names a class ("full", a tier-table key, or an
+explicit plane count — validated like ``Request.tier``); prefill always
+runs at full precision, and each decode step groups its lanes by
+effective plane count and runs one pooled dispatch per distinct count
+(``plane_grouping=False``: one dispatch at the max) — the plane count
+is a traced operand of the SAME single compiled decode program, exactly
+like the spec draft step.  With ``degrade=True`` the scheduler sheds
+one plane per pressured step (queue depth / occupancy / windowed
+preemption rate past the policy thresholds) from every tier, clamped at
+per-class floors, and restores one per ``degrade_hysteresis`` calm
+steps — load sheds *precision* instead of requests.  Every emitted
+token's plane count is logged (``SlotState.plane_log`` ->
+``Result.plane_log``), and because the runtime plane dispatch is
+bitwise-equal to static truncation, each token is identical to the
+static-truncation oracle at its logged count — the conformance
+harness's invariant for mid-stream switches.
+
 Time is measured in scheduler steps (one pooled decode = one step);
 arrival times for simulated workloads are expressed on that clock.
 
@@ -196,6 +217,42 @@ class SchedulerPolicy:
     spec_decode: bool = False
     draft_planes: int = 2  # active bit planes during draft steps
     gamma: int = 4  # max draft steps per round (per-lane depth backs off)
+    # Serve-time precision tiers (packed models, chunked prefill): maps a
+    # precision-class name (what ``Request.precision`` carries) to an
+    # active bit-plane count, e.g. {"economy": 3} — pick the counts from
+    # quality-probe data (obs.quality.precision_tiers_from_probe).  The
+    # class "full" is implicit (= the model's n_bits) and cannot be
+    # remapped.  None (default) disables tier resolution entirely: every
+    # request must be precision "full" and the untiered decode program
+    # is compiled, exactly as before.  Prefill always runs at full
+    # precision (the first token is full quality; truncated KV never
+    # poisons a lane's prompt rows); only decode steps run tiered.
+    precision_tiers: Optional[Dict[str, int]] = None
+    # Group each step's decode lanes by effective plane count and run one
+    # pooled dispatch per distinct count (every group pays only its own
+    # planes; still ONE compiled program — the count is a runtime
+    # operand).  Off: one dispatch at the max count across live decode
+    # lanes serves every lane (fewer dispatches, no compute savings; the
+    # max IS the plane count logged for every token that step).
+    plane_grouping: bool = True
+    # Load-triggered degrade (tiered engines): when queue depth /
+    # occupancy / preemption rate cross the thresholds below, shed one
+    # active plane per pressured step — from EVERY tier, clamped at each
+    # class's floor — instead of shedding requests; restore one plane per
+    # ``degrade_hysteresis`` consecutive calm steps.  Every transition
+    # records a trace span on each live lane plus
+    # serve_degrade_events_total{direction} / serve_active_planes{tier}.
+    degrade: bool = False
+    degrade_queue_depth: int = 2  # queued requests that count as pressure
+    degrade_occupancy: float = 1.0  # lane-occupancy fraction that counts as pressure (with a non-empty queue)
+    degrade_preempt_rate: float = 0.5  # preemptions/step over the window that count as pressure
+    degrade_window: int = 16  # steps of preemption history in the rate
+    degrade_hysteresis: int = 4  # calm steps required per restored plane
+    # Per-class plane floor the degrade loop may not shed below (default
+    # 1 for every class; with spec_decode the effective floor is raised
+    # to draft_planes + 1 so a degraded verify always out-informs the
+    # draft — see the degrade loop's clamp warning).
+    precision_floors: Optional[Dict[str, int]] = None
     # Bounded-telemetry capacity: per-step observations (occupancy,
     # decode-step ms, block usage, ...) live in fixed-size reservoirs of
     # this many entries (obs.metrics.Histogram), so a long-lived server
@@ -264,6 +321,74 @@ class SchedulerPolicy:
                 raise ValueError(
                     f"gamma={self.gamma}: need >= 1 draft step per round"
                 )
+        if self.precision_tiers is not None:
+            if not self.chunked_prefill:
+                raise ValueError(
+                    "precision_tiers requires chunked_prefill=True — legacy "
+                    "batch-1 admission is the full-precision reference oracle "
+                    "and does not carry per-lane plane bookkeeping"
+                )
+            for name, k in self.precision_tiers.items():
+                if name == "full":
+                    raise ValueError(
+                        "precision_tiers must not remap 'full' — it is "
+                        "implicitly the model's n_bits"
+                    )
+                if not isinstance(k, int) or k < 1:
+                    raise ValueError(
+                        f"precision tier {name!r}: plane count {k!r} must be "
+                        "an int >= 1"
+                    )
+                if self.spec_decode and k <= self.draft_planes:
+                    # A tier at or below the draft precision makes the
+                    # verify dispatch carry zero information (draft ==
+                    # verify model) — reject here rather than burn it.
+                    raise ValueError(
+                        f"precision tier {name!r}: {k} planes <= "
+                        f"draft_planes={self.draft_planes} — the effective "
+                        "serving precision must be strictly above the draft "
+                        "precision for the verify to add information"
+                    )
+        if self.precision_floors is not None:
+            if self.precision_tiers is None and not self.degrade:
+                raise ValueError(
+                    "precision_floors without precision_tiers or degrade "
+                    "would be silently inert"
+                )
+            for name, fl in self.precision_floors.items():
+                if not isinstance(fl, int) or fl < 1:
+                    raise ValueError(
+                        f"precision floor {name!r}: {fl!r} must be an int >= 1"
+                    )
+        if self.degrade:
+            if not self.chunked_prefill:
+                raise ValueError(
+                    "degrade=True requires chunked_prefill=True (same "
+                    "per-lane plane bookkeeping as precision_tiers)"
+                )
+            if self.degrade_queue_depth < 1:
+                raise ValueError(
+                    f"degrade_queue_depth={self.degrade_queue_depth}: need "
+                    ">= 1 (depth 0 would mean permanent pressure)"
+                )
+            if not 0.0 < self.degrade_occupancy <= 1.0:
+                raise ValueError(
+                    f"degrade_occupancy={self.degrade_occupancy}: need a "
+                    "fraction in (0, 1]"
+                )
+            if self.degrade_preempt_rate < 0.0:
+                raise ValueError(
+                    f"degrade_preempt_rate={self.degrade_preempt_rate}: "
+                    "need >= 0"
+                )
+            if self.degrade_window < 1:
+                raise ValueError(
+                    f"degrade_window={self.degrade_window}: need >= 1 step")
+            if self.degrade_hysteresis < 1:
+                raise ValueError(
+                    f"degrade_hysteresis={self.degrade_hysteresis}: need "
+                    ">= 1 calm step per restored plane"
+                )
 
 
 @dataclasses.dataclass
@@ -277,6 +402,9 @@ class _Pending:
     # these (re-prefill recomputes their KV rows exactly), the effective
     # max_new shrinks by their count, and the Result stitches them back.
     prior: Optional[List[int]] = None
+    # Tiered engines: plane counts the ``prior`` tokens were emitted at
+    # (parallel list) — the Result's plane_log stitches them back too.
+    prior_planes: Optional[List[int]] = None
 
     @property
     def prompt_len(self) -> int:
@@ -295,6 +423,10 @@ class _Pending:
     @property
     def tier(self) -> str:
         return getattr(self.request, "tier", "throughput")
+
+    @property
+    def precision(self):
+        return getattr(self.request, "precision", "full")
 
 
 def preemption_order(candidates: List[Tuple[int, "SlotState"]]  # noqa: F821
@@ -374,11 +506,82 @@ class ContinuousScheduler:
                     f"(n_experts={cfg.n_experts})"
                 )
 
-        def _decode_fn(p, cache, tok, pos, act, table):
-            with packed_shard_mesh(engine._packed_mesh), \
-                 paged_shard_mesh(self._paged_mesh):
-                return transformer.decode_step(p, cache, tok, pos, cfg, active=act,
-                                               block_table=table, paged_kernel=pk)
+        # Precision tiers / degrade: resolve the tier table against the
+        # model's packed bit width.  ``self._tiered`` gates everything —
+        # an untiered scheduler compiles the exact decode program it
+        # always did and carries zero per-lane plane bookkeeping.
+        from ..core.packing import packed_leaves
+
+        packed = packed_leaves(engine.params)
+        self._n_bits: Optional[int] = (
+            max(pw.n_bits for pw in packed) if packed else None)
+        self._tiered = policy.precision_tiers is not None or policy.degrade
+        if self._tiered:
+            if self._n_bits is None:
+                raise ValueError(
+                    "precision_tiers/degrade need a packed model — float "
+                    "params have no bit planes to shed"
+                )
+            self._tier_planes: Dict[str, int] = {"full": self._n_bits}
+            for name, k in (policy.precision_tiers or {}).items():
+                if k > self._n_bits:
+                    raise ValueError(
+                        f"precision tier {name!r}: {k} planes > the model's "
+                        f"n_bits={self._n_bits}"
+                    )
+                self._tier_planes[name] = int(k)
+            if policy.spec_decode and self._n_bits <= policy.draft_planes:
+                raise ValueError(
+                    f"draft_planes={policy.draft_planes} >= n_bits="
+                    f"{self._n_bits} — no tier can serve strictly above the "
+                    "draft precision"
+                )
+            self._floors: Dict[str, int] = dict(policy.precision_floors or {})
+            # Max useful shed: past it every tier already sits at its
+            # floor and further sheds are inert (and with spec_decode
+            # would push a verify to draft precision — the clamp).
+            self._shed_ceiling = max(
+                k - self._floor(name) for name, k in self._tier_planes.items())
+            self._shed_ceiling = max(self._shed_ceiling, 0)
+        else:
+            self._tier_planes = {}
+            self._floors = {}
+            self._shed_ceiling = 0
+        # Degrade-loop state: planes currently shed (global, clamped at
+        # each tier's floor), consecutive calm steps, and a bounded
+        # window of per-step preemption counts for the rate trigger.
+        self._shed = 0
+        self._calm = 0
+        self._preempt_step = 0
+        self._preempt_window: Deque[int] = deque(
+            maxlen=policy.degrade_window)
+        self._degrade_warned = False
+        # Deterministic test hook: when set, ``force_shed(step) -> int``
+        # overrides the pressure triggers entirely (still floor-clamped)
+        # — the conformance harness drives plane switches on an exact
+        # schedule with it.  Requires policy.degrade=True.
+        self.force_shed: Optional[Callable[[int], int]] = None
+        self.degrade_sheds = 0
+        self.degrade_restores = 0
+
+        if self._tiered:
+            # Same single pooled decode program, with the step's active
+            # plane count as ONE extra traced int32 operand (the runtime
+            # plane dispatch the spec draft step already uses) — tier
+            # levels and degrade transitions never fork a compile.
+            def _decode_fn(p, cache, tok, pos, act, table, planes):
+                with packed_shard_mesh(engine._packed_mesh), \
+                     paged_shard_mesh(self._paged_mesh):
+                    with active_plane_count(planes):
+                        return transformer.decode_step(
+                            p, cache, tok, pos, cfg, active=act,
+                            block_table=table, paged_kernel=pk)
+        else:
+            def _decode_fn(p, cache, tok, pos, act, table):
+                with packed_shard_mesh(engine._packed_mesh), \
+                     paged_shard_mesh(self._paged_mesh):
+                    return transformer.decode_step(p, cache, tok, pos, cfg, active=act,
+                                                   block_table=table, paged_kernel=pk)
 
         self._decode = jax.jit(_decode_fn, out_shardings=out_sh)
         self._prefill_cache: Dict[int, Callable] = {}  # legacy: per prompt length
@@ -476,6 +679,23 @@ class ContinuousScheduler:
         self._g_progs = reg.gauge(
             "serve_compiled_programs", "compiled XLA programs by stage",
             labels=("kind",))
+        # Precision tiers / degrade loop: current effective plane count
+        # per precision class, and shed/restore transition counts.
+        self._g_active_planes = None
+        self._c_degrade = None
+        if self._tiered:
+            self._g_active_planes = reg.gauge(
+                "serve_active_planes",
+                "effective active bit planes by precision tier "
+                "(tier plane count minus the degrade loop's shed, "
+                "clamped at the tier's floor)",
+                labels=("tier",))
+            self._c_degrade = reg.counter(
+                "serve_degrade_events_total",
+                "degrade-loop plane transitions, by direction "
+                "(shed / restore)",
+                labels=("direction",))
+            self._set_plane_gauges()
         # paged telemetry: per decode step, pool blocks in use and live
         # cache rows (occupancy = used/n_blocks; fragmentation = wasted
         # tail rows of partially-filled blocks), and the blocks the
@@ -613,18 +833,39 @@ class ContinuousScheduler:
             V = cfg.vocab_size
             cache_dtype = self.pool.cache_dtype
 
-            def verify(p, cache, tok0, drafts, start, nval, table):
-                with packed_shard_mesh(engine._packed_mesh), \
-                     paged_shard_mesh(self._paged_mesh):
-                    vin = jnp.concatenate(
-                        [tok0] + [d[:, None] for d in drafts], axis=1)
-                    all_logits, cache = transformer.prefill_chunk(
-                        p, cache, vin, start, nval, cfg,
-                        cache_dtype=cache_dtype, block_table=table,
-                        return_all_logits=True)
-                    verified = jnp.argmax(
-                        all_logits[..., :V], axis=-1).astype(jnp.int32)
-                return cache, verified
+            if self._tiered:
+                # Tiered engines verify at the round's EFFECTIVE plane
+                # count (max across participating lanes after any degrade
+                # shed) — a runtime operand like the draft's, so tier
+                # levels never fork a second verify program.  The floors
+                # guarantee it stays strictly above draft_planes.
+                def verify(p, cache, tok0, drafts, start, nval, table,
+                           planes):
+                    with packed_shard_mesh(engine._packed_mesh), \
+                         paged_shard_mesh(self._paged_mesh):
+                        vin = jnp.concatenate(
+                            [tok0] + [d[:, None] for d in drafts], axis=1)
+                        with active_plane_count(planes):
+                            all_logits, cache = transformer.prefill_chunk(
+                                p, cache, vin, start, nval, cfg,
+                                cache_dtype=cache_dtype, block_table=table,
+                                return_all_logits=True)
+                        verified = jnp.argmax(
+                            all_logits[..., :V], axis=-1).astype(jnp.int32)
+                    return cache, verified
+            else:
+                def verify(p, cache, tok0, drafts, start, nval, table):
+                    with packed_shard_mesh(engine._packed_mesh), \
+                         paged_shard_mesh(self._paged_mesh):
+                        vin = jnp.concatenate(
+                            [tok0] + [d[:, None] for d in drafts], axis=1)
+                        all_logits, cache = transformer.prefill_chunk(
+                            p, cache, vin, start, nval, cfg,
+                            cache_dtype=cache_dtype, block_table=table,
+                            return_all_logits=True)
+                        verified = jnp.argmax(
+                            all_logits[..., :V], axis=-1).astype(jnp.int32)
+                    return cache, verified
 
             out_sh = None
             if engine.mesh is not None:
@@ -658,6 +899,134 @@ class ContinuousScheduler:
         return sum(int(fn._cache_size())
                    for fn in (self._spec_draft_jit, self._spec_verify_jit)
                    if fn is not None)
+
+    # -- precision tiers + degrade loop --------------------------------------
+    def _floor(self, precision: str) -> int:
+        """The plane count class ``precision`` may not be degraded below.
+        User floors default to 1; with spec_decode the floor is raised to
+        draft_planes + 1 so a degraded lane's verify always runs strictly
+        above the draft precision (the satellite clamp)."""
+        fl = max(1, self._floors.get(precision, 1))
+        if self.policy.spec_decode:
+            fl = max(fl, self.policy.draft_planes + 1)
+        return fl
+
+    def _effective(self, precision: str) -> int:
+        """Effective plane count for precision class ``precision`` under
+        the current shed level: ``max(floor, tier_planes - shed)``."""
+        k = self._tier_planes.get(precision, self._n_bits)
+        return max(min(self._floor(precision), k), k - self._shed)
+
+    def _effective_planes(self, s: SlotState) -> int:
+        """Effective plane count lane ``s`` decodes at this step."""
+        k = s.planes if s.planes is not None else self._n_bits
+        return max(min(self._floor(s.precision), k), k - self._shed)
+
+    def _set_plane_gauges(self) -> None:
+        for name in self._tier_planes:
+            self._g_active_planes.labels(tier=name).set(self._effective(name))
+
+    def _resolve_planes(self, precision, uid=None) -> Tuple[int, str]:
+        """Validate Request.precision and resolve it to (planes, class).
+
+        "full" -> n_bits; a tier-table key -> its entry; an int -> that
+        explicit plane count (class "explicit" for floor lookups).
+        Raises ValueError with the same up-front discipline as the tier
+        check in :meth:`stream`."""
+        who = f"request {uid}: " if uid is not None else ""
+        if precision in ("full", None):
+            return self._n_bits, "full"
+        if isinstance(precision, str):
+            k = self._tier_planes.get(precision)
+            if k is None:
+                raise ValueError(
+                    f"{who}unknown precision class {precision!r} — want "
+                    f"'full', one of {sorted(self._tier_planes)}, or an "
+                    "explicit plane count"
+                )
+            return k, precision
+        k = int(precision)
+        if not 1 <= k <= self._n_bits:
+            raise ValueError(
+                f"{who}precision={precision!r} — an explicit plane count "
+                f"must be in [1, n_bits={self._n_bits}]"
+            )
+        if self.policy.spec_decode and k <= self.policy.draft_planes:
+            raise ValueError(
+                f"{who}precision={k} planes <= draft_planes="
+                f"{self.policy.draft_planes} — the effective serving "
+                "precision must be strictly above the draft precision"
+            )
+        return k, "explicit"
+
+    def _record_transition(self, direction: str, now: int) -> None:
+        """One shed/restore transition: counter + per-tier gauges + a
+        trace span on every live lane carrying its NEW effective count."""
+        self._c_degrade.labels(direction=direction).inc()
+        if direction == "shed":
+            self.degrade_sheds += 1
+        else:
+            self.degrade_restores += 1
+        self._set_plane_gauges()
+        kind = (obs_trace.PLANES_SHED if direction == "shed"
+                else obs_trace.PLANES_RESTORED)
+        rec = self.obs.recorder
+        for s in self.pool.slots:
+            if s.uid is not None:
+                rec.event(s.uid, kind, shed=self._shed,
+                          planes=self._effective_planes(s))
+
+    def _degrade_tick(self, queue_len: int, now: int) -> None:
+        """One step of the load-triggered degrade loop (policy.degrade).
+
+        Pressure = queue backed up past ``degrade_queue_depth``, OR every
+        lane busy (``degrade_occupancy``) with work still queued, OR the
+        windowed preemption rate past ``degrade_preempt_rate``.  Each
+        pressured step sheds one plane (every tier, floor-clamped);
+        ``degrade_hysteresis`` consecutive calm steps restore one — the
+        asymmetry keeps the loop from flapping at the threshold.  The
+        ``force_shed`` hook replaces the triggers with an exact schedule
+        (still clamped) for deterministic conformance testing."""
+        pol = self.policy
+        self._preempt_window.append(self._preempt_step)
+        self._preempt_step = 0
+        if self.force_shed is not None:
+            target = min(max(int(self.force_shed(now)), 0), self._shed_ceiling)
+            while self._shed < target:
+                self._shed += 1
+                self._record_transition("shed", now)
+            while self._shed > target:
+                self._shed -= 1
+                self._record_transition("restore", now)
+            return
+        occ = self.pool.n_active / max(self.pool.n_slots, 1)
+        prate = sum(self._preempt_window) / max(len(self._preempt_window), 1)
+        pressure = (
+            queue_len >= pol.degrade_queue_depth
+            or (queue_len > 0 and occ >= pol.degrade_occupancy)
+            or prate > pol.degrade_preempt_rate
+        )
+        if pressure:
+            self._calm = 0
+            if self._shed < self._shed_ceiling:
+                self._shed += 1
+                self._record_transition("shed", now)
+            elif pol.spec_decode and not self._degrade_warned:
+                import warnings
+
+                warnings.warn(
+                    f"degrade loop clamped at shed={self._shed}: every tier "
+                    f"sits at its floor (>= draft_planes + 1 = "
+                    f"{pol.draft_planes + 1} under spec_decode) — shedding "
+                    "further would make the verify as imprecise as the draft",
+                    RuntimeWarning, stacklevel=2)
+                self._degrade_warned = True
+        else:
+            self._calm += 1
+            if self._shed > 0 and self._calm >= pol.degrade_hysteresis:
+                self._shed -= 1
+                self._calm = 0
+                self._record_transition("restore", now)
 
     # -- admission ---------------------------------------------------------
     def _first_chunk_blocks(self, plen: int) -> int:
@@ -811,10 +1180,13 @@ class ContinuousScheduler:
         for pend, slot in zip(batch, slots):
             req = pend.request
             self._admit_seq += 1
+            planes, prec = (self._resolve_planes(pend.precision, uid=req.uid)
+                            if self._tiered else (None, "full"))
             self.pool.admit(
                 slot, req.uid, pend.prompt_tokens(), pend.max_new,
                 req.temperature, now, wall, tier=pend.tier, prior=pend.prior,
-                admit_seq=self._admit_seq,
+                admit_seq=self._admit_seq, planes=planes, precision=prec,
+                prior_planes=pend.prior_planes,
             )
             if self.policy.spec_decode:
                 # Fresh lanes (and preempted resumes) start at the full
@@ -824,6 +1196,8 @@ class ContinuousScheduler:
             attrs = {"slot": slot}
             if self.policy.paged:
                 attrs["blocks"] = self.pool.slots[slot].committed
+            if self._tiered:
+                attrs["planes"] = planes
             tr = rec.get(req.uid)
             tr.event(obs_trace.ADMITTED, ts=wall, **attrs)
             if pend.prior is not None:
@@ -876,6 +1250,8 @@ class ContinuousScheduler:
         s = pool.slots[slot]
         pend = self._lane_pend.pop(slot)
         gen = list(s.prior or []) + list(s.tokens or [])
+        gen_planes = (list(s.prior_planes or []) + list(s.plane_log or [])
+                      if self._tiered else None)
         rows_lost = (s.filled if s.phase == "prefill"
                      else len(s.prompt) + len(s.tokens) - 1)
         self.obs.recorder.event(
@@ -884,9 +1260,11 @@ class ContinuousScheduler:
         )
         self._c_preempt.labels(tier=s.tier).inc()
         self._c_preempt_rows.inc(rows_lost)
+        self._preempt_step += 1
         pool.evict(slot)
         queue.append(_Pending(pend.request, pend.arrival, enqueued_at=now,
-                              seq=pend.seq, prior=gen))
+                              seq=pend.seq, prior=gen,
+                              prior_planes=gen_planes))
 
     def _ensure_headroom(self, demand: Dict[int, int],
                          queue: Deque[_Pending], now: int) -> Dict[int, int]:
@@ -1010,6 +1388,10 @@ class ContinuousScheduler:
                 else:
                     ttft_ms = tr.ttft_ms()
                 pool.start_decode(i, int(sampled_host[i]), ttft_ms)
+                if self._tiered:
+                    # The first token comes off the full-precision
+                    # prefill chunk, whatever the lane's tier.
+                    s.plane_log = [self._n_bits]
 
     # -- speculative decoding ----------------------------------------------
     def _spec_round(self, queue: Deque[_Pending], now: int) -> None:
@@ -1091,12 +1473,20 @@ class ContinuousScheduler:
         width = self.policy.gamma - 1
         vdrafts = tuple(drafts[: gamma_r - 1]) + \
             (drafts[-1],) * (width - (gamma_r - 1))
-        pool.cache, verified = verify_fn(
-            params, cache, tok0, vdrafts,
-            self._place_ctrl("start", start),
-            self._place_ctrl("nvalid", nval),
-            table,
-        )
+        vargs = (params, cache, tok0, vdrafts,
+                 self._place_ctrl("start", start),
+                 self._place_ctrl("nvalid", nval),
+                 table)
+        vplanes = None
+        if self._tiered:
+            # Verify at the round's effective plane count: max across
+            # the participating lanes' tiers after the degrade shed.
+            # Committed tokens are verify outputs, so this is the count
+            # their plane_log records.
+            vplanes = max(self._effective_planes(pool.slots[i])
+                          for i in lanes)
+            vargs = vargs + (jnp.int32(vplanes),)
+        pool.cache, verified = verify_fn(*vargs)
         # drafts_h[j][i] = d_{j+1} for lane i; ver_h[i, j] = v_j (columns
         # past gam[i] are padding and never read).
         drafts_h, ver_h = jax.device_get((drafts, verified))
@@ -1129,9 +1519,15 @@ class ContinuousScheduler:
                 tok_fix.append(i)
                 tok_vals.append(committed[-1])
                 pos_vals.append(len(s.prompt) + len(s.tokens) - 1)
+            if self._tiered:
+                s.plane_log.extend([vplanes] * len(committed))
             rec.event(s.uid, obs_trace.DRAFT, steps=g_i)
-            rec.event(s.uid, obs_trace.VERIFY, accepted=a,
-                      committed=len(committed))
+            if self._tiered:
+                rec.event(s.uid, obs_trace.VERIFY, accepted=a,
+                          committed=len(committed), planes=vplanes)
+            else:
+                rec.event(s.uid, obs_trace.VERIFY, accepted=a,
+                          committed=len(committed))
             if a < g_i:
                 rec.event(s.uid, obs_trace.ROLLBACK, rejected=g_i - a,
                           freed_blocks=freed)
@@ -1197,6 +1593,17 @@ class ContinuousScheduler:
                 raise ValueError(
                     f"request {r.uid}: unknown SLO tier {tier!r} — want "
                     "'latency' or 'throughput'"
+                )
+            prec = getattr(r, "precision", "full")
+            if self._tiered:
+                self._resolve_planes(prec, uid=r.uid)  # raises on bad
+            elif prec not in ("full", None):
+                raise ValueError(
+                    f"request {r.uid}: precision={prec!r} but this engine "
+                    "has no precision tiers — configure "
+                    "SchedulerPolicy(precision_tiers=...) (or "
+                    "ServeEngine(precision_tiers=...)) to serve reduced "
+                    "plane counts"
                 )
             if len(r.tokens) < 1:
                 raise ValueError(
@@ -1264,6 +1671,11 @@ class ContinuousScheduler:
                     queue.append(pend)
                 self._g_queue.set(len(queue))
                 self._admit(queue, now)
+                if self._tiered and self.policy.degrade:
+                    # Load-triggered plane shedding: measured AFTER the
+                    # admission pass, so "queue backed up" means work
+                    # that genuinely could not be placed this step.
+                    self._degrade_tick(len(queue), now)
                 # Evict lanes whose request finished at admission
                 # (legacy max_new == 1).
                 for ev in self._finished():
@@ -1308,24 +1720,70 @@ class ContinuousScheduler:
                         ))
                 if not self.policy.spec_decode and pool.n_decoding:
                     t0 = time.perf_counter()
-                    logits, pool.cache = self._decode(
-                        self.engine.params, pool.cache, pool.tok, pool.pos, pool.act,
-                        pool.block_table,
-                    )
-                    sampled = self.engine._sample(logits, pool.temps, pool.any_hot)
-                    sampled_host = np.asarray(sampled)  # one host sync per step (streaming)
+                    active = pool.decode_mask  # lanes live during this decode step
+                    if self._tiered:
+                        # Group the step's decode lanes by effective plane
+                        # count and run one pooled dispatch per distinct
+                        # count (grouping off: one dispatch at the max
+                        # count serves every lane).  Still ONE compiled
+                        # program — the count is a traced operand and the
+                        # group's act mask is data.  Each group's sampled
+                        # tokens merge into tok/pos under its own mask, so
+                        # a later group's dispatch cannot clobber an
+                        # earlier group's pending token.
+                        eff = {i: self._effective_planes(pool.slots[i])
+                               for i in range(pool.n_slots) if active[i]}
+                        if self.policy.plane_grouping:
+                            groups: Dict[int, List[int]] = {}
+                            for i, k in eff.items():
+                                groups.setdefault(k, []).append(i)
+                        else:
+                            groups = {max(eff.values()): sorted(eff)}
+                        sampled_host = np.zeros((pool.n_slots,), np.int32)
+                        lane_planes: Dict[int, int] = {}
+                        # Descending plane order: deterministic, and the
+                        # costliest group goes first.
+                        for k in sorted(groups, reverse=True):
+                            gmask = np.zeros((pool.n_slots,), np.bool_)
+                            gmask[groups[k]] = True
+                            act_g = pool._pin("act", jnp.asarray(gmask))
+                            logits, pool.cache = self._decode(
+                                self.engine.params, pool.cache, pool.tok,
+                                pool.pos, act_g, pool.block_table,
+                                jnp.int32(k),
+                            )
+                            sampled = self.engine._sample(
+                                logits, pool.temps, pool.any_hot)
+                            pool.tok = pool._pin("tok", jnp.where(
+                                jnp.asarray(gmask)[:, None],
+                                sampled[:, None], pool.tok))
+                            g_host = np.asarray(sampled)
+                            sampled_host[gmask] = g_host[gmask]
+                            for i in groups[k]:
+                                lane_planes[i] = k
+                    else:
+                        logits, pool.cache = self._decode(
+                            self.engine.params, pool.cache, pool.tok, pool.pos, pool.act,
+                            pool.block_table,
+                        )
+                        sampled = self.engine._sample(logits, pool.temps, pool.any_hot)
+                        sampled_host = np.asarray(sampled)  # one host sync per step (streaming)
+                        pool.tok = pool._pin("tok", sampled[:, None])
                     step_ms = (time.perf_counter() - t0) * 1e3
                     self.decode_ms_total += step_ms
                     self._h_step.observe(step_ms)
                     self.decode_steps += 1
                     self._c_steps.inc()
-                    active = pool.decode_mask  # lanes live during this decode step
-                    pool.tok = pool._pin("tok", sampled[:, None])
                     pool.advance(sampled_host, active)
                     self._h_occ.observe(int(active.sum()))
                     for i, s in enumerate(pool.slots):
                         if active[i] and s.uid is not None:
-                            rec.event(s.uid, obs_trace.DECODE_STEP)
+                            if self._tiered:
+                                s.plane_log.append(lane_planes[i])
+                                rec.event(s.uid, obs_trace.DECODE_STEP,
+                                          planes=lane_planes[i])
+                            else:
+                                rec.event(s.uid, obs_trace.DECODE_STEP)
                     if self.policy.paged:
                         used = pool.allocator.used_count
                         live = pool.live_rows()
@@ -1385,6 +1843,11 @@ class ContinuousScheduler:
                 # A preempted-and-resumed lane's Result stitches the
                 # tokens of its earlier life back in front.
                 full = list(done.prior or []) + list(done.tokens)
+                plane_log = None
+                if self._tiered:
+                    plane_log = np.asarray(
+                        list(done.prior_planes or []) +
+                        list(done.plane_log or []), np.int32)
                 rec.finish(done.uid, obs_trace.FINISHED,
                            n_tokens=len(full))
                 self._c_req.labels(outcome="finished").inc()
@@ -1393,6 +1856,7 @@ class ContinuousScheduler:
                     tokens=np.asarray(full, np.int32),
                     prefill_ms=done.prefill_ms,
                     decode_ms_per_tok=per_tok,
+                    plane_log=plane_log,
                 )
 
     def run(
@@ -1415,6 +1879,17 @@ class ContinuousScheduler:
         self.spec_drafted = 0
         self.spec_accepted = 0
         self.spec_committed = 0
+        # Degrade-loop control state resets with the telemetry so bench
+        # sweeps start every rate from full precision.
+        self._shed = 0
+        self._calm = 0
+        self._preempt_step = 0
+        self._preempt_window.clear()
+        self._degrade_warned = False
+        self.degrade_sheds = 0
+        self.degrade_restores = 0
+        if self._tiered:
+            self._set_plane_gauges()
 
     def mean_occupancy(self) -> float:
         """Mean fraction of lanes live per decode step (bench metric)."""
@@ -1433,6 +1908,17 @@ class ContinuousScheduler:
     def preemptions_total(self) -> int:
         """Lanes preempted (all tiers) since the last telemetry reset."""
         return int(sum(c.value for _, c in self._c_preempt.children()))
+
+    def degrade_events_total(self) -> int:
+        """Shed + restore transitions since the last telemetry reset."""
+        return self.degrade_sheds + self.degrade_restores
+
+    def active_planes(self, precision: str = "full") -> int:
+        """Current effective plane count for a precision class (tiered
+        engines; untiered engines report the packed width or 0)."""
+        if not self._tiered:
+            return self._n_bits or 0
+        return self._effective(precision)
 
     def spec_accept_rate(self) -> float:
         """Fraction of drafted tokens the full-precision verify accepted

@@ -337,6 +337,18 @@ class SlotState:
     # 0 on non-spec lanes.  Reset at (re-)admission, so a preempted lane
     # restarts from the policy default.
     spec_gamma: int = 0
+    # precision-tier bookkeeping (tiered engines only; None/defaults on
+    # untiered lanes).  ``planes`` is the request's resolved active
+    # bit-plane count (its tier's table entry) BEFORE any degrade shed;
+    # ``precision`` the class name it resolved from (floor lookups).
+    # ``plane_log`` parallels ``tokens``: the plane count each emitted
+    # token was computed at (prefill emits at full precision, decode at
+    # the step's effective count) — the token-identity oracle replays
+    # it.  ``prior_planes`` parallels ``prior`` across preemptions.
+    planes: Optional[int] = None
+    precision: str = "full"
+    plane_log: Optional[List[int]] = None
+    prior_planes: Optional[List[int]] = None
 
 
 class SlotPool:
@@ -486,7 +498,9 @@ class SlotPool:
     def admit(self, slot: int, uid: int, prompt: np.ndarray, max_new: int,
               temperature: float, now: int, wall: float,
               tier: str = "throughput", prior: Optional[List[int]] = None,
-              admit_seq: int = 0):
+              admit_seq: int = 0, planes: Optional[int] = None,
+              precision: str = "full",
+              prior_planes: Optional[List[int]] = None):
         """Claim lane ``slot`` for chunked prefill: the prompt is staged
         host-side and streams through ``prefill_chunk`` dispatches; the
         lane joins the decode phase via :meth:`start_decode` once its
@@ -511,7 +525,8 @@ class SlotPool:
             prompt=np.asarray(prompt, np.int32), filled=0, admit_wall=wall,
             blocks=[] if self.paged else None,
             tier=tier, prior=list(prior) if prior else None,
-            admit_seq=admit_seq,
+            admit_seq=admit_seq, planes=planes, precision=precision,
+            prior_planes=list(prior_planes) if prior_planes else None,
         )
         if self.paged:
             s = self.slots[slot]

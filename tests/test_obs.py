@@ -460,3 +460,95 @@ def test_truncate_packed_view_semantics(packed_granite):
                                   np.asarray(unpack_to_float(zeroed)))
     with pytest.raises(ValueError, match="k >= 1"):
         truncate_packed(pw, 0)
+
+
+# ---------------------------------------------------------------------------
+# label-capacity management (the quality-probe cardinality fix)
+# ---------------------------------------------------------------------------
+
+def test_family_ensure_capacity_grows_never_shrinks():
+    reg = Registry()
+    fam = reg.counter("fan_out_total", labels=("uid",))
+    fam.ensure_capacity(obs_metrics.DEFAULT_LABEL_CARDINALITY + 10)
+    assert fam.max_children == obs_metrics.DEFAULT_LABEL_CARDINALITY + 10
+    for i in range(obs_metrics.DEFAULT_LABEL_CARDINALITY + 10):
+        fam.labels(uid=str(i)).inc()
+    with pytest.raises(ValueError, match="cardinality cap"):
+        fam.labels(uid="overflow")
+    # capacity only ratchets up — "shrinking" below live children would
+    # orphan them
+    fam.ensure_capacity(1)
+    assert fam.max_children == obs_metrics.DEFAULT_LABEL_CARDINALITY + 10
+    fam.labels(uid="0").inc()
+
+
+def test_registry_max_children_kwarg():
+    reg = Registry()
+    fam = reg.gauge("planes_g", labels=("k",), max_children=3)
+    assert fam.max_children == 3
+    # re-registration never silently narrows an existing family
+    again = reg.gauge("planes_g", labels=("k",), max_children=2)
+    assert again is fam and fam.max_children == 3
+    with pytest.raises(ValueError, match="max_children"):
+        reg.counter("plain_total", max_children=5)   # unlabeled: no children
+
+
+def test_quality_probe_wide_sweep_exceeds_default_cap(granite):
+    """The regression: a wide probe (many plane counts x every layer
+    group) enumerates more label combinations than
+    DEFAULT_LABEL_CARDINALITY — it must size its families to the
+    enumerable label space up front instead of tripping the cap
+    mid-serve.  Counts past n_bits are identity views, so the label
+    space widens without packing a wider model."""
+    cfg, params = granite
+    packed = pack_model_params(params, 4)
+    toks = np.zeros((1, 4), np.int32)
+    reg = Registry()
+    groups = ("all", "attn", "mlp", "head")
+    counts = list(range(1, 18))  # 17 x 4 = 68 children > the default 64
+    assert len(counts) * len(groups) > obs_metrics.DEFAULT_LABEL_CARDINALITY
+    rows = quality_probe(packed, cfg, toks, plane_counts=counts,
+                         groups=groups, registry=reg)
+    assert len(rows) == len(counts) * len(groups)
+    fam = reg.gauge("serve_quality_top1", labels=("planes", "group"))
+    assert len(list(fam.children())) == len(counts) * len(groups)
+    assert fam.max_children >= len(counts) * len(groups)
+    # an earlier, narrower registration of the same family must be GROWN
+    # (ensure_capacity), not tripped by the probe's new children
+    reg2 = Registry()
+    reg2.gauge("serve_quality_top1", labels=("planes", "group"),
+               max_children=2)
+    reg2.gauge("serve_quality_logit_mse", labels=("planes", "group"),
+               max_children=2)
+    quality_probe(packed, cfg, toks, plane_counts=[1, 2, 3], registry=reg2)
+
+
+def test_precision_tiers_from_probe(granite):
+    from repro.obs.quality import QualityRow, precision_tiers_from_probe
+
+    rows = [QualityRow(planes=k, group="all", logit_mse=0.0,
+                       top1_agreement=a)
+            for k, a in [(1, 0.61), (2, 0.83), (3, 0.96), (4, 1.0)]]
+    # smallest plane count clearing each class's agreement bar
+    tiers = precision_tiers_from_probe(
+        rows, {"economy": 0.95, "draft": 0.60})
+    assert tiers == {"economy": 3, "draft": 1}
+    # nothing clears the bar: fall back to the largest probed count
+    low = [dataclasses.replace(r, top1_agreement=min(r.top1_agreement, 0.9))
+           for r in rows]
+    assert precision_tiers_from_probe(low, {"x": 0.95})["x"] == 4
+    with pytest.raises(ValueError, match="not in \\[0, 1\\]"):
+        precision_tiers_from_probe(rows, {"x": 1.5})
+    with pytest.raises(ValueError, match="'all'-group rows"):
+        precision_tiers_from_probe(
+            [dataclasses.replace(rows[0], group="attn")], {"x": 0.5})
+    # end-to-end: probe a real packed model, derive tiers, and the result
+    # is directly consumable by SchedulerPolicy
+    cfg, params = granite
+    packed = pack_model_params(params, 4)
+    toks = np.zeros((1, 4), np.int32)
+    probe_rows = quality_probe(packed, cfg, toks, plane_counts=[2, 4])
+    tiers = precision_tiers_from_probe(probe_rows, {"economy": 0.0})
+    assert tiers["economy"] == 2
+    SchedulerPolicy(n_slots=2, chunked_prefill=True, chunk_sizes=(8, 1),
+                    precision_tiers=tiers)

@@ -947,3 +947,99 @@ def test_block_allocator_randomized_interleavings():
             with pytest.raises(ValueError, match="double free"):
                 a.free([live[0]])
             live.pop(0)
+
+
+# ---------------------------------------------------------------------------
+# Precision-tier degrade conformance (serve-time plane shedding)
+# ---------------------------------------------------------------------------
+
+DEGRADE_ECONOMY_PLANES = 4
+
+
+@pytest.fixture(scope="module")
+def degrade_paged(packed_granite):
+    """Tiered paged engine with the degrade loop armed: the conformance
+    harness drives plane switches on exact per-seed schedules via the
+    ``force_shed`` hook, so every lane decodes through mid-stream
+    precision transitions — same pool geometry as `packed_paged`."""
+    cfg, params = packed_granite
+    return ServeEngine(params, cfg, max_len=MAX_LEN, continuous=True,
+                       policy=SchedulerPolicy(n_slots=N_SLOTS, chunked_prefill=True,
+                                              chunk_sizes=(8, 1), paged=True,
+                                              block_size=BLOCK_SIZE,
+                                              n_blocks=N_BLOCKS,
+                                              precision_tiers={
+                                                  "economy": DEGRADE_ECONOMY_PLANES},
+                                              degrade=True))
+
+
+@pytest.mark.conformance
+@pytest.mark.parametrize("seed", range(N_SEEDS))
+def test_randomized_degrade_conformance(seed, packed_granite, degrade_paged):
+    """One seeded schedule with mixed precision classes and a forced
+    deterministic shed/restore schedule: every emitted token must equal
+    the STATIC-truncation replay of that lane's ``plane_log``
+    (obs.quality.replay_plane_log — a different param tree and compiled
+    program per plane count, KV carried across every switch), the block
+    pool must drain back to full, and span accounting must balance.
+    This is the token-consistency acceptance for mid-stream plane
+    switching: runtime plane dispatch == static truncation, per token."""
+    from repro.obs.quality import replay_plane_log
+
+    cfg, params = packed_granite
+    rng = np.random.default_rng(seed)
+    reqs, arrivals = _random_schedule(rng, cfg)
+    reqs = [dataclasses.replace(
+                r, precision="economy" if rng.integers(2) else "full")
+            for r in reqs]
+    sched = degrade_paged.scheduler
+    # deterministic per-seed sawtooth: hold each shed level for `period`
+    # steps, cycling 0..amp-1 — both shed and restore transitions fire
+    period = int(rng.integers(2, 5))
+    amp = int(rng.integers(2, 5))
+    sched.force_shed = lambda step: (step // period) % amp
+    try:
+        out = degrade_paged.generate(reqs, arrival_steps=arrivals)
+    finally:
+        sched.force_shed = None
+    assert len(out) == len(reqs)
+    prompts = {r.uid: r.tokens for r in reqs}
+    for r in out:
+        assert r.plane_log is not None and len(r.plane_log) == len(r.tokens), r.uid
+        assert r.plane_log[0] == SPEC_BITS, "prefill must run at full precision"
+        replay = replay_plane_log(params, cfg, prompts[r.uid], r.plane_log,
+                                  MAX_LEN)
+        np.testing.assert_array_equal(replay, r.tokens)
+    _assert_zero_leaks(degrade_paged)
+    _assert_span_accounting(degrade_paged)
+
+    if seed % 5 == 0:
+        # mid-stream abandon while planes are shed: teardown must retire
+        # every span and return every block, and the degrade state must
+        # not pin the NEXT schedule's lanes at a stale shed level
+        sched.force_shed = lambda step: 2
+        try:
+            it = degrade_paged.stream(reqs, arrival_steps=arrivals)
+            for _ in range(len(reqs) // 2):
+                next(it)
+            it.close()
+        finally:
+            sched.force_shed = None
+        _assert_zero_leaks(degrade_paged)
+        _assert_span_accounting(degrade_paged)
+
+
+@pytest.mark.conformance
+def test_degrade_torture_actually_switched(degrade_paged):
+    """Meta-check on the module-scoped degrade engine: across the seeded
+    schedules the forced schedules really did shed AND restore planes
+    (sawtooths with amp 1 never switch), and the runtime plane dispatch
+    never forked the single pooled decode program."""
+    sched = degrade_paged.scheduler
+    kinds = {e.kind for tr in degrade_paged.obs.recorder.traces()
+             for e in tr.events}
+    assert obs_trace.PLANES_SHED in kinds, "no shed transition ever fired"
+    assert obs_trace.PLANES_RESTORED in kinds, "no restore ever fired"
+    # plane counts and degrade transitions are runtime operands, never a
+    # recompile: ONE pooled decode program, total
+    assert sched.compiled_decode_programs() == 1

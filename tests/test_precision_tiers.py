@@ -1,0 +1,486 @@
+"""Serve-time precision tiers + load-triggered plane shedding.
+
+The contract: a tiered continuous engine maps each request's
+``precision`` class to an active bit-plane count (resolved against the
+policy's tier table), decodes every lane through the SAME compiled
+program with the count as a runtime operand, and — with
+``degrade=True`` — sheds planes under load instead of shedding
+requests, floor-clamped per class and restored with hysteresis.  Every
+emitted token's plane count lands in ``Result.plane_log``, and because
+the runtime dispatch is bitwise-equal to static truncation, replaying
+that log through statically-truncated param trees
+(``obs.quality.replay_plane_log``) must reproduce the served tokens
+exactly — the token-consistency oracle for mid-stream switches.
+
+Also here: the plane-context lifecycle regression tests — the
+``active_plane_count`` / ``packed_shard_mesh`` / ``paged_shard_mesh``
+ContextVars must restore their defaults when the traced computation
+raises, or a failed trace would silently serve the wrong precision (or
+mesh) to the next trace on the same thread.
+"""
+import dataclasses
+import warnings
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import reduced_config
+from repro.core.packing import pack_model_params
+from repro.models import init_params
+from repro.models import common as model_common
+from repro.obs import trace as obs_trace
+from repro.obs.quality import replay_plane_log
+from repro.serve import Request, SchedulerPolicy, ServeEngine
+
+N_BITS = 6
+MAX_LEN = 48
+N_SLOTS = 3
+BLOCK_SIZE = 4
+
+
+@pytest.fixture(scope="module")
+def packed_granite():
+    cfg = reduced_config("granite-3-2b")
+    return cfg, pack_model_params(init_params(jax.random.PRNGKey(0), cfg),
+                                  N_BITS)
+
+
+def _pol(**kw):
+    base = dict(n_slots=N_SLOTS, chunked_prefill=True, chunk_sizes=(8, 1),
+                paged=True, block_size=BLOCK_SIZE, n_blocks=14)
+    base.update(kw)
+    return SchedulerPolicy(**base)
+
+
+def _reqs(cfg, n=4, max_new=6, precision="full", seed=0):
+    rng = np.random.default_rng(seed)
+    return [
+        Request(uid=i,
+                tokens=rng.integers(0, cfg.vocab_size,
+                                    size=int(rng.integers(3, 11))).astype(np.int32),
+                max_new=max_new, precision=precision)
+        for i in range(n)
+    ]
+
+
+def _check_replay(engine, cfg, params, reqs, results):
+    """Every result's tokens must equal the static-truncation replay of
+    its plane log, and the log must parallel the tokens."""
+    prompts = {r.uid: r.tokens for r in reqs}
+    for r in results:
+        assert r.plane_log is not None and len(r.plane_log) == len(r.tokens), r.uid
+        replay = replay_plane_log(params, cfg, prompts[r.uid], r.plane_log,
+                                  MAX_LEN)
+        np.testing.assert_array_equal(replay, r.tokens), r.uid
+
+
+def _drained(engine):
+    pool = engine.scheduler.pool
+    assert pool.allocator.free_count == pool.n_blocks
+    assert pool.allocator.committed == 0
+    assert pool.n_active == 0
+    assert engine.obs.recorder.leaked == []
+
+
+# ---------------------------------------------------------------------------
+# policy / request validation
+# ---------------------------------------------------------------------------
+
+def test_precision_policy_validation():
+    with pytest.raises(ValueError, match="chunked_prefill"):
+        SchedulerPolicy(n_slots=2, precision_tiers={"economy": 3})
+    with pytest.raises(ValueError, match="chunked_prefill"):
+        SchedulerPolicy(n_slots=2, degrade=True)
+    with pytest.raises(ValueError, match="remap"):
+        _pol(precision_tiers={"full": 6})
+    with pytest.raises(ValueError, match="int >= 1"):
+        _pol(precision_tiers={"economy": 0})
+    with pytest.raises(ValueError, match="int >= 1"):
+        _pol(precision_tiers={"economy": 2.5})
+    with pytest.raises(ValueError, match="silently inert"):
+        _pol(precision_floors={"economy": 2})
+    with pytest.raises(ValueError, match=">= 1"):
+        _pol(degrade=True, precision_floors={"economy": 0})
+    with pytest.raises(ValueError, match="degrade_queue_depth"):
+        _pol(degrade=True, degrade_queue_depth=0)
+    with pytest.raises(ValueError, match="degrade_occupancy"):
+        _pol(degrade=True, degrade_occupancy=1.5)
+    with pytest.raises(ValueError, match="degrade_hysteresis"):
+        _pol(degrade=True, degrade_hysteresis=0)
+    with pytest.raises(ValueError, match="degrade_window"):
+        _pol(degrade=True, degrade_window=0)
+
+
+def test_spec_decode_tier_validation():
+    """The satellite fix: a tier at or below the draft precision makes
+    the verify dispatch carry zero information — rejected up front, at
+    the policy, not discovered as a burned dispatch at serve time."""
+    with pytest.raises(ValueError, match="draft"):
+        _pol(spec_decode=True, draft_planes=3,
+             precision_tiers={"economy": 3})
+    with pytest.raises(ValueError, match="draft"):
+        _pol(spec_decode=True, draft_planes=3,
+             precision_tiers={"economy": 2})
+    # strictly above the draft is fine
+    _pol(spec_decode=True, draft_planes=3, precision_tiers={"economy": 4})
+
+
+def test_engine_level_tier_validation(packed_granite):
+    cfg, packed = packed_granite
+    float_params = init_params(jax.random.PRNGKey(0), cfg)
+    with pytest.raises(ValueError, match="bit planes"):
+        ServeEngine(float_params, cfg, max_len=MAX_LEN, continuous=True,
+                    policy=_pol(precision_tiers={"economy": 3}))
+    with pytest.raises(ValueError, match="n_bits"):
+        ServeEngine(packed, cfg, max_len=MAX_LEN, continuous=True,
+                    policy=_pol(precision_tiers={"economy": N_BITS + 1}))
+    # spec drafts must leave room for at least one strictly-higher tier
+    with pytest.raises(ValueError, match="draft"):
+        ServeEngine(packed, cfg, max_len=MAX_LEN, continuous=True,
+                    policy=_pol(spec_decode=True, draft_planes=N_BITS,
+                                degrade=True))
+
+
+def test_request_precision_validation(packed_granite):
+    cfg, packed = packed_granite
+    eng = ServeEngine(packed, cfg, max_len=MAX_LEN, continuous=True,
+                      policy=_pol(precision_tiers={"economy": 3}))
+
+    def one(precision):
+        return [Request(uid=0, tokens=np.arange(4, dtype=np.int32),
+                        max_new=2, precision=precision)]
+
+    with pytest.raises(ValueError, match="unknown precision class"):
+        eng.generate(one("gold"))
+    with pytest.raises(ValueError, match="must be in"):
+        eng.generate(one(0))
+    with pytest.raises(ValueError, match="must be in"):
+        eng.generate(one(N_BITS + 1))
+    # an untiered engine rejects any non-full precision up front
+    plain = ServeEngine(packed, cfg, max_len=MAX_LEN, continuous=True,
+                        policy=_pol())
+    with pytest.raises(ValueError, match="no precision tiers"):
+        plain.generate(one("economy"))
+    # explicit plane counts below the draft precision are rejected too
+    spec = ServeEngine(packed, cfg, max_len=MAX_LEN, continuous=True,
+                       policy=_pol(spec_decode=True, draft_planes=2,
+                                   precision_tiers={"economy": 4}))
+    with pytest.raises(ValueError, match="draft"):
+        spec.generate(one(2))
+
+
+# ---------------------------------------------------------------------------
+# token consistency: runtime plane dispatch == static truncation
+# ---------------------------------------------------------------------------
+
+def test_fixed_tiers_token_consistent_with_static_truncation(packed_granite):
+    """Steady tiers (no degrade): full-precision lanes match the packed
+    oracle exactly; economy lanes log full-precision prefill + tier-count
+    decode and match the static-truncation replay token-for-token."""
+    cfg, packed = packed_granite
+    reqs = [dataclasses.replace(r, precision="economy" if i % 2 else "full")
+            for i, r in enumerate(_reqs(cfg, n=4, seed=1))]
+    ref = {r.uid: r.tokens
+           for r in ServeEngine(packed, cfg, max_len=MAX_LEN).generate(
+               [dataclasses.replace(r, precision="full") for r in reqs])}
+    eng = ServeEngine(packed, cfg, max_len=MAX_LEN, continuous=True,
+                      policy=_pol(precision_tiers={"economy": 3}))
+    out = eng.generate(reqs, arrival_steps=[0, 0, 1, 2])
+    assert len(out) == len(reqs)
+    for r in out:
+        uid_prec = "economy" if r.uid % 2 else "full"
+        if uid_prec == "full":
+            # full lanes ride the same pooled dispatch but at n_bits:
+            # identical to the untiered packed oracle
+            np.testing.assert_array_equal(ref[r.uid], r.tokens)
+            assert (r.plane_log == N_BITS).all(), r.plane_log
+        else:
+            assert r.plane_log[0] == N_BITS  # prefill at full precision
+            assert (r.plane_log[1:] == 3).all(), r.plane_log
+    _check_replay(eng, cfg, packed, reqs, out)
+    _drained(eng)
+    # tier levels never fork a compile: one decode program serves both
+    assert eng.scheduler.compiled_decode_programs() == 1
+
+
+def test_forced_degrade_schedule_token_consistent(packed_granite):
+    """The acceptance criterion: degrade forced on a deterministic
+    schedule (the ``force_shed`` hook) switches plane counts mid-stream;
+    every token must equal the static-truncation replay at that token's
+    logged count, with KV state carried across every switch and the
+    allocator/spans drained."""
+    cfg, packed = packed_granite
+    reqs = [dataclasses.replace(r, precision="economy" if i == 3 else "full")
+            for i, r in enumerate(_reqs(cfg, n=4, max_new=8, seed=2))]
+    eng = ServeEngine(packed, cfg, max_len=MAX_LEN, continuous=True,
+                      policy=_pol(precision_tiers={"economy": 4},
+                                  degrade=True))
+    sched = eng.scheduler
+    # shed 0,1,2,3 planes cycling every two steps: lanes see 6/5/4/3
+    # (economy: 4/3/2/1) and both shed and restore transitions fire
+    sched.force_shed = lambda step: (step // 2) % 4
+    out = eng.generate(reqs, arrival_steps=[0, 0, 1, 2])
+    assert len(out) == len(reqs)
+    logged = np.concatenate([r.plane_log for r in out])
+    assert len(set(logged.tolist())) > 2, "schedule never switched planes"
+    _check_replay(eng, cfg, packed, reqs, out)
+    _drained(eng)
+    assert sched.degrade_sheds > 0 and sched.degrade_restores > 0
+    # every live lane got a span per transition, carrying its new count
+    kinds = [e.kind for tr in eng.obs.recorder.traces() for e in tr.events]
+    assert obs_trace.PLANES_SHED in kinds
+    assert obs_trace.PLANES_RESTORED in kinds
+    for tr in eng.obs.recorder.traces():
+        for e in tr.events:
+            if e.kind in (obs_trace.PLANES_SHED, obs_trace.PLANES_RESTORED):
+                assert e.attrs["planes"] >= 1
+                assert e.attrs["shed"] >= 0
+
+
+def test_degrade_recurrent_arch_state_valid_across_switches():
+    """Recurrent (rglru) and sliding-window state rides the same pooled
+    program; a plane switch must not corrupt it — the replay carries the
+    recurrent cache across switches and must still match exactly."""
+    cfg = reduced_config("recurrentgemma-9b")
+    packed = pack_model_params(init_params(jax.random.PRNGKey(1), cfg), 4)
+    rng = np.random.default_rng(3)
+    reqs = [Request(uid=i,
+                    tokens=rng.integers(0, cfg.vocab_size, size=4 + 2 * i).astype(np.int32),
+                    max_new=6)
+            for i in range(3)]
+    eng = ServeEngine(packed, cfg, max_len=MAX_LEN, continuous=True,
+                      policy=SchedulerPolicy(n_slots=2, chunked_prefill=True,
+                                             chunk_sizes=(8, 1),
+                                             degrade=True))
+    eng.scheduler.force_shed = lambda step: step % 3
+    out = eng.generate(reqs, arrival_steps=[0, 1, 2])
+    assert len(out) == len(reqs)
+    prompts = {r.uid: r.tokens for r in reqs}
+    for r in out:
+        assert len(set(r.plane_log.tolist())) > 1, r.plane_log
+        replay = replay_plane_log(packed, cfg, prompts[r.uid], r.plane_log,
+                                  MAX_LEN)
+        np.testing.assert_array_equal(replay, r.tokens)
+    assert eng.obs.recorder.leaked == []
+
+
+def test_plane_grouping_off_serves_at_max(packed_granite):
+    """``plane_grouping=False``: one dispatch at the max effective count
+    across live lanes serves every lane — economy lanes pooled with a
+    full lane are logged (and computed) at full precision, and the log
+    still replays exactly."""
+    cfg, packed = packed_granite
+    reqs = [dataclasses.replace(r, precision="economy" if i else "full")
+            for i, r in enumerate(_reqs(cfg, n=2, max_new=6, seed=4))]
+    eng = ServeEngine(packed, cfg, max_len=MAX_LEN, continuous=True,
+                      policy=_pol(precision_tiers={"economy": 3},
+                                  plane_grouping=False))
+    out = {r.uid: r for r in eng.generate(reqs, arrival_steps=[0, 0])}
+    # both lanes decode together for at least the shorter lane's life:
+    # the economy lane's early tokens are logged at the pooled max (6)
+    assert out[1].plane_log[0] == N_BITS
+    assert N_BITS in out[1].plane_log[1:].tolist()
+    _check_replay(eng, cfg, packed, reqs, list(out.values()))
+    _drained(eng)
+
+
+# ---------------------------------------------------------------------------
+# the load-triggered degrade loop
+# ---------------------------------------------------------------------------
+
+def test_degrade_loop_sheds_under_pressure_and_restores(packed_granite):
+    """Queue pressure on a lane-starved engine sheds planes (events +
+    gauges + counters) and hysteresis restores them as the queue drains;
+    tokens still replay exactly at the logged counts."""
+    cfg, packed = packed_granite
+    reqs = _reqs(cfg, n=6, max_new=8, seed=5)
+    eng = ServeEngine(packed, cfg, max_len=MAX_LEN, continuous=True,
+                      policy=_pol(n_slots=2, n_blocks=20, degrade=True,
+                                  degrade_queue_depth=1,
+                                  degrade_hysteresis=2))
+    sched = eng.scheduler
+    out = eng.generate(reqs)  # all at step 0: 6 requests through 2 lanes
+    assert len(out) == len(reqs)
+    assert sched.degrade_sheds > 0, "queue pressure never shed a plane"
+    assert sched.degrade_restores > 0, "calm steps never restored"
+    assert sched.degrade_events_total() == (sched.degrade_sheds
+                                            + sched.degrade_restores)
+    # counters by direction match the python-side tallies
+    by_dir = {lbls["direction"]: int(c.value)
+              for lbls, c in sched._c_degrade.children()}
+    assert by_dir.get("shed", 0) == sched.degrade_sheds
+    assert by_dir.get("restore", 0) == sched.degrade_restores
+    _check_replay(eng, cfg, packed, reqs, out)
+    _drained(eng)
+
+
+def test_degrade_floor_clamps_sheds(packed_granite):
+    """Floors hold: with a per-class floor of 4 the loop can shed at most
+    n_bits - 4 planes from the full class, whatever the pressure."""
+    cfg, packed = packed_granite
+    eng = ServeEngine(packed, cfg, max_len=MAX_LEN, continuous=True,
+                      policy=_pol(n_slots=2, n_blocks=20, degrade=True,
+                                  degrade_queue_depth=1,
+                                  precision_floors={"full": 4}))
+    sched = eng.scheduler
+    sched.force_shed = lambda step: 99  # demand far past the ceiling
+    out = eng.generate(_reqs(cfg, n=4, max_new=6, seed=6))
+    assert min(np.concatenate([r.plane_log for r in out]).tolist()) >= 4
+    assert sched.active_planes("full") >= 4
+    _drained(eng)
+
+
+def test_degrade_spec_floor_warns_when_clamped(packed_granite):
+    """With spec decode on, every class's floor is raised to
+    draft_planes + 1; once all tiers sit at their floors, further
+    pressure warns (once) instead of shedding the verify down to the
+    draft's precision."""
+    cfg, packed = packed_granite
+    eng = ServeEngine(packed, cfg, max_len=MAX_LEN, continuous=True,
+                      policy=_pol(spec_decode=True, draft_planes=2,
+                                  gamma=2, degrade=True,
+                                  precision_tiers={"economy": 4}))
+    sched = eng.scheduler
+    # full: 6 -> floor 3 (> draft_planes 2) => ceiling 3
+    assert sched._shed_ceiling == N_BITS - (2 + 1)
+    with pytest.warns(RuntimeWarning, match="draft"):
+        for now in range(sched._shed_ceiling + 2):
+            sched._degrade_tick(queue_len=10, now=now)
+    assert sched._shed == sched._shed_ceiling
+    assert sched.active_planes("full") == 3
+    assert sched.active_planes("economy") == 3
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")  # warn ONCE, not per pressured step
+        sched._degrade_tick(queue_len=10, now=99)
+
+
+def test_spec_decode_with_tiers_verifies_at_effective_planes(packed_granite):
+    """Spec x tiers: the verify runs at the round's effective count (a
+    runtime operand — still 2 compiled spec programs), committed tokens
+    are logged at that count, and with every lane at 'full' and no shed
+    the output is token-identical to the packed oracle."""
+    cfg, packed = packed_granite
+    reqs = _reqs(cfg, n=4, max_new=8, seed=7)
+    ref = {r.uid: r.tokens
+           for r in ServeEngine(packed, cfg, max_len=MAX_LEN).generate(reqs)}
+    eng = ServeEngine(packed, cfg, max_len=MAX_LEN, continuous=True,
+                      policy=_pol(spec_decode=True, draft_planes=2, gamma=3,
+                                  precision_tiers={"economy": 4}))
+    out = eng.generate(reqs, arrival_steps=[0, 0, 1, 2])
+    for r in out:
+        np.testing.assert_array_equal(ref[r.uid], r.tokens)
+        assert (r.plane_log == N_BITS).all()
+    _drained(eng)
+    assert eng.scheduler.compiled_spec_programs() == 2
+    # verify spans carry the plane count they scored at
+    for tr in eng.obs.recorder.traces():
+        for e in tr.events:
+            if e.kind == obs_trace.VERIFY:
+                assert e.attrs["planes"] == N_BITS
+
+
+def test_degrade_preserved_across_preemption(packed_granite):
+    """Tiers x overcommit: a preempted-and-resumed lane stitches its
+    earlier tokens AND their plane counts back into the Result
+    (prior_planes), so the log stays parallel to the tokens."""
+    cfg, packed = packed_granite
+    rng = np.random.default_rng(8)
+    reqs = [Request(uid=i,
+                    tokens=rng.integers(0, cfg.vocab_size, size=10).astype(np.int32),
+                    max_new=11, tier="latency" if i == 0 else "throughput")
+            for i in range(3)]
+    eng = ServeEngine(packed, cfg, max_len=MAX_LEN, continuous=True,
+                      policy=_pol(n_blocks=8, overcommit=2.0, degrade=True))
+    sched = eng.scheduler
+    sched.force_shed = lambda step: (step // 3) % 2
+    out = eng.generate(reqs)
+    assert sched.preemptions_total() > 0, "never preempted"
+    for r in out:
+        assert len(r.plane_log) == len(r.tokens), r.uid
+    _drained(eng)
+
+
+def test_untiered_engine_unchanged(packed_granite):
+    """No tiers, no degrade: zero per-lane plane bookkeeping, no plane
+    metrics families, Result.plane_log is None — the legacy path is
+    byte-for-byte the engine it always was."""
+    cfg, packed = packed_granite
+    eng = ServeEngine(packed, cfg, max_len=MAX_LEN, continuous=True,
+                      policy=_pol())
+    out = eng.generate(_reqs(cfg, n=2, max_new=4, seed=9))
+    assert all(r.plane_log is None for r in out)
+    sched = eng.scheduler
+    assert not sched._tiered
+    assert sched._g_active_planes is None and sched._c_degrade is None
+
+
+def test_telemetry_reset_restores_full_precision(packed_granite):
+    """reset_telemetry() (the bench sweep hook) must zero the degrade
+    state: a new measurement starts from zero shed, not the last run's."""
+    cfg, packed = packed_granite
+    eng = ServeEngine(packed, cfg, max_len=MAX_LEN, continuous=True,
+                      policy=_pol(n_slots=2, n_blocks=20, degrade=True,
+                                  degrade_queue_depth=1))
+    sched = eng.scheduler
+    sched.force_shed = lambda step: 2
+    eng.generate(_reqs(cfg, n=3, max_new=4, seed=10))
+    assert sched._shed > 0
+    sched.force_shed = None
+    sched.reset_telemetry()
+    assert sched._shed == 0 and sched.degrade_events_total() == 0
+    assert sched.active_planes("full") == N_BITS
+
+
+# ---------------------------------------------------------------------------
+# plane-context lifecycle (the ContextVar leak regression)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("ctx,var,value", [
+    (model_common.active_plane_count, model_common._active_planes_var, 3),
+    (model_common.packed_shard_mesh, model_common._packed_mesh_var, "mesh"),
+    (model_common.paged_shard_mesh, model_common._paged_mesh_var, "mesh"),
+])
+def test_plane_context_restored_on_exception(ctx, var, value):
+    """An exception mid-trace must not leak the plane count / mesh into
+    the next trace on the same thread — that would silently serve the
+    wrong precision.  The context managers reset their tokens in a
+    ``finally:``; this pins it."""
+    assert var.get() is None
+    with pytest.raises(RuntimeError, match="boom"):
+        with ctx(value):
+            assert var.get() == value
+            raise RuntimeError("boom")
+    assert var.get() is None, f"{var.name} leaked across a failed trace"
+    # nesting restores the OUTER value, not the default
+    with ctx(value):
+        with pytest.raises(RuntimeError):
+            with ctx(None):
+                raise RuntimeError("inner")
+        assert var.get() == value
+    assert var.get() is None
+
+
+def test_active_plane_count_leak_would_change_precision(packed_granite):
+    """End-to-end shape of the bug the finally guards against: a leaked
+    plane count really does change dense_apply's output — so a leak is
+    wrong *tokens*, not a benign stale variable."""
+    import jax.numpy as jnp
+
+    from repro.core.packing import pack_from_float
+    from repro.models.common import active_plane_count, dense_apply
+
+    rng = np.random.default_rng(0)
+    w = rng.standard_normal((16, 8)).astype(np.float32)
+    pw = pack_from_float(jnp.asarray(w), 6)
+    x = jnp.asarray(rng.standard_normal((2, 16)).astype(np.float32))
+    full = dense_apply(x, pw)
+    with active_plane_count(1):
+        truncated = dense_apply(x, pw)
+    assert not np.allclose(np.asarray(full), np.asarray(truncated))
+    # after the context exits — even via an exception — full precision
+    with pytest.raises(RuntimeError):
+        with active_plane_count(1):
+            raise RuntimeError("mid-trace failure")
+    np.testing.assert_array_equal(np.asarray(dense_apply(x, pw)),
+                                  np.asarray(full))
